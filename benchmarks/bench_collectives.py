@@ -1,0 +1,45 @@
+"""The paper's core thesis quantified: tiered vs flat communication.
+
+The ExaNoDe MCM exists so that high-volume traffic rides fast short links
+(intra-MCM LVDS / interposer) and only aggregated traffic crosses the
+10 Gbps SFP+ tier.  This bench prices a gradient all-reduce three ways on
+both the TPU fabric and the paper's own link numbers:
+
+  flat            every byte crosses the slowest tier
+  hierarchical    reduce-scatter(fast) -> all-reduce shard (slow) -> gather
+  hier + int8     hierarchical with the slow hop quantized (4x fewer bytes)
+
+using the analytic ring model (core/collectives.py) that the roofline
+pricer shares — so this table is the model the dry-run numbers inherit.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import collectives as C
+from repro.core.fabric import exanode_fabric, tpu_v5e_fabric
+
+
+def main():
+    cases = [
+        ("tpu_2pod", tpu_v5e_fabric(multi_pod=True), 256, 2,
+         "ici", "dcn"),
+        ("exanode_mcm", exanode_fabric(), 2, 2, "lvds", "sfp"),
+    ]
+    for nbytes in (1 << 20, 1 << 26, 1 << 30):
+        for name, fab, p_fast, p_slow, fast_t, slow_t in cases:
+            bw_f = fab.tier(fast_t).bandwidth
+            bw_s = fab.tier(slow_t).bandwidth
+            t_flat = C.flat_all_reduce_time(nbytes, p_fast * p_slow, bw_s)
+            t_hier = C.hierarchical_all_reduce_time(
+                nbytes, p_fast, p_slow, bw_f, bw_s)
+            t_hier8 = C.hierarchical_all_reduce_time(
+                nbytes, p_fast, p_slow, bw_f, bw_s, compress_slow=True)
+            emit(f"allreduce_flat_{name}_{nbytes}B", t_flat * 1e6, "")
+            emit(f"allreduce_hier_{name}_{nbytes}B", t_hier * 1e6,
+                 f"speedup_vs_flat={t_flat / t_hier:.1f}x")
+            emit(f"allreduce_hier_int8_{name}_{nbytes}B", t_hier8 * 1e6,
+                 f"speedup_vs_flat={t_flat / t_hier8:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

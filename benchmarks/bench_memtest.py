@@ -1,0 +1,23 @@
+"""Paper analog: DDR memory tests at 1866/2133 MHz (paper §III.b).
+
+Pattern write/read soak + arithmetic checksum + bandwidth probe per
+device, at two sizes (the two-frequency sweep analog)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import memtest
+
+
+def main():
+    for nbytes in (1 << 22, 1 << 24):
+        for r in memtest.run_all_devices(nbytes=nbytes):
+            errs = sum(r.pattern_errors.values())
+            emit(f"memtest_{nbytes}B",
+                 0.0,
+                 f"errors={errs};soak={'ok' if r.soak_ok else 'FAIL'};"
+                 f"write_bw={r.write_bw / 1e9:.2f}GB/s;"
+                 f"read_bw={r.read_bw / 1e9:.2f}GB/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json (written by launch/dryrun.py) and prints the
+three roofline terms per (arch × shape × mesh) plus the dominant
+bottleneck and the MODEL_FLOPS/HLO_FLOPs utilization ratio.  Without
+records it prints nothing but a hint (the dry-run must run first).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import SHAPES, get_config
+from repro.core.roofline import format_rows, roofline_from_record
+from repro.models.api import model_specs
+
+RESULTS = os.environ.get("REPRO_DRYRUN_DIR",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "results", "dryrun"))
+
+
+def load_rows(pattern: str = "*.json"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        try:
+            for rec in json.load(open(f)):
+                if rec.get("status") != "OK" or "hlo" not in rec:
+                    continue
+                cfg = get_config(rec["arch"])
+                shape = SHAPES[rec["shape"]]
+                rows.append(roofline_from_record(
+                    rec, model_specs(cfg), cfg,
+                    shape["seq_len"], shape["global_batch"]))
+        except (json.JSONDecodeError, KeyError):
+            continue
+    return rows
+
+
+def main():
+    rows = load_rows()
+    if not rows:
+        print("# no dry-run records in", RESULTS,
+              "- run scripts/sweep_dryrun.sh first")
+        return
+    for r in rows:
+        emit(f"roofline_{r.arch}_{r.shape}_{r.mesh}",
+             r.bound_s * 1e6,
+             f"dominant={r.dominant};compute_s={r.compute_s:.3e};"
+             f"memory_s={r.memory_s:.3e};collective_s={r.collective_s:.3e};"
+             f"useful={r.useful_ratio:.2f};"
+             f"roofline_frac={r.roofline_fraction:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/make_tables.py > results/tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config            # noqa: E402
+from repro.core.roofline import roofline_from_record    # noqa: E402
+from repro.models.api import model_specs                # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+ARCH_ORDER = ["gemma-2b", "granite-20b", "llama3.2-3b", "qwen3-4b",
+              "whisper-tiny", "jamba-v0.1-52b", "mixtral-8x7b",
+              "qwen3-moe-30b-a3b", "internvl2-26b", "xlstm-125m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        for r in json.load(open(f)):
+            tag = "2pod" if r.get("multi_pod") else "1pod"
+            recs[(r["arch"], r["shape"], tag)] = r
+    return recs
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | status | peak GiB/dev | HLO GFLOP/dev | "
+          "compile s | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for tag in ("1pod", "2pod"):
+                r = recs.get((arch, shape, tag))
+                if r is None:
+                    print(f"| {arch} | {shape} | {tag} | MISSING | | | | |")
+                    continue
+                if r["status"] == "SKIP":
+                    if tag == "1pod":
+                        print(f"| {arch} | {shape} | both | SKIP | | | | "
+                              f"{r['reason'][:60]} |")
+                    continue
+                if r["status"] != "OK":
+                    print(f"| {arch} | {shape} | {tag} | FAIL | | | | "
+                          f"{r.get('error', '')[:60]} |")
+                    continue
+                peak = (r["memory"]["peak_bytes"] or 0) / 2**30
+                gf = r.get("hlo", {}).get("flops", 0) / 1e9
+                print(f"| {arch} | {shape} | {r['mesh']} | OK | "
+                      f"{peak:.2f} | {gf:.0f} | {r['compile_s']} | "
+                      f"{r.get('note', '')[:42]} |")
+
+
+def roofline_table(recs, tag="1pod"):
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| useful | roofline frac | top collective |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    rows = []
+    for arch in ARCH_ORDER:
+        cfg = get_config(arch)
+        specs = model_specs(cfg)
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, tag))
+            if not r or r.get("status") != "OK" or "hlo" not in r:
+                continue
+            sh = SHAPES[shape]
+            row = roofline_from_record(r, specs, cfg, sh["seq_len"],
+                                       sh["global_batch"])
+            top = max(row.breakdown.items(),
+                      key=lambda kv: kv[1]["seconds"])[0] \
+                if row.breakdown else "-"
+            rows.append(row)
+            print(f"| {row.arch} | {row.shape} | {row.compute_s:.3e} | "
+                  f"{row.memory_s:.3e} | {row.collective_s:.3e} | "
+                  f"{row.dominant} | {row.useful_ratio:.2f} | "
+                  f"{row.roofline_fraction:.2f} | {top} |")
+    return rows
+
+
+def main():
+    recs = load()
+    print("## §Dry-run (generated)\n")
+    dryrun_table(recs)
+    print("\n## §Roofline — single-pod 16x16 (generated)\n")
+    rows = roofline_table(recs, "1pod")
+    print("\n## §Roofline — multi-pod 2x16x16 (generated)\n")
+    roofline_table(recs, "2pod")
+    # summary stats
+    if rows:
+        worst = sorted(rows, key=lambda r: r.roofline_fraction)[:5]
+        print("\nWorst roofline fractions (1pod):",
+              [(r.arch, r.shape, round(r.roofline_fraction, 2))
+               for r in worst])
+        coll = sorted(rows, key=lambda r: -(r.collective_s
+                                            / max(r.bound_s, 1e-12)))[:5]
+        print("Most collective-bound:",
+              [(r.arch, r.shape,
+                round(r.collective_s / max(r.bound_s, 1e-12), 2))
+               for r in coll])
+
+
+if __name__ == "__main__":
+    main()

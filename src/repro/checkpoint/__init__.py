@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.serialize import load_pytree, save_pytree

@@ -1,0 +1,55 @@
+"""Architecture config registry.
+
+``get_config(name)`` returns the full published config;
+``get_smoke_config(name)`` a reduced same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "gemma-2b": "gemma_2b",
+    "granite-20b": "granite_20b",
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen3-4b": "qwen3_4b",
+    "whisper-tiny": "whisper_tiny",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "internvl2-26b": "internvl2_26b",
+    "xlstm-125m": "xlstm_125m",
+    "exanode-100m": "exanode_100m",
+}
+
+# (shape name, seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def _module(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[name]}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke()
+
+
+def list_archs():
+    return [a for a in ARCHS if a != "exanode-100m"]
+
+
+def cell_is_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell; else (False, reason)."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 500k dense-KV decode out of scope (DESIGN.md §Arch-applicability)"
+    return True, ""

@@ -1,0 +1,23 @@
+"""exanode-100m — the paper has no model of its own (it is a packaging
+paper); this ~100M-param llama-style config is the demo workload for the
+end-to-end driver (examples/train_100m.py), standing in for "the compute an
+ExaNoDe node exists to run"."""
+from repro.models.common import LayerGroup, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="exanode-100m", family="dense",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+        d_ff=2048, vocab_size=32000,
+        groups=(LayerGroup(("attn",), 12),),
+        mlp_act="silu", rope_theta=10000.0,
+        tie_embeddings=True,
+        attn_mode="sequence",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, groups=(LayerGroup(("attn",), 2),))

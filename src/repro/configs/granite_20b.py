@@ -1,0 +1,21 @@
+"""granite-20b [dense] — 52L d_model=6144 48H (MQA kv=1) d_ff=24576
+vocab=49152, llama-arch code model [arXiv:2405.04324]."""
+from repro.models.common import LayerGroup, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-20b", family="dense",
+        num_layers=52, d_model=6144, num_heads=48, num_kv_heads=1,
+        d_ff=24576, vocab_size=49152,
+        groups=(LayerGroup(("attn",), 52),),
+        mlp_act="gelu", rope_theta=10000.0,
+        tie_embeddings=False,
+        attn_mode="heads",          # 48 % 16 == 0 (MQA KV replicated)
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=256, groups=(LayerGroup(("attn",), 2),))

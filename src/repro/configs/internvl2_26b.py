@@ -1,0 +1,24 @@
+"""internvl2-26b [vlm] — 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92553; InternViT frontend STUBBED (input_specs provides projected
+patch embeddings), InternLM2-20B style backbone [arXiv:2404.16821]."""
+from repro.models.common import LayerGroup, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b", family="vlm",
+        num_layers=48, d_model=6144, num_heads=48, num_kv_heads=8,
+        d_ff=16384, vocab_size=92553,
+        groups=(LayerGroup(("attn",), 48),),
+        mlp_act="silu", rope_theta=1000000.0,
+        frontend="vision_stub", frontend_len=256,
+        tie_embeddings=False,
+        attn_mode="heads",          # 48 % 16 == 0
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, frontend_len=8,
+        groups=(LayerGroup(("attn",), 2),))

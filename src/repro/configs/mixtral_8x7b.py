@@ -1,0 +1,27 @@
+"""mixtral-8x7b [moe] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000, 8 experts top-2, sliding-window attention (4096)
+[arXiv:2401.04088]."""
+from repro.models.common import LayerGroup, ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b", family="moe",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=14336, vocab_size=32000,
+        groups=(LayerGroup(("attn_moe",), 32),),
+        mlp_act="silu", rope_theta=1000000.0,
+        sliding_window=4096,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=14336),
+        tie_embeddings=False,
+        attn_mode="heads",          # 32 % 16 == 0
+        subquadratic=True,          # SWA ring buffer: O(window) decode state
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, sliding_window=16,
+        groups=(LayerGroup(("attn_moe",), 2),),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128))

@@ -1,0 +1,23 @@
+"""qwen3-moe-30b-a3b [moe] — 48L d_model=2048 32H (GQA kv=4) d_ff=768/expert
+vocab=151936, 128 experts top-8, qk_norm [hf:Qwen/Qwen3-30B-A3B]."""
+from repro.models.common import LayerGroup, ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b", family="moe",
+        num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4,
+        head_dim=128, d_ff=768, vocab_size=151936,
+        groups=(LayerGroup(("attn_moe",), 48),),
+        mlp_act="silu", rope_theta=1000000.0, qk_norm=True,
+        moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=768),
+        tie_embeddings=False,
+        attn_mode="heads",          # 32 % 16 == 0
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=256, groups=(LayerGroup(("attn_moe",), 2),),
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=64))

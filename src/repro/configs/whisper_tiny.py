@@ -1,0 +1,32 @@
+"""whisper-tiny [audio] — enc-dec, 4L+4L d_model=384 6H d_ff=1536
+vocab=51865; conv frontend STUBBED (input_specs provides 1500 precomputed
+frame embeddings) [arXiv:2212.04356].
+
+Simplifications vs the published model (documented in DESIGN.md): RMSNorm in
+place of LayerNorm; learned decoder positions sized to the assigned shape
+set (32768) rather than whisper's 448.
+"""
+from repro.models.common import EncoderConfig, LayerGroup, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny", family="audio",
+        num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+        d_ff=1536, vocab_size=51865,
+        groups=(LayerGroup(("attn_cross",), 4),),
+        mlp_act="gelu", use_rope=False, pos_emb="learned",
+        max_position_embeddings=32768,
+        encoder=EncoderConfig(num_layers=4, seq_len=1500),
+        frontend="audio_stub", frontend_len=1500,
+        tie_embeddings=True,
+        attn_mode="sequence",       # 6 heads
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256, max_position_embeddings=64,
+        groups=(LayerGroup(("attn_cross",), 2),),
+        encoder=EncoderConfig(num_layers=2, seq_len=30), frontend_len=30)

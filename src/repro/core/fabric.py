@@ -1,0 +1,113 @@
+"""Tiered-fabric model of the machine — the paper's central object.
+
+The ExaNoDe MCM is a hierarchy of interconnect tiers with very different
+bandwidths: chiplet-on-interposer (fastest), intra-MCM chip-to-chip LVDS,
+inter-MCM 10 Gbps SFP+ serial links, board-level GigE (slowest).  The paper's
+thesis is that an Exascale node must *place* communication onto this
+hierarchy: high-volume traffic on the fast short links, only aggregated
+traffic across the slow tiers.
+
+``Fabric`` is the TPU-native analog: an ordered list of ``Tier``s (fast to
+slow) plus a mapping from mesh-axis name to tier.  Everything downstream —
+the placement planner (core/topology.py), the collective pricer
+(core/roofline.py) and the preflight link tests (core/linktest.py) — reads
+bandwidths from here, so "which tier does this byte cross" is answered in
+exactly one place.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e, per the brief)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per ICI link
+DCN_BW = 25e9                 # bytes/s per chip across the pod boundary
+VMEM_BYTES = 128 * 2 ** 20    # ~128 MiB VMEM per chip (v5e-class)
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB HBM per chip
+
+
+@dataclass(frozen=True)
+class Tier:
+    """One interconnect tier.
+
+    paper analog: chiplet/interposer, LVDS chip-to-chip, SFP+ serial, GigE.
+    """
+
+    name: str
+    bandwidth: float           # bytes/s per chip on this tier
+    latency: float             # seconds per hop
+    scope: str                 # "chip" | "pod" | "cross-pod"
+
+    def time_for(self, nbytes: float) -> float:
+        return self.latency + nbytes / self.bandwidth
+
+
+@dataclass(frozen=True)
+class Fabric:
+    """Ordered tiers (fastest first) + mesh-axis -> tier mapping."""
+
+    name: str
+    tiers: tuple[Tier, ...]
+    axis_tier: dict[str, str] = field(default_factory=dict)
+
+    def tier(self, name: str) -> Tier:
+        for t in self.tiers:
+            if t.name == name:
+                return t
+        raise KeyError(f"no tier {name!r} in fabric {self.name!r}")
+
+    def tier_for_axis(self, axis: str) -> Tier:
+        return self.tier(self.axis_tier[axis])
+
+    def bandwidth_for_axis(self, axis: str) -> float:
+        return self.tier_for_axis(axis).bandwidth
+
+    def slowest_axis(self, axes: Sequence[str]) -> str:
+        """The bottleneck axis among ``axes`` (lowest-bandwidth tier)."""
+        return min(axes, key=lambda a: self.bandwidth_for_axis(a))
+
+    def sorted_axes_fast_first(self, axes: Sequence[str]) -> list[str]:
+        return sorted(axes, key=lambda a: -self.bandwidth_for_axis(a))
+
+
+# ---------------------------------------------------------------------------
+# Concrete fabrics
+# ---------------------------------------------------------------------------
+
+
+def tpu_v5e_fabric(multi_pod: bool = False) -> Fabric:
+    """The production fabric for this repo's meshes.
+
+    Tier mapping (paper -> TPU):
+      chiplet-on-interposer  -> on-chip HBM/VMEM locality (not a mesh axis;
+                                exploited by Pallas kernel tiling)
+      intra-MCM LVDS         -> ICI ('model' axis: TP traffic)
+      intra-board links      -> ICI ('data' axis: DP traffic)
+      inter-MCM SFP+ 10 Gbps -> DCN ('pod' axis: cross-pod traffic)
+    """
+    tiers = (
+        Tier("hbm", HBM_BW, 1e-7, "chip"),
+        Tier("ici", ICI_BW, 1e-6, "pod"),
+        Tier("dcn", DCN_BW, 1e-5, "cross-pod"),
+    )
+    axis_tier = {"model": "ici", "data": "ici"}
+    if multi_pod:
+        axis_tier["pod"] = "dcn"
+    return Fabric("tpu-v5e" + ("-2pod" if multi_pod else ""), tiers, axis_tier)
+
+
+def exanode_fabric() -> Fabric:
+    """The paper's own numbers, for the bench_collectives analysis: LVDS-class
+    chip-to-chip inside the MCM vs 10 Gbps (1.25 GB/s) SFP+ between MCMs."""
+    tiers = (
+        Tier("interposer", 100e9, 5e-9, "chip"),
+        Tier("lvds", 16e9, 1e-7, "pod"),
+        Tier("sfp", 1.25e9, 1e-6, "cross-pod"),
+    )
+    return Fabric("exanode-mcm", tiers,
+                  {"model": "lvds", "data": "lvds", "pod": "sfp"})

@@ -1,0 +1,394 @@
+"""Scan-aware post-SPMD HLO analysis.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE (verified
+empirically on this container), and says nothing about which mesh axis a
+collective crosses.  Both matter here: every model lowers its depth to
+``lax.scan`` (so 95% of the FLOPs live inside a while body), and the
+paper's whole thesis is that bytes-on-the-slow-tier are the quantity to
+engineer down — so the roofline needs collective bytes *per axis*.
+
+This module parses ``compiled.as_text()`` (post-SPMD, per-device program):
+
+* builds the computation graph (entry + nested while bodies + fusions),
+* extracts while trip counts (``known_trip_count`` backend config when
+  present, else the ``compare(iter, constant)`` pattern in the condition),
+* multiplies instruction costs by the product of enclosing trip counts,
+* computes dot FLOPs from operand shapes (2*out_elems*K), resolving
+  operand types through a module-wide name -> type map (XLA's printer
+  does not inline operand shapes),
+* sums memory traffic as output+operand bytes at fusion boundaries only
+  (fusion internals live in registers/VMEM; this is the HBM-traffic proxy,
+  stated as such in EXPERIMENTS.md),
+* attributes every collective's payload to the set of mesh axes its
+  replica groups span (device-id coordinate analysis), so the pricer can
+  put 'model'/'data' traffic on the ICI tier and 'pod' traffic on DCN.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in a type string (sums tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _shape_elems(type_str: str) -> int:
+    dims = _first_shape_dims(type_str)
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclass
+class Instr:
+    name: str
+    out_type: str
+    opcode: str
+    operands: list            # operand %names (in order)
+    attrs: str
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_bytes(self.out_type)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    # rest = "<type> <opcode>(operands)<attrs>"
+    om = re.search(r"\s([\w\-]+)\(", rest)
+    if not om:
+        return None
+    out_type = rest[: om.start()].strip()
+    opcode = om.group(1)
+    # balance parens from om.end()-1
+    depth, i = 0, om.end() - 1
+    start = i + 1
+    while i < len(rest):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    operands_str = rest[start:i]
+    attrs = rest[i + 1:]
+    operands = re.findall(r"%([\w.\-]+)", operands_str)
+    return Instr(name, out_type, opcode, operands, attrs)
+
+
+def parse_hlo(text: str):
+    """-> (computations dict, module-wide name -> out_type map, entry name)"""
+    comps: dict[str, Computation] = {}
+    types: dict[str, str] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        if s.endswith("{") and " -> " in s:
+            # header: "[ENTRY ]%name (args...) -> type {"; the args tuple may
+            # contain /*index=N*/ comments, so match on structure not on '='
+            m = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(", s)
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is None:
+            continue
+        types[ins.name] = ins.out_type
+        if cur is not None:
+            cur.instrs.append(ins)
+    return comps, types, entry
+
+
+# ---------------------------------------------------------------------------
+# Trip counts
+# ---------------------------------------------------------------------------
+
+
+def _trip_count(while_instr: Instr, comps: dict) -> int:
+    m = re.search(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)',
+                  while_instr.attrs)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%?([\w.\-]+)", while_instr.attrs)
+    cond = comps.get(cm.group(1)) if cm else None
+    if cond:
+        # the loop bound is the integer constant compared against the
+        # induction variable in the condition's ROOT compare
+        for ins in reversed(cond.instrs):
+            if ins.opcode == "compare":
+                for opname in ins.operands:
+                    tc = _CONST_VALUES.get(opname)
+                    if tc and tc > 0:
+                        return tc
+    return 1
+
+
+_CONST_VALUES: dict[str, int] = {}
+
+
+def _collect_constants(text: str):
+    """Module-wide map of integer constants: %name -> value."""
+    _CONST_VALUES.clear()
+    for m in re.finditer(
+            r"%?([\w.\-]+)\s*=\s*[su]\d+\[\]\s+constant\((-?\d+)\)", text):
+        _CONST_VALUES[m.group(1)] = int(m.group(2))
+
+
+# ---------------------------------------------------------------------------
+# FLOPs
+# ---------------------------------------------------------------------------
+
+
+def _dot_flops(ins: Instr, types: dict) -> float:
+    """2 * prod(out_dims) * K.  K = product of lhs contracting dims."""
+    out_elems = _shape_elems(ins.out_type)
+    if not ins.operands:
+        return 0.0
+    lhs_type = types.get(ins.operands[0], "")
+    lhs_dims = _first_shape_dims(lhs_type)
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    k = 1
+    if cm and cm.group(1) and lhs_dims:
+        for d in cm.group(1).split(","):
+            if int(d) < len(lhs_dims):
+                k *= lhs_dims[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, types: dict) -> float:
+    out_elems = _shape_elems(ins.out_type)
+    if len(ins.operands) < 2:
+        return 0.0
+    kdims = _first_shape_dims(types.get(ins.operands[1], ""))
+    if not kdims:
+        return 0.0
+    return 2.0 * out_elems * max(1, int(np.prod(kdims[:-1])))
+
+
+# ---------------------------------------------------------------------------
+# Collective axis attribution
+# ---------------------------------------------------------------------------
+
+
+def _axes_of_groups(groups, mesh) -> frozenset:
+    shape = mesh.devices.shape
+    names = mesh.axis_names
+    varying: set[str] = set()
+    for g in groups[: min(len(groups), 8)]:
+        if len(g) < 2:
+            continue
+        coords = np.array([np.unravel_index(d, shape) for d in g])
+        for i, nm in enumerate(names):
+            if len(set(coords[:, i])) > 1:
+                varying.add(nm)
+    return frozenset(varying)
+
+
+def _parse_replica_groups(attrs: str) -> Optional[list]:
+    m = re.search(r"replica_groups=\{((?:\{[0-9,]+\},?)+)\}", attrs)
+    if m:
+        groups = re.findall(r"\{([0-9,]+)\}", m.group(1))
+        return [[int(x) for x in g.split(",")] for g in groups]
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?",
+        attrs)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        reshape = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(reshape)))
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.reshape(reshape).transpose(perm).reshape(-1)
+        return ids.reshape(ng, gs).tolist()
+    return None
+
+
+def _permute_axes(attrs: str, mesh) -> frozenset:
+    m = re.search(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}", attrs)
+    if not m:
+        return frozenset()
+    pairs = re.findall(r"\{(\d+),(\d+)\}", m.group(1))
+    shape = mesh.devices.shape
+    names = mesh.axis_names
+    varying: set[str] = set()
+    for s, t in pairs[:8]:
+        cs = np.unravel_index(int(s), shape)
+        ct = np.unravel_index(int(t), shape)
+        for i, nm in enumerate(names):
+            if cs[i] != ct[i]:
+                varying.add(nm)
+    return frozenset(varying)
+
+
+# ---------------------------------------------------------------------------
+# Main walk
+# ---------------------------------------------------------------------------
+
+
+def _called(ins: Instr) -> list[str]:
+    out = []
+    for key in ("body", "condition", "to_apply", "calls"):
+        for m in re.finditer(key + r"=\{?%?([\w.\-]+)", ins.attrs):
+            out.append(m.group(1))
+    return out
+
+
+def _operand_bytes(ins: Instr, types: dict) -> int:
+    return sum(_shape_bytes(types.get(o, "")) for o in ins.operands)
+
+
+MEM_BOUNDARY_OPS = {
+    "fusion", "dot", "convolution", "copy", "dynamic-update-slice",
+    "dynamic-slice", "transpose", "scatter", "gather", "concatenate",
+    "pad", "slice", "broadcast", "reduce", "sort", "reverse",
+}
+
+
+def _walk(comp_name: str, comps: dict, types: dict, mesh, scale: float,
+          acc: dict, stack: tuple, flops_only: bool = False):
+    comp = comps.get(comp_name)
+    if comp is None or comp_name in stack:
+        return
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op == "while":
+            trips = _trip_count(ins, comps)
+            bm = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+            if bm:
+                _walk(bm.group(1), comps, types, mesh, scale * trips, acc,
+                      stack + (comp_name,), flops_only)
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for c in _called(ins):
+                _walk(c, comps, types, mesh, scale, acc,
+                      stack + (comp_name,), flops_only)
+            continue
+        if op == "fusion":
+            for c in _called(ins):
+                _walk(c, comps, types, mesh, scale, acc,
+                      stack + (comp_name,), flops_only=True)
+            if not flops_only:
+                acc["write_bytes"] += scale * ins.out_bytes
+            continue
+        if op == "dot":
+            acc["flops"] += scale * _dot_flops(ins, types)
+            if not flops_only:
+                acc["write_bytes"] += scale * ins.out_bytes
+            continue
+        if op == "convolution":
+            acc["flops"] += scale * _conv_flops(ins, types)
+            if not flops_only:
+                acc["write_bytes"] += scale * ins.out_bytes
+            continue
+        if op == "parameter" and not flops_only:
+            acc["param_bytes"] += ins.out_bytes   # read once (scale==1 at entry)
+            continue
+        base = op
+        if any(base.startswith(c) for c in COLLECTIVES):
+            kind = next(c for c in COLLECTIVES if base.startswith(c))
+            if kind == "collective-permute":
+                axes = _permute_axes(ins.attrs, mesh)
+            else:
+                groups = _parse_replica_groups(ins.attrs)
+                axes = _axes_of_groups(groups, mesh) if groups else frozenset()
+            payload = max(ins.out_bytes, _operand_bytes(ins, types))
+            key = (kind, ",".join(sorted(axes)) or "intra")
+            acc["collectives"][key]["bytes"] += scale * payload
+            acc["collectives"][key]["count"] += scale
+            continue
+        if not flops_only and op in MEM_BOUNDARY_OPS:
+            acc["write_bytes"] += scale * ins.out_bytes
+
+
+def analyze_compiled(compiled, mesh) -> dict:
+    """Scan-aware per-device cost summary of a compiled executable."""
+    text = compiled.as_text()
+    return analyze_hlo_text(text, mesh)
+
+
+def analyze_hlo_text(text: str, mesh) -> dict:
+    comps, types, entry = parse_hlo(text)
+    _collect_constants(text)
+    if entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    acc = {"flops": 0.0, "write_bytes": 0.0, "param_bytes": 0.0,
+           "collectives": defaultdict(lambda: {"bytes": 0.0, "count": 0.0})}
+    _walk(entry, comps, types, mesh, 1.0, acc, ())
+    # HBM-traffic proxy: every materialized buffer is written once and (on
+    # average) read about once by its consumers, plus the parameters (the
+    # weights) are streamed in once per step.
+    mem = 2.0 * acc["write_bytes"] + acc["param_bytes"]
+    return {
+        "flops": acc["flops"],
+        "mem_bytes": mem,
+        "write_bytes": acc["write_bytes"],
+        "param_bytes": acc["param_bytes"],
+        "collectives": {f"{k[0]}@{k[1]}": dict(v) for k, v in
+                        sorted(acc["collectives"].items())},
+    }
+
+
+def collective_bytes_by_axes(rec: dict) -> dict[str, float]:
+    """Aggregate analyzer output: axes-set string -> total payload bytes."""
+    out: dict[str, float] = defaultdict(float)
+    for key, v in rec["collectives"].items():
+        _, axes = key.split("@", 1)
+        out[axes] += v["bytes"]
+    return dict(out)

@@ -1,0 +1,106 @@
+"""Memory validation — the software analog of the paper's DDR soak tests.
+
+The paper ran "extensive Xilinx memory tests" on the 4 SODIMMs at 1866 and
+2133 MHz before using the boards.  The TPU analog validates each device's
+HBM end-to-end through XLA: pattern write/read-back (0x5A / walking-ones /
+PRBS fill), an arithmetic soak (sum of a known ramp), and a bandwidth probe
+(host-timed copy; meaningful on real hardware, a smoke signal on CPU).
+
+For the *dry-run* ("does the model fit"), the authoritative check is
+``compiled.memory_analysis()`` — see launch/dryrun.py; this module is the
+runtime preflight used by launch/preflight.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PATTERNS = {
+    "x5A": 0x5A5A5A5A,
+    "xA5": 0xA5A5A5A5,
+    "zeros": 0x00000000,
+    "ones": 0xFFFFFFFF,
+}
+
+
+@dataclass
+class MemReport:
+    device: str
+    nbytes: int
+    pattern_errors: dict              # pattern -> error word count
+    soak_ok: bool
+    write_bw: float                   # bytes/s (host-timed probe)
+    read_bw: float
+
+    @property
+    def ok(self) -> bool:
+        return self.soak_ok and all(v == 0 for v in self.pattern_errors.values())
+
+
+def _walking_ones(n_words: int) -> jnp.ndarray:
+    shifts = jnp.arange(n_words, dtype=jnp.uint32) % 32
+    return (jnp.uint32(1) << shifts).astype(jnp.uint32)
+
+
+@jax.jit
+def _verify(buf: jax.Array, expect: jax.Array) -> jax.Array:
+    return jnp.sum((buf != expect).astype(jnp.uint32))
+
+
+def run_mem_test(device=None, nbytes: int = 1 << 24) -> MemReport:
+    """Pattern + soak + bandwidth test of one device's memory."""
+    device = device or jax.devices()[0]
+    n_words = nbytes // 4
+    errors = {}
+
+    for name, word in PATTERNS.items():
+        fill = jnp.full((n_words,), word, jnp.uint32)
+        buf = jax.device_put(fill, device)
+        errors[name] = int(_verify(buf, fill))
+
+    wo = _walking_ones(n_words)
+    buf = jax.device_put(wo, device)
+    errors["walking_ones"] = int(_verify(buf, wo))
+
+    # arithmetic soak: ramp sum has a closed form; catches stuck bits that
+    # happen to read back consistently.  uint32 with wraparound (x64 is off
+    # in production configs), compared mod 2^32.
+    ramp = jnp.arange(n_words, dtype=jnp.uint32)
+    buf = jax.device_put(ramp, device)
+    total = int(jax.jit(jnp.sum)(buf)) & 0xFFFFFFFF
+    soak_ok = total == ((n_words - 1) * n_words // 2) % (1 << 32)
+
+    # bandwidth probe
+    src = np.zeros(n_words, np.uint32)
+    t0 = time.perf_counter()
+    dbuf = jax.device_put(src, device)
+    dbuf.block_until_ready()
+    t1 = time.perf_counter()
+    _ = np.asarray(dbuf)
+    t2 = time.perf_counter()
+
+    return MemReport(
+        device=str(device), nbytes=nbytes, pattern_errors=errors,
+        soak_ok=soak_ok,
+        write_bw=nbytes / max(t1 - t0, 1e-9),
+        read_bw=nbytes / max(t2 - t1, 1e-9))
+
+
+def run_all_devices(nbytes: int = 1 << 22) -> list[MemReport]:
+    return [run_mem_test(d, nbytes) for d in jax.devices()]
+
+
+def format_reports(reports: list[MemReport]) -> str:
+    lines = [f"{'device':28s} {'bytes':>10s} {'errors':>7s} {'soak':>5s} "
+             f"{'write GB/s':>11s} {'read GB/s':>10s}"]
+    for r in reports:
+        err = sum(r.pattern_errors.values())
+        lines.append(
+            f"{r.device:28s} {r.nbytes:10d} {err:7d} "
+            f"{'ok' if r.soak_ok else 'FAIL':>5s} "
+            f"{r.write_bw / 1e9:11.2f} {r.read_bw / 1e9:10.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,230 @@
+"""Roofline terms from the dry-run's compiled artifact.
+
+Per (arch × shape × mesh) cell (constants: TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI, 25 GB/s/chip DCN across pods):
+
+    compute term    = device_FLOPs / PEAK_FLOPS
+    memory term     = device_HBM_bytes / HBM_BW       (fusion-boundary proxy)
+    collective term = Σ_axis wire_bytes(axis) / BW(tier(axis))
+
+Everything is *per device, per step* — the three terms are directly
+comparable wall-time lower bounds; whichever is largest is the bottleneck
+the §Perf loop iterates on.
+
+Wire bytes use ring formulas on the analyzer's payload bytes:
+    all-reduce      2·P·(p-1)/p
+    all-gather /
+    reduce-scatter  P·(p-1)/p      (P = full payload)
+    all-to-all      P·(p-1)/p
+    collective-permute  P          (one hop)
+
+Collectives whose groups span several axes are priced at the *slowest*
+tier they touch (the ExaNoDe rule: a transfer is as fast as its slowest
+link).  With ``grad_sync == hierarchical_int8`` the pod-axis payloads are
+priced at int8 + per-block scale bytes (the wire format proven bit-exact
+in tests/test_compression.py; XLA carries the values in f32).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+from repro.core import compression
+from repro.core.fabric import (DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               Fabric, tpu_v5e_fabric)
+from repro.models.common import ModelConfig, count_params, is_pspec
+
+import jax
+
+
+# ---------------------------------------------------------------------------
+# Model-FLOPs accounting (6·N_active·tokens)
+# ---------------------------------------------------------------------------
+
+
+def param_groups(specs, cfg: ModelConfig) -> dict:
+    """Split the parameter count into embed / expert / other via the
+    logical axes each PSpec declares."""
+    leaves = jax.tree.leaves(specs, is_leaf=is_pspec)
+    embed = expert = other = 0
+    for l in leaves:
+        n = math.prod(l.shape)
+        if "vocab" in l.axes:
+            embed += n
+        elif "experts" in l.axes:
+            expert += n
+        else:
+            other += n
+    return {"embed": embed, "expert": expert, "other": other,
+            "total": embed + expert + other}
+
+
+def model_flops(specs, cfg: ModelConfig, *, tokens: int,
+                kind: str) -> float:
+    """6·N_active·tokens (train) or 2·N_active·tokens (serve).
+
+    N_active = non-embedding params with experts discounted to the top_k
+    activated share, plus the lm_head matmul (V·D counts once even when
+    tied).  Attention score FLOPs are excluded (standard 6ND convention);
+    the HLO/MODEL ratio in the report absorbs them.
+    """
+    g = param_groups(specs, cfg)
+    active_expert = 0.0
+    if cfg.moe and g["expert"]:
+        active_expert = g["expert"] * cfg.moe.top_k / cfg.moe.num_experts
+    n_active = g["other"] + active_expert + cfg.vocab_size * cfg.d_model
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+# ---------------------------------------------------------------------------
+# Collective pricing
+# ---------------------------------------------------------------------------
+
+
+def _axis_set_size(axes_str: str, mesh_axes: dict) -> int:
+    if axes_str in ("", "intra"):
+        return 1
+    p = 1
+    for a in axes_str.split(","):
+        p *= mesh_axes.get(a, 1)
+    return p
+
+
+def _tier_bw(axes_str: str, fabric: Fabric) -> float:
+    """Slowest tier bandwidth among the axes crossed."""
+    if axes_str in ("", "intra"):
+        return ICI_BW
+    bws = []
+    for a in axes_str.split(","):
+        if a in fabric.axis_tier:
+            bws.append(fabric.bandwidth_for_axis(a))
+        else:
+            bws.append(ICI_BW)
+    return min(bws)
+
+
+def _wire_bytes(kind: str, payload: float, p: int) -> float:
+    if p <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * payload * (p - 1) / p
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return payload * (p - 1) / p
+    if kind == "collective-permute":
+        return payload
+    return payload
+
+
+def collective_time(hlo_rec: dict, mesh_axes: dict, fabric: Fabric, *,
+                    int8_pod: bool = False) -> tuple[float, dict]:
+    """(seconds, per-axes breakdown {axes: {bytes, wire_bytes, seconds}})."""
+    breakdown: dict[str, dict] = {}
+    total_s = 0.0
+    for key, v in hlo_rec["collectives"].items():
+        kind, axes = key.split("@", 1)
+        p = _axis_set_size(axes, mesh_axes)
+        payload = v["bytes"]
+        if int8_pod and axes == "pod" and kind == "all-reduce":
+            payload = compression.compressed_bytes(payload)
+        wire = _wire_bytes(kind, payload, p)
+        bw = _tier_bw(axes, fabric)
+        t = wire / bw
+        d = breakdown.setdefault(axes, {"bytes": 0.0, "wire_bytes": 0.0,
+                                        "seconds": 0.0})
+        d["bytes"] += payload
+        d["wire_bytes"] += wire
+        d["seconds"] += t
+        total_s += t
+    return total_s, breakdown
+
+
+# ---------------------------------------------------------------------------
+# The report row
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs × chips)
+    breakdown: dict
+    note: str = ""
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_time / max(all terms): 1.0 = perfectly compute-bound."""
+        b = self.bound_s
+        return self.compute_s / b if b > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "kind": self.kind,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_breakdown": self.breakdown, "note": self.note,
+        }
+
+
+def roofline_from_record(rec: dict, specs, cfg: ModelConfig,
+                         seq_len: int, global_batch: int) -> RooflineRow:
+    """Build the roofline row from one dry-run record (launch/dryrun.py)."""
+    mesh_axes = {}
+    names = ("pod", "data", "model") if rec.get("multi_pod") else ("data", "model")
+    for name, s in zip(names, rec["mesh"].split("x")):
+        mesh_axes[name] = int(s)
+    chips = math.prod(mesh_axes.values())
+    fabric = tpu_v5e_fabric(multi_pod="pod" in mesh_axes)
+    kind = "train" if rec["shape"].startswith("train") else \
+           ("prefill" if rec["shape"].startswith("prefill") else "decode")
+    tokens = global_batch * seq_len if kind in ("train", "prefill") \
+        else global_batch
+
+    hlo = rec["hlo"]
+    compute_s = hlo["flops"] / PEAK_FLOPS_BF16
+    memory_s = hlo["mem_bytes"] / HBM_BW
+    int8 = rec.get("grad_sync") == "hierarchical_int8"
+    coll_s, breakdown = collective_time(hlo, mesh_axes, fabric,
+                                        int8_pod=int8)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(specs, cfg, tokens=tokens, kind=kind)
+    useful = mf / (hlo["flops"] * chips) if hlo["flops"] else 0.0
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], kind=kind,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops=mf,
+        hlo_flops=hlo["flops"] * chips, useful_ratio=useful,
+        breakdown=breakdown, note=rec.get("note", ""))
+
+
+def format_rows(rows: list) -> str:
+    hdr = (f"{'arch':20s} {'shape':12s} {'mesh':10s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'dominant':>10s} {'useful':>7s} {'roofline':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:20s} {r.shape:12s} {r.mesh:10s} "
+            f"{r.compute_s:10.3e} {r.memory_s:10.3e} {r.collective_s:10.3e} "
+            f"{r.dominant:>10s} {r.useful_ratio:7.2f} "
+            f"{r.roofline_fraction:8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,297 @@
+"""Bandwidth-aware placement of parallelism axes onto the fabric.
+
+Paper analog: the MCM design "assigned LVDS and chip-to-chip nets to the
+corresponding and available banks of the FPGA for straightforward
+high-density routing" — i.e. the highest-volume traffic gets the shortest,
+fastest wires.  Here the planner assigns each parallelism *kind* to a mesh
+axis by traffic volume:
+
+  TP / EP  (per-layer, per-microbatch activations)  -> fastest tier (ICI 'model')
+  DP       (per-step gradient all-reduce)           -> mid tier     (ICI 'data')
+  pod-DP   (per-step, aggregated, compressible)     -> slow tier    (DCN 'pod')
+
+``make_plan(cfg, mesh_axes, shape_kind)`` returns a ``Plan`` holding every
+sharding decision in one place: parameter partition rules, activation rules,
+attention mode, MoE regime, KV-cache layout, and gradient-sync strategy.
+The launcher, train step, serve step and dry-run all read from the Plan so
+they can never disagree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.fabric import Fabric, tpu_v5e_fabric
+from repro.models.common import ModelConfig, divides
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Every distribution decision for one (arch × shape × mesh) cell."""
+
+    arch: str
+    mesh_axes: dict                      # axis name -> size (ordered)
+    fabric: Fabric
+    shape_kind: str                      # train | prefill | decode
+    # placement
+    model_axis: Optional[str]            # TP/EP axis (fastest tier)
+    batch_axes: tuple                    # DP axes, fast-to-slow
+    attn_mode: str                       # heads | sequence
+    moe_regime: Optional[str]            # ep | tp | None
+    kv_shard: Optional[str]              # heads | time | None
+    grad_sync: str                       # flat | hierarchical | hierarchical_int8
+    # rules
+    param_rules: dict = field(default_factory=dict)
+    act_rules: dict = field(default_factory=dict)
+    notes: tuple = ()
+
+    @property
+    def pod_axis(self) -> Optional[str]:
+        return "pod" if "pod" in self.mesh_axes else None
+
+    @property
+    def dp_size(self) -> int:
+        out = 1
+        for a in self.batch_axes:
+            out *= self.mesh_axes[a]
+        return out
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh_axes.get(self.model_axis, 1) if self.model_axis else 1
+
+    def with_overrides(self, **kw) -> "Plan":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Decision helpers
+# ---------------------------------------------------------------------------
+
+
+def _pick_attn_mode(cfg: ModelConfig, tp: int) -> str:
+    if cfg.attn_mode != "auto":
+        return cfg.attn_mode
+    return "heads" if divides(cfg.num_heads, tp) else "sequence"
+
+
+def _pick_moe_regime(cfg: ModelConfig, tp: int) -> Optional[str]:
+    if cfg.moe is None:
+        return None
+    e = cfg.moe.num_experts
+    if e >= tp and divides(e, tp):
+        return "ep"            # experts ride the fast tier via all_to_all
+    return "tp"                # slice d_ff inside every expert
+
+
+def _pick_kv_shard(cfg: ModelConfig, tp: int, attn_mode: str) -> Optional[str]:
+    """Decode-time KV cache layout: shard heads when they divide the model
+    axis, otherwise shard time (context-parallel / flash-decode style)."""
+    if divides(cfg.num_kv_heads, tp):
+        return "heads"
+    return "time"
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+
+def make_plan(cfg: ModelConfig, mesh_axes: dict, *, shape_kind: str = "train",
+              grad_sync: str = "flat", fabric: Optional[Fabric] = None,
+              attn_chunk_kv: int = 2048, seq_len: int = 0,
+              ce_chunk: int = 512, sequence_parallel: bool = True,
+              dp_only: bool = False, fsdp: bool = False) -> Plan:
+    """Decide placement for (cfg × mesh).
+
+    mesh_axes: ordered {axis: size}; 'model' is the TP axis, 'data' (+
+    optional 'pod') are DP axes.  ``dp_only=True`` re-purposes the 'model'
+    axis as additional data parallelism (params replicated, optimizer
+    states ZeRO-1 over both intra-pod axes) — the right placement for
+    models that fit on one chip, where TP's per-layer AG/RS traffic
+    dwarfs a once-per-step gradient reduction (the gemma-2b hillclimb).
+    ``fsdp=True`` additionally shards the d_model dim of the weights over
+    'data' (ZeRO-3-style; a hillclimb option, off by default).
+    """
+    fabric = fabric or tpu_v5e_fabric(multi_pod="pod" in mesh_axes)
+    model_axis = "model" if ("model" in mesh_axes and not dp_only) else None
+    tp = mesh_axes.get("model", 1) if not dp_only else 1
+    dp_names = ("pod", "data", "model") if dp_only else ("pod", "data")
+    batch_axes = tuple(a for a in dp_names if a in mesh_axes)
+    notes: list[str] = []
+    if dp_only:
+        notes.append("dp_only: 'model' axis re-purposed as DP; params "
+                     "replicated, opt states ZeRO-1 over (data, model)")
+
+    attn_mode = _pick_attn_mode(cfg, tp)
+    moe_regime = _pick_moe_regime(cfg, tp)
+    kv_shard = _pick_kv_shard(cfg, tp, attn_mode)
+
+    # ---- parameter partition rules (logical axis -> mesh axis) ----------
+    pr: dict[Optional[str], Any] = {
+        "vocab": model_axis,
+        "mlp": model_axis,
+        "ssm_inner": model_axis,
+        "embed": "data" if fsdp else None,
+        "layers": None,
+        "head_dim": None,
+    }
+    if attn_mode == "heads":
+        pr["heads"] = model_axis
+        pr["kv_heads"] = model_axis if divides(cfg.num_kv_heads, tp) else None
+        if pr["kv_heads"] is None:
+            notes.append(
+                f"kv_heads={cfg.num_kv_heads} not divisible by TP={tp}: "
+                "KV weights replicated (GQA repeat shards the q-heads)")
+    else:
+        pr["heads"] = None
+        pr["kv_heads"] = None
+        notes.append("sequence attention: heads replicated, Q seq-sharded")
+    if moe_regime == "ep":
+        pr["experts"] = model_axis
+        pr["expert_mlp"] = None
+    elif moe_regime == "tp":
+        pr["experts"] = None
+        pr["expert_mlp"] = model_axis
+    # whisper/xlstm small-dim guards: never shard a dim the axis out-sizes
+    if cfg.d_ff and model_axis and not divides(cfg.d_ff, tp):
+        notes.append(f"d_ff={cfg.d_ff} not divisible by TP={tp}: XLA pads")
+
+    # ---- activation rules -------------------------------------------------
+    # seq_act: Megatron-SP — the residual stream (and thus every remat-saved
+    # layer boundary) is sharded over the model axis along the sequence dim;
+    # norms/adds run seq-sharded, XLA inserts AG before qkv and RS after the
+    # output projections.  Off for decode (S=1) and when seq doesn't divide.
+    sp = (sequence_parallel and shape_kind in ("train", "prefill")
+          and model_axis is not None
+          and seq_len > 0 and seq_len % max(tp, 1) == 0)
+    ar: dict[str, Any] = {
+        "batch": batch_axes if len(batch_axes) > 1 else
+                 (batch_axes[0] if batch_axes else None),
+        "embed_act": None,
+        "seq_act": model_axis if sp else None,
+        "mlp_act": model_axis,
+        "heads_act": model_axis if attn_mode == "heads" else None,
+        "seq_model": model_axis if attn_mode == "sequence" else None,
+        "vocab_act": model_axis,
+    }
+    if sp:
+        notes.append(f"sequence-parallel residual stream over {model_axis}")
+    if seq_len and attn_chunk_kv and seq_len > attn_chunk_kv and \
+            shape_kind in ("train", "prefill"):
+        ar["attn_chunk_kv"] = attn_chunk_kv
+    if ce_chunk and shape_kind == "train" and seq_len and seq_len > ce_chunk:
+        ar["ce_chunk"] = ce_chunk    # fused chunked lm_head+CE (no [B,S,V])
+    # MoE regime handles for moe_ffn's shard_map
+    if moe_regime:
+        ar["moe_regime"] = moe_regime
+        ar["moe_model_axis"] = model_axis
+        ar["moe_batch_axes"] = batch_axes
+        if shape_kind in ("train", "prefill") and seq_len >= 4096:
+            ar["moe_chunk"] = 2048    # bound [tokens, d_ff] transients
+
+    if grad_sync == "hierarchical_int8" and "pod" not in mesh_axes:
+        grad_sync = "hierarchical"
+        notes.append("no pod axis: int8 cross-pod sync degenerates to "
+                     "hierarchical (ZeRO-1 over the DP axis)")
+
+    return Plan(
+        arch=cfg.name, mesh_axes=dict(mesh_axes), fabric=fabric,
+        shape_kind=shape_kind, model_axis=model_axis, batch_axes=batch_axes,
+        attn_mode=attn_mode, moe_regime=moe_regime, kv_shard=kv_shard,
+        grad_sync=grad_sync, param_rules=pr, act_rules=ar,
+        notes=tuple(notes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Derived specs
+# ---------------------------------------------------------------------------
+
+
+def inner_act_rules(plan: Plan) -> dict:
+    """Activation rules for code running inside a pod-manual region: the pod
+    axis is manual there, so 'batch' maps to the intra-pod DP axes only."""
+    inner = dict(plan.act_rules)
+    ba = tuple(a for a in plan.batch_axes if a != "pod")
+    inner["batch"] = ba if len(ba) > 1 else (ba[0] if ba else None)
+    if "moe_batch_axes" in inner:
+        inner["moe_batch_axes"] = ba
+    return inner
+
+
+def zero1_rules(plan: Plan) -> dict:
+    """Partition rules for optimizer moments: params' rules + the d_model /
+    widest replicated dim additionally sharded over the DP ICI axis
+    (ZeRO-1).  Applied leaf-wise by optim/adamw.py where divisible."""
+    rules = dict(plan.param_rules)
+    if plan.model_axis is None and "model" in plan.mesh_axes:
+        # dp_only: both intra-pod axes carry the ZeRO shards
+        rules["embed"] = rules.get("embed") or ("data", "model")
+        rules["vocab"] = rules.get("vocab")
+        rules["mlp"] = rules.get("mlp")
+    else:
+        rules["embed"] = rules.get("embed") or "data"
+    return rules
+
+
+def batch_pspec(plan: Plan) -> P:
+    """PartitionSpec for a [global_batch, ...] input tensor."""
+    ba = plan.batch_axes
+    return P(ba if len(ba) > 1 else (ba[0] if ba else None))
+
+
+def cache_pspecs(plan: Plan, cfg: ModelConfig) -> dict:
+    """PartitionSpec templates for decode caches.
+
+    Attention cache leaves are [layers, B, T, KV, Dh]; SSM states
+    [layers, B, ...].  KV sharding: 'heads' -> KV dim on model axis;
+    'time' -> T dim on model axis (context-parallel decode).
+    """
+    b = plan.batch_axes
+    b = b if len(b) > 1 else (b[0] if b else None)
+    m = plan.model_axis
+    if plan.kv_shard == "heads":
+        kv = P(None, b, None, m, None)
+    else:
+        kv = P(None, b, m, None, None)
+    return {
+        "k": kv, "v": kv, "pos": P(None, b, m if plan.kv_shard == "time" else None),
+        "xk": kv, "xv": kv,
+        "xpos": P(None, b, m if plan.kv_shard == "time" else None),
+        # ssm states: shard the inner-channel dim (index 2) over model
+        "h": P(None, b, m, None),
+        "conv": P(None, b, None, m),
+        "C": P(None, b, None, None, None),
+        "n": P(None, b, None, None),
+        "m": P(None, b, None),
+        "c": P(None, b, None, None),
+    }
+
+
+def mesh_axes_of(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def describe(plan: Plan) -> str:
+    lines = [
+        f"plan[{plan.arch} / {plan.shape_kind}] mesh={plan.mesh_axes}",
+        f"  TP axis   : {plan.model_axis} (size {plan.tp_size}) on "
+        f"{plan.fabric.axis_tier.get(plan.model_axis, '-')}",
+        f"  DP axes   : {plan.batch_axes} (size {plan.dp_size})",
+        f"  attention : {plan.attn_mode}; kv cache: {plan.kv_shard}",
+        f"  moe       : {plan.moe_regime}",
+        f"  grad sync : {plan.grad_sync}",
+    ]
+    for n in plan.notes:
+        lines.append(f"  note      : {n}")
+    return "\n".join(lines)

@@ -1,0 +1,3 @@
+from repro.ft.elastic import best_mesh_shape, plan_remesh
+from repro.ft.health import DeviceHealth, check_devices
+from repro.ft.straggler import StragglerMonitor

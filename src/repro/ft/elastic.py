@@ -1,0 +1,91 @@
+"""Elastic re-meshing: keep training when devices disappear.
+
+The recovery contract (matched to how the checkpoint layer works):
+
+  1. health/straggler flags a bad host -> its devices leave the pool,
+  2. ``best_mesh_shape`` picks the largest (data × model) grid the
+     survivors support, shrinking the *data* axis first (TP size is tied
+     to weight-sharding divisibility; DP is elastic by construction),
+  3. ``plan_remesh`` rebuilds the Plan for the new mesh and scales the
+     per-step token budget (global batch stays fixed by bumping gradient-
+     accumulation microbatches — synchronous semantics are preserved, so
+     the loss curve is unchanged modulo data order),
+  4. the train state is restored from the last checkpoint with the new
+     shardings (serialize.load_pytree reshards on device_put).
+
+The expensive part on a real cluster — re-establishing the jax.distributed
+coordination service over the survivors — is a runtime concern the
+single-host container cannot exercise; everything after that handshake is
+exactly this module and is tested in tests/test_ft.py.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+
+from repro.core.topology import Plan, make_plan
+from repro.models.common import ModelConfig
+
+
+@dataclass
+class RemeshDecision:
+    mesh_shape: tuple
+    axis_names: tuple
+    microbatches: int
+    dropped: int
+    note: str
+
+
+def best_mesh_shape(n_devices: int, *, model_size: int,
+                    prefer_pods: int = 1) -> tuple:
+    """Largest (pod, data, model) grid with the given TP size.
+
+    TP ('model') is preserved — weight-shard divisibility ties the model
+    axis to the architecture; the survivors' count is absorbed by DP.
+    """
+    assert n_devices >= model_size, (n_devices, model_size)
+    usable = (n_devices // model_size) * model_size
+    data = usable // model_size
+    pods = prefer_pods if prefer_pods > 1 and data % prefer_pods == 0 else 1
+    if pods > 1:
+        return (pods, data // pods, model_size)
+    return (data, model_size)
+
+
+def plan_remesh(cfg: ModelConfig, *, old_plan: Plan, n_surviving: int,
+                global_batch: int, seq_len: int,
+                old_microbatches: int = 1) -> RemeshDecision:
+    """Decide the post-failure mesh + grad-accum factor.
+
+    Keeps the global batch (synchronous data parallelism preserved): when
+    DP shrinks from d0 to d1, microbatches scale by ceil(d0/d1) so the
+    per-device microbatch size is unchanged.
+    """
+    tp = old_plan.tp_size
+    old_dp = old_plan.dp_size
+    pods = old_plan.mesh_axes.get("pod", 1)
+    shape = best_mesh_shape(n_surviving, model_size=tp, prefer_pods=pods)
+    names = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    new_dp = math.prod(shape) // tp
+    scale = -(-old_dp // new_dp)        # ceil
+    micro = old_microbatches * scale
+    # the global batch must still split
+    assert global_batch % (new_dp * micro) == 0 or \
+        global_batch % new_dp == 0, (global_batch, new_dp, micro)
+    dropped = old_dp * tp * (1 if pods == 1 else 1) - math.prod(shape)
+    return RemeshDecision(
+        mesh_shape=shape, axis_names=names, microbatches=micro,
+        dropped=max(0, old_dp * tp - math.prod(shape)),
+        note=f"DP {old_dp}->{new_dp}, grad-accum x{scale} "
+             f"(global batch {global_batch} preserved)")
+
+
+def make_elastic_mesh(decision: RemeshDecision, devices=None):
+    devices = devices or jax.devices()
+    n = math.prod(decision.mesh_shape)
+    import numpy as np
+    grid = np.array(devices[:n]).reshape(decision.mesh_shape)
+    return jax.sharding.Mesh(grid, decision.axis_names)

@@ -1,0 +1,77 @@
+"""Straggler detection over step times.
+
+At pod scale the common failure mode is not a dead chip but a *slow* one
+(thermal throttling, a flaky ICI link retraining, a host stealing cycles).
+``StragglerMonitor`` keeps a rolling window of per-step wall times (and,
+on multi-host, per-host contributions) and flags sustained outliers
+against the rolling median.  The escalation policy mirrors production
+practice: warn -> recommend re-mesh (drop the slow host via ft/elastic) ->
+recommend abort-and-restore.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class StragglerReport:
+    step: int
+    step_time: float
+    median: float
+    ratio: float
+    action: str            # ok | warn | remesh | abort
+
+
+class StragglerMonitor:
+    def __init__(self, *, window: int = 50, warn_ratio: float = 1.5,
+                 remesh_ratio: float = 2.5, abort_ratio: float = 5.0,
+                 sustained: int = 3):
+        self.times: deque = deque(maxlen=window)
+        self.warn_ratio = warn_ratio
+        self.remesh_ratio = remesh_ratio
+        self.abort_ratio = abort_ratio
+        self.sustained = sustained
+        self._over = 0
+        self._t0: Optional[float] = None
+        self.history: list[StragglerReport] = []
+
+    # -- timing hooks --------------------------------------------------------
+
+    def step_start(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self, step: int) -> StragglerReport:
+        assert self._t0 is not None, "step_start not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        return self.observe(step, dt)
+
+    # -- core ------------------------------------------------------------------
+
+    def observe(self, step: int, step_time: float) -> StragglerReport:
+        med = statistics.median(self.times) if self.times else step_time
+        ratio = step_time / max(med, 1e-9)
+        # only steady-state samples pollute the window (skip compile steps)
+        if ratio < self.warn_ratio or not self.times:
+            self.times.append(step_time)
+
+        if ratio >= self.warn_ratio:
+            self._over += 1
+        else:
+            self._over = 0
+
+        action = "ok"
+        if self._over >= self.sustained:
+            if ratio >= self.abort_ratio:
+                action = "abort"
+            elif ratio >= self.remesh_ratio:
+                action = "remesh"
+            else:
+                action = "warn"
+        rep = StragglerReport(step, step_time, med, ratio, action)
+        self.history.append(rep)
+        return rep

@@ -1,0 +1,107 @@
+"""Single-token decode attention (flash-decode) as a Pallas TPU kernel.
+
+One new token attends to a [T]-long KV cache.  The grid is
+(batch, kv-head, kv-block); the kv-block axis is the *minor* grid dim, so
+TPU executes it sequentially per (b,h) and the online-softmax state
+(m, l, acc) lives in VMEM scratch across those steps — the kernel never
+materializes the [T] score vector in HBM.  GQA is handled by blocking all
+G = H/KV q-heads of a kv-head into one [G, D] tile (they share the same
+K/V stream, so the MXU sees a [G,D]x[D,bk] matmul instead of G vector
+products — the decode-bandwidth win TPUs need).
+
+Ring-buffer caches (SWA) work unchanged: masking is positional
+(``kv_pos`` carries absolute positions, -1 = empty slot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BK = 512
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, bk: int, scale: float,
+                   window: int):
+    """Grid (B, KV, T//bk).  q_ref [G,D]; k_ref/v_ref [bk,D];
+    kvp_ref [bk]; pos_ref [1] (scalar prefetch); scratch m/l [G], acc [G,D].
+    """
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale          # [G,D]
+    kb = k_ref[...].astype(jnp.float32)                 # [bk,D]
+    vb = v_ref[...].astype(jnp.float32)
+    kv_pos = kvp_ref[...]                               # [bk]
+    pos = pos_ref[0]
+
+    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())))  # [G,bk]
+    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    if window > 0:
+        valid &= kv_pos > (pos - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())))
+
+    @pl.when(j == nk - 1)
+    def _emit():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_pos: jax.Array, pos: jax.Array, *,
+                     window: int = 0, bk: int = DEFAULT_BK,
+                     interpret: bool = True) -> jax.Array:
+    """q [B,H,D]; k/v [B,T,KV,D] (grouped heads); kv_pos [B,T] int32;
+    pos [B] int32 -> [B,H,D]."""
+    B, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bk = min(bk, T)
+    assert T % bk == 0, (T, bk)
+    scale = D ** -0.5
+
+    qg = q.reshape(B, KV, G, D)
+    kernel = functools.partial(_decode_kernel, bk=bk, scale=scale,
+                               window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, T // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),               # pos
+            pl.BlockSpec((None, None, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, bk, None, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((None, bk, None, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((None, bk), lambda b, h, j: (b, j)),        # kv_pos
+        ],
+        out_specs=pl.BlockSpec((None, None, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, qg, k, v, kv_pos)
+    return out.reshape(B, H, D)

@@ -1,0 +1,107 @@
+"""Flash attention (training/prefill) as a Pallas TPU kernel.
+
+TPU adaptation of the standard flash blocking: the [S,T] score matrix never
+leaves VMEM — the grid walks (batch, head, q-block) and an inner
+``fori_loop`` streams K/V blocks through the MXU with an online softmax.
+Causal masking skips whole KV blocks past the diagonal (the loop bound is
+dynamic in the q-block index), which halves the FLOPs of a causal prefill
+exactly like the chunked-jnp reference (models/attention.py) does at the
+XLA level — but here the blocking is explicit VMEM tiling rather than a
+compiler hint.
+
+Block shapes: q rows BQ=256 (MXU-aligned: multiples of 128 for f32/bf16
+tiles), KV block BK=512.  VMEM claim per grid step ≈
+BQ·D + 2·T_BLOCK·D + BQ·BK (scores) floats — sized for D ≤ 256.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 512
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                 scale: float, causal: bool, window: int):
+    """One (b, h, q-block) step.  q_ref [bq,d]; k_ref/v_ref [T,d] (HBM-to-
+    VMEM streamed in bk slices); o_ref [bq,d]."""
+    iq = pl.program_id(2)
+    T = k_ref.shape[0]
+    d = q_ref.shape[-1]
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_pos = iq * bq + jax.lax.iota(jnp.int32, bq)
+
+    nkv = T // bk
+    if causal:
+        # only blocks whose first row index <= last q position
+        last_q = (iq + 1) * bq - 1
+        nkv = jnp.minimum(nkv, (last_q // bk) + 1)
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = k_ref[pl.ds(j * bk, bk), :].astype(jnp.float32)
+        vb = v_ref[pl.ds(j * bk, bk), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())))  # [bq,bk]
+        kv_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = kv_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nkv, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = True) -> jax.Array:
+    """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D].
+
+    ``window > 0`` = sliding-window attention (mixtral).  On this container
+    ``interpret=True`` runs the kernel body on CPU; on TPU pass False.
+    """
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    scale = D ** -0.5
+
+    grid = (B, H, S // bq)
+    kernel = functools.partial(_attn_kernel, bq=bq, bk=bk, scale=scale,
+                               causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, bq, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, bq, D),
+                               lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

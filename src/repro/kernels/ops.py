@@ -1,0 +1,61 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only (the
+brief's validation mode); the launchers flip it to False on real TPUs via
+``set_interpret_mode``.  Every op has a pure-jnp oracle in ref.py and a
+sweep test in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_ffn as _ffn
+from repro.kernels import mlstm_scan as _ml
+from repro.kernels import quant as _q
+from repro.kernels import ssm_scan as _ssm
+
+_INTERPRET = True
+
+
+def set_interpret_mode(on: bool):
+    """False on real TPU hardware; True (default) on CPU."""
+    global _INTERPRET
+    _INTERPRET = on
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window, **kw)
+
+
+def decode_attention(q, k, v, kv_pos, pos, *, window=0, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _da.decode_attention(q, k, v, kv_pos, pos, window=window, **kw)
+
+
+def mlstm_scan(q, k, v, i_gate, f_log, *, chunk=256, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _ml.mlstm_scan(q, k, v, i_gate, f_log, chunk=chunk, **kw)
+
+
+def ssm_chunk_scan(dt, B_ssm, C_ssm, x, A, *, chunk=256, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _ssm.ssm_chunk_scan(dt, B_ssm, C_ssm, x, A, chunk=chunk, **kw)
+
+
+def quantize_int8(x, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _q.quantize_int8(x, **kw)
+
+
+def dequantize_int8(q, scale, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _q.dequantize_int8(q, scale, **kw)
+
+
+def swiglu_ffn(x, w_gate, w_up, w_down, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return _ffn.swiglu_ffn(x, w_gate, w_up, w_down, **kw)

@@ -1,0 +1,69 @@
+"""int8 block quantization as a Pallas TPU kernel.
+
+The wire format of the compressed cross-pod gradient sync
+(core/compression.py): payloads are flattened into blocks of 256 values
+with one f32 max-abs scale per block.  The kernel tiles rows of blocks
+through VMEM; quantize and dequantize are separate kernels so the wire
+format (int8 + scales) is a real boundary, exactly what crosses the slow
+tier in the paper's terms.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+ROWS = 64          # quantization blocks per grid step
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)               # [ROWS, BLOCK]
+    scale = jnp.max(jnp.abs(x), axis=1) / 127.0      # [ROWS]
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rows", "interpret"))
+def quantize_int8(x: jax.Array, *, block: int = BLOCK, rows: int = ROWS,
+                  interpret: bool = True):
+    """x [n_blocks, block] f32 -> (q int8 same shape, scale [n_blocks])."""
+    nb = x.shape[0]
+    rows = min(rows, nb)
+    assert nb % rows == 0 and x.shape[1] == block
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                   pl.BlockSpec((rows,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
+                   jax.ShapeDtypeStruct((nb,), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def dequantize_int8(q: jax.Array, scale: jax.Array, *, rows: int = ROWS,
+                    interpret: bool = True) -> jax.Array:
+    nb, block = q.shape
+    rows = min(rows, nb)
+    assert nb % rows == 0
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                  pl.BlockSpec((rows,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each ``ref_*`` implements the same contract as its kernel with plain
+jnp ops (no blocking, no pallas) — the tests sweep shapes/dtypes and
+``assert_allclose`` kernel vs oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k, v, *, causal=True, window=0):
+    """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D]."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    scale = D ** -0.5
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qp = jnp.arange(S)[:, None]
+        kp = jnp.arange(T)[None, :]
+        mask = kp <= qp
+        if window > 0:
+            mask &= kp > (qp - window)
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def ref_decode_attention(q, k, v, kv_pos, pos, *, window=0):
+    """q [B,H,D]; k/v [B,T,H,D]; kv_pos [B,T] (-1 = empty); pos [B].
+    -> [B,H,D]."""
+    D = q.shape[-1]
+    scale = D ** -0.5
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window > 0:
+        valid &= kv_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def ref_swiglu_ffn(x, w_gate, w_up, w_down):
+    """x [N,D]; w_gate/w_up [D,F]; w_down [F,D] -> [N,D]."""
+    g = x.astype(jnp.float32) @ w_gate.astype(jnp.float32)
+    u = x.astype(jnp.float32) @ w_up.astype(jnp.float32)
+    h = jax.nn.silu(g) * u
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def ref_quantize_int8(x, block=256):
+    """x [N] f32 -> (q [N/block, block] i8, scale [N/block] f32)."""
+    blocks = x.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127) \
+        .astype(jnp.int8)
+    return q, scale
+
+
+def ref_mamba_chunk_scan(a, b, C):
+    """Diagonal SSM scan.  a,b [B,S,E,N]; C [B,S,N] -> y [B,S,E], h_final.
+
+    h_t = a_t * h_{t-1} + b_t;  y_t = C_t · h_t  (sum over N)."""
+    B, S, E, N = a.shape
+
+    def step(h, inp):
+        at, bt, ct = inp
+        h = at * h + bt
+        return h, jnp.einsum("bn,ben->be", ct, h)
+
+    h0 = jnp.zeros((B, E, N), jnp.float32)
+    h, ys = jax.lax.scan(
+        step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1), C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h
+
+
+def ref_mlstm_chunk(q, k, v, i_gate, f_log, C0, n0, m0):
+    """Sequential mLSTM over one chunk (k pre-scaled).  Mirrors
+    models/ssm.py::_mlstm_cell."""
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, it, ft = t
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * jnp.einsum(
+            "bhv,bhk->bhvk", vt, kt)
+        n = f_[..., None] * n + i_[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        return (C, n, m_new), num / den[..., None]
+
+    xs = tuple(t.swapaxes(0, 1) for t in (q, k, v, i_gate, f_log))
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    return ys.swapaxes(0, 1), (C, n, m)

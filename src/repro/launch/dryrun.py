@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) lowers, compiles,
+fits and is sharding-coherent — the software analog of the paper's
+pre-deployment screening (warpage/x-ray/IBERT before any application runs).
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)
+                      .lower(*input_specs)
+        compiled = lowered.compile()
+        memory_analysis()  -> does it fit (bytes per device)
+        cost_analysis()    -> FLOPs/bytes for the roofline table
+plus the scan-aware HLO analysis (core/hlo_analysis.py) that extracts
+trip-count-corrected FLOPs and per-axis collective bytes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+        --shape train_4k [--multi-pod] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, cell_is_applicable, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, shardings_of
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             grad_sync: str = "hierarchical", verbose: bool = True,
+             analyze: bool = True, **cell_kw) -> dict:
+    """Lower + compile one cell; returns the result record."""
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "multi_pod": multi_pod, "grad_sync": grad_sync}
+
+    cfg = get_config(arch)
+    ok, reason = cell_is_applicable(cfg, shape_name)
+    if not ok:
+        rec.update(status="SKIP", reason=reason)
+        return rec
+
+    cell = build_cell(arch, shape_name, mesh, grad_sync=grad_sync, **cell_kw)
+    rec["note"] = cell.note
+    rec["plan_notes"] = list(cell.plan.notes)
+
+    with mesh:
+        # train donates the state (in-place update on real hardware);
+        # decode donates the KV caches
+        donate = (0,) if cell.kind == "train" else \
+                 ((2,) if cell.kind == "decode" else ())
+        jitted = jax.jit(cell.step_fn,
+                         in_shardings=shardings_of(cell.in_pspecs, mesh),
+                         out_shardings=shardings_of(cell.out_pspecs, mesh),
+                         donate_argnums=donate)
+        lowered = jitted.lower(*cell.abstract_args)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rec.update(
+        status="OK",
+        lower_s=round(t_lower - t0, 1),
+        compile_s=round(t_compile - t_lower, 1),
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        cost={
+            "flops": cost.get("flops", 0.0) if cost else None,
+            "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else None,
+        },
+    )
+
+    if analyze:
+        from repro.core.hlo_analysis import analyze_compiled
+        rec["hlo"] = analyze_compiled(compiled, mesh)
+
+    if verbose:
+        m = rec["memory"]
+        peak_gib = (m["peak_bytes"] or 0) / 2**30
+        print(f"[dryrun] {arch:20s} {shape_name:12s} "
+              f"mesh={rec['mesh']:10s} OK "
+              f"peak/device={peak_gib:7.2f} GiB "
+              f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+              f"({cell.note})", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-sync", default="hierarchical",
+                    choices=["flat", "hierarchical", "hierarchical_int8"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--dp-only", action="store_true",
+                    help="re-purpose the model axis as DP (hillclimb lever "
+                         "for single-chip-sized models)")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel residual stream")
+    ap.add_argument("--json", default=None, help="write records here")
+    ap.add_argument("--no-analyze", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    records, failed = [], []
+    for arch, shape in cells:
+        try:
+            extra = {}
+            if args.dp_only:
+                extra["dp_only"] = True
+            if args.no_sp:
+                extra["sequence_parallel"] = False
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           grad_sync=args.grad_sync,
+                           microbatches=args.microbatches,
+                           remat=args.remat,
+                           analyze=not args.no_analyze,
+                           extra_plan_kw=extra or None)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}"}
+            failed.append((arch, shape))
+        if rec.get("status") == "SKIP":
+            print(f"[dryrun] {arch:20s} {shape:12s} SKIP ({rec['reason']})",
+                  flush=True)
+        records.append(rec)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[dryrun] wrote {len(records)} records to {args.json}")
+
+    n_ok = sum(r.get("status") == "OK" for r in records)
+    n_skip = sum(r.get("status") == "SKIP" for r in records)
+    print(f"[dryrun] {n_ok} OK, {n_skip} SKIP, {len(failed)} FAIL")
+    if failed:
+        print("[dryrun] FAILED CELLS:", failed)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (jax locks the device count on first backend init; the dry-run must
+set XLA_FLAGS before that happens).
+
+The production topology (per the brief): one pod = 16 x 16 = 256 chips
+("data" x "model"); multi-pod = 2 pods = 512 chips with a leading "pod"
+axis mapped to the slow (DCN) tier — the ExaNoDe analog of one MCM's
+chip-to-chip LVDS mesh vs the 10 Gbps SFP+ links between MCMs.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(*, multi_pod: bool = False):
+    """8-device mesh for CPU integration tests (2x2x2 or 2x4)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,82 @@
+"""Staged preflight — the paper's bring-up sequence in software.
+
+The ExaNoDe boards went through JTAG bring-up -> DDR memory tests (1866 /
+2133 MHz) -> IBERT PRBS-31 link tests before any application was loaded.
+The launcher mirrors that order before entering the training loop:
+
+    1. device health  (ft/health.py — proof-of-work per device)
+    2. memory soak    (core/memtest.py — pattern write/read + ramp sum)
+    3. link test      (core/linktest.py — PRBS-31 through every mesh axis)
+    4. smoke step     (one tiny train step on the real mesh: the "program
+                       the FPGAs and blink an LED" stage)
+
+``run_preflight`` returns a report; the launcher refuses to start on any
+failure, exactly like a board that fails IBERT never ships.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linktest, memtest
+from repro.ft import health
+
+
+@dataclass
+class PreflightReport:
+    stages: dict = field(default_factory=dict)   # name -> (ok, detail)
+    elapsed_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return all(ok for ok, _ in self.stages.values())
+
+    def summary(self) -> str:
+        lines = [f"preflight: {'PASS' if self.ok else 'FAIL'} "
+                 f"({self.elapsed_s:.1f}s)"]
+        for name, (ok, detail) in self.stages.items():
+            lines.append(f"  [{'ok' if ok else 'FAIL'}] {name}: {detail}")
+        return "\n".join(lines)
+
+
+def run_preflight(mesh, *, mem_bytes: int = 1 << 22,
+                  link_payload: int = 1 << 14,
+                  smoke_step=None, smoke_args=()) -> PreflightReport:
+    rep = PreflightReport()
+    t0 = time.time()
+
+    # 1. device health
+    hs = health.check_devices(list(mesh.devices.flat)[:8])  # sample hosts
+    rep.stages["device-health"] = (
+        health.all_healthy(hs),
+        f"{sum(h.ok for h in hs)}/{len(hs)} devices pass proof-of-work")
+
+    # 2. memory soak (paper: DDR tests on all SODIMMs)
+    ms = memtest.run_mem_test(nbytes=mem_bytes)
+    rep.stages["memtest"] = (
+        ms.ok, f"{mem_bytes} bytes, patterns+soak "
+               f"{'clean' if ms.ok else 'ERRORS'}")
+
+    # 3. PRBS link test (paper: IBERT at 10 Gbps, PRBS-31)
+    try:
+        links = linktest.run_link_test(mesh, payload_bytes=link_payload)
+        rep.stages["linktest"] = (
+            all(l.ok for l in links),
+            "; ".join(f"{l.axis}: {l.bit_errors} bit-errors" for l in links))
+    except Exception as e:  # noqa: BLE001
+        rep.stages["linktest"] = (False, repr(e))
+
+    # 4. smoke step
+    if smoke_step is not None:
+        try:
+            out = smoke_step(*smoke_args)
+            jax.block_until_ready(out)
+            rep.stages["smoke-step"] = (True, "one step completed")
+        except Exception as e:  # noqa: BLE001
+            rep.stages["smoke-step"] = (False, repr(e))
+
+    rep.elapsed_s = time.time() - t0
+    return rep

@@ -1,0 +1,76 @@
+"""Serving launcher: preflight -> engine -> batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch exanode-100m \
+        --smoke --requests 8 --max-new 16 [--mesh 2x4]
+
+Runs the continuous-batching engine (serve/engine.py) over synthetic
+prompts and reports throughput/latency percentiles — the serving-side
+end-to-end driver.
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.topology import make_plan, mesh_axes_of
+from repro.launch import preflight as pf
+from repro.launch.train import make_mesh_from_arg
+from repro.models.api import model_specs
+from repro.models.common import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="exanode-100m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--no-preflight", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_mesh_from_arg(args.mesh) if args.mesh else None
+    axes = mesh_axes_of(mesh) if mesh else {}
+    plan = make_plan(cfg, axes, shape_kind="decode", seq_len=args.capacity)
+
+    if mesh and not args.no_preflight:
+        with mesh:
+            rep = pf.run_preflight(mesh)
+            print(rep.summary(), flush=True)
+            if not rep.ok:
+                raise SystemExit("preflight failed")
+
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, plan, mesh, params, num_slots=args.slots,
+                      capacity=args.capacity)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=args.prompt_len,
+                                dtype=np.int32),
+            max_new_tokens=args.max_new))
+    stats = eng.run_to_completion()
+    print("engine:", stats.summary)
+
+    # latency percentiles over finished requests
+    lat = sorted(r.finished_at - r.submitted_at for r in eng.finished)
+    ttft = sorted(r.first_token_at - r.submitted_at for r in eng.finished)
+    if lat:
+        pick = lambda xs, q: xs[min(len(xs) - 1, int(q * len(xs)))]
+        print(f"latency  p50={pick(lat, .5):.3f}s p95={pick(lat, .95):.3f}s")
+        print(f"ttft     p50={pick(ttft, .5):.3f}s p95={pick(ttft, .95):.3f}s")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

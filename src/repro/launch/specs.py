@@ -1,0 +1,238 @@
+"""Abstract input specs + shardings for every (arch × shape) cell.
+
+``build_cell(arch, shape_name, mesh)`` returns everything the dry-run (and
+the real launcher) needs to lower one cell:
+
+    CellSpec(step_fn, abstract_args, in_shardings, out_shardings, plan, cfg)
+
+All stand-ins are ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable,
+zero allocation.  The same builders feed the real launchers with concrete
+arrays, so the dry-run and production paths cannot drift.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, cell_is_applicable, get_config
+from repro.core.topology import (Plan, batch_pspec, cache_pspecs, make_plan,
+                                 mesh_axes_of)
+from repro.models.api import model_specs
+from repro.models.common import ModelConfig, abstract_params
+from repro.serve import kvcache
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train.state import abstract_train_state, train_state_pspecs
+from repro.train.steps import make_train_step
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape_name: str
+    kind: str                       # train | prefill | decode
+    step_fn: Callable
+    abstract_args: tuple
+    in_pspecs: tuple                # PartitionSpec pytrees (mirror args)
+    out_pspecs: Any                 # PartitionSpec pytrees (or None = auto)
+    plan: Plan
+    cfg: ModelConfig
+    note: str = ""
+
+
+# per-cell execution overrides: (arch, shape) -> dict
+#   microbatches: gradient-accumulation splits (memory)
+#   remat: activation-checkpoint policy for the full-size config
+# Derived from the dry-run memory sweep (EXPERIMENTS.md §Dry-run): cells
+# whose baseline peak exceeded 16 GiB/device get gradient accumulation.
+CELL_OVERRIDES: dict = {
+    ("llama3.2-3b", "train_4k"): {"microbatches": 2},
+    ("qwen3-4b", "train_4k"): {"microbatches": 2},
+    ("granite-20b", "train_4k"): {"microbatches": 8},
+    ("internvl2-26b", "train_4k"): {"microbatches": 8},
+    ("mixtral-8x7b", "train_4k"): {"microbatches": 8},
+    ("qwen3-moe-30b-a3b", "train_4k"): {"microbatches": 8},
+    ("jamba-v0.1-52b", "train_4k"): {"microbatches": 16},
+    ("xlstm-125m", "train_4k"): {"microbatches": 4},
+}
+
+
+def _batch_specs(cfg: ModelConfig, seq_len: int, batch: int,
+                 kind: str) -> dict:
+    """Abstract host batch for train/prefill."""
+    S = seq_len
+    d = {}
+    if cfg.encoder:                              # audio: frontend is stubbed
+        d["audio_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.float32)
+        d["tokens"] = jax.ShapeDtypeStruct((batch, S), jnp.int32)
+    elif cfg.frontend:                           # vlm: patch embeds prepended
+        S_tok = max(S - cfg.frontend_len, 1)
+        d["extra_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.d_model), jnp.float32)
+        d["tokens"] = jax.ShapeDtypeStruct((batch, S_tok), jnp.int32)
+    else:
+        d["tokens"] = jax.ShapeDtypeStruct((batch, S), jnp.int32)
+    if kind == "train":
+        d["labels"] = jax.ShapeDtypeStruct(d["tokens"].shape, jnp.int32)
+    return d
+
+
+def _fit_spec(shape: tuple, prefs: list, mesh_axes: dict) -> P:
+    """Build a PartitionSpec from per-dim axis preferences, keeping only
+    assignments that divide the dim; each mesh axis is used at most once.
+
+    prefs[i] is None, an axis name, an axis tuple, or a priority list of
+    those.  This is what makes one spec recipe work across B=1 long-context
+    decode (shard KV-time over data+model) and B=128 decode (shard batch
+    over data, KV-time over model) without per-arch branches.
+    """
+    used: set = set()
+    entries = []
+    for dim, pref in zip(shape, prefs):
+        cands = pref if isinstance(pref, list) else [pref]
+        chosen = None
+        for cand in cands:
+            if cand is None:
+                continue
+            axs = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a in used or a not in mesh_axes for a in axs):
+                continue
+            size = 1
+            for a in axs:
+                size *= mesh_axes[a]
+            if size > 1 and dim % size == 0:
+                chosen = axs[0] if len(axs) == 1 else axs
+                used.update(axs)
+                break
+        entries.append(chosen)
+    return P(*entries)
+
+
+# KV-time sharding priority: both DP+TP axes (B=1 long-context), else TP,
+# else DP.  'pod' is never used for time (cross-pod KV reads would put
+# per-token traffic on the slow tier — the anti-pattern the paper warns of).
+_TIME = [("data", "model"), "model", "data"]
+
+
+def _cache_prefs(name: str, batch_axes) -> list:
+    B = [tuple(batch_axes)] if batch_axes else [None]
+    if name in ("k", "v", "xk", "xv"):
+        return [None, B, _TIME, ["model"], None]
+    if name in ("pos", "xpos"):
+        return [None, B, _TIME]
+    if name == "h":                      # mamba [R,B,Di,N] / slstm [R,B,H,dh]
+        return [None, B, ["model"], None]
+    if name == "conv":                   # [R,B,K-1,Di]
+        return [None, B, None, ["model"]]
+    if name == "C":                      # mlstm [R,B,H,dh,dh]
+        return [None, B, None, None, None]
+    return [None, B, None, None, None]   # n/m/c and friends: batch only
+
+
+def _cache_abstract_and_specs(cfg: ModelConfig, plan: Plan, batch: int,
+                              context: int):
+    """(abstract caches, divisibility-clipped PartitionSpec tree)."""
+    enc_len = cfg.frontend_len if cfg.encoder else 0
+    caches = kvcache.abstract_cache(cfg, batch, context, enc_len)
+    mesh_axes = plan.mesh_axes
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        prefs = _cache_prefs(name, plan.batch_axes)
+        return _fit_spec(leaf.shape, prefs[: len(leaf.shape)], mesh_axes)
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, caches)
+    return caches, specs
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               grad_sync: str = "hierarchical",
+               microbatches: Optional[int] = None,
+               remat: Optional[str] = None,
+               extra_plan_kw: Optional[dict] = None) -> CellSpec:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kind = shape["kind"]
+    S, B = shape["seq_len"], shape["global_batch"]
+    ok, reason = cell_is_applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"cell ({arch},{shape_name}) skipped: {reason}")
+
+    axes = mesh_axes_of(mesh)
+    ov = dict(CELL_OVERRIDES.get((arch, shape_name), {}))
+    if microbatches is not None:
+        ov["microbatches"] = microbatches
+    if remat is not None:
+        ov["remat"] = remat
+    k = ov.get("microbatches", 1)
+    remat_policy = ov.get("remat", "full" if kind == "train" else "none")
+    cfg = cfg.scaled(remat_policy=remat_policy)
+
+    plan = make_plan(cfg, axes, shape_kind=kind, grad_sync=grad_sync,
+                     seq_len=S, **(extra_plan_kw or {}))
+    # grad-accumulation cannot split below the DP width: a microbatch
+    # smaller than the DP axes replicates tokens (and silently multiplies
+    # MoE dispatch work) — clamp k so (B/k) % dp == 0
+    if kind == "train" and plan.dp_size > 1:
+        k_max = max(1, B // plan.dp_size)
+        while k > 1 and (k > k_max or (B // k) % plan.dp_size):
+            k -= 1
+    specs = model_specs(cfg)
+    bspec = batch_pspec(plan)
+
+    if kind == "train":
+        # full-size training runs mixed precision: bf16 compute weights,
+        # f32 master + moments ZeRO-1-sharded in the optimizer state
+        cfg = cfg.scaled(param_dtype=jnp.bfloat16)
+        step = make_train_step(cfg, plan, specs, mesh, microbatches=k)
+        state = abstract_train_state(specs, plan, jnp.bfloat16)
+        st_pspecs = train_state_pspecs(specs, plan, jnp.bfloat16)
+        batch = _batch_specs(cfg, S, B, kind)
+        b_pspecs = {key: _fit_spec(v.shape, [[tuple(plan.batch_axes)]], axes)
+                    for key, v in batch.items()}
+        args = (state, batch)
+        in_pspecs = (st_pspecs, b_pspecs)
+        out_pspecs = (st_pspecs, None)
+        note = f"microbatches={k} remat={remat_policy} sync={plan.grad_sync}"
+    elif kind == "prefill":
+        step = make_prefill_step(cfg, plan, mesh, capacity=S)
+        params = abstract_params(specs, jnp.bfloat16)   # serving: bf16 weights
+        p_pspecs = train_state_pspecs(specs, plan).params
+        batch = _batch_specs(cfg, S, B, kind)
+        b_pspecs = {key: _fit_spec(v.shape, [[tuple(plan.batch_axes)]], axes)
+                    for key, v in batch.items()}
+        args = (params, batch)
+        in_pspecs = (p_pspecs, b_pspecs)
+        out_pspecs = None
+        note = f"capacity={S}"
+    else:  # decode
+        step = make_decode_step(cfg, plan, mesh)
+        params = abstract_params(specs, jnp.bfloat16)   # serving: bf16 weights
+        p_pspecs = train_state_pspecs(specs, plan).params
+        caches, c_pspecs = _cache_abstract_and_specs(cfg, plan, B, S)
+        token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+        tok_spec = _fit_spec((B, 1), [[tuple(plan.batch_axes)], None], axes)
+        pos_spec = _fit_spec((B,), [[tuple(plan.batch_axes)]], axes)
+        args = (params, token, caches, pos)
+        in_pspecs = (p_pspecs, tok_spec, c_pspecs, pos_spec)
+        out_pspecs = (pos_spec, c_pspecs)
+        note = f"context={S} kv_shard={plan.kv_shard}"
+
+    return CellSpec(arch=arch, shape_name=shape_name, kind=kind,
+                    step_fn=step, abstract_args=args, in_pspecs=in_pspecs,
+                    out_pspecs=out_pspecs, plan=plan, cfg=cfg, note=note)
+
+
+def shardings_of(pspec_tree, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree (None passes through)."""
+    if pspec_tree is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        pspec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)

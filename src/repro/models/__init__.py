@@ -1,0 +1,5 @@
+from repro.models.api import (model_decode_step, model_forward, model_loss,
+                              model_prefill, model_specs)
+from repro.models.common import (LayerGroup, ModelConfig, MoEConfig, PSpec,
+                                 SSMConfig, XLSTMConfig, abstract_params,
+                                 count_params, init_params, partition_specs)

@@ -1,0 +1,84 @@
+"""Unified model facade: one surface over decoder-only and enc-dec archs.
+
+    specs = model_specs(cfg)
+    params = init_params(specs, key)
+    loss, metrics = model_loss(params, batch, cfg)
+    logits, caches = model_prefill(params, batch, cfg, capacity)
+    logits, caches = model_decode_step(params, token, caches, cfg, pos=...)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ed
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.serve import kvcache
+
+
+def model_specs(cfg: ModelConfig):
+    return ed.encdec_specs(cfg) if cfg.encoder else lm.lm_specs(cfg)
+
+
+def model_loss(params, batch, cfg: ModelConfig):
+    if cfg.encoder:
+        return ed.encdec_loss(params, batch, cfg, attn_mode=cfg.attn_mode)
+    return lm.lm_loss(params, batch, cfg, attn_mode=cfg.attn_mode)
+
+
+def model_forward(params, batch, cfg: ModelConfig):
+    if cfg.encoder:
+        logits, aux, _, _ = ed.encdec_forward(
+            params, batch["tokens"], batch["audio_embeds"], cfg,
+            attn_mode=cfg.attn_mode)
+    else:
+        logits, aux, _ = lm.lm_forward(
+            params, batch["tokens"], cfg, attn_mode=cfg.attn_mode,
+            extra_embeds=batch.get("extra_embeds"))
+    return logits, aux
+
+
+def model_prefill(params, batch, cfg: ModelConfig, capacity: int,
+                  last_only: bool = False):
+    """Full-context forward that also returns decode-ready caches.
+
+    ``last_only`` returns logits for the final position only ([B,1,V]) —
+    the serving path never materializes full prefill logits."""
+    if cfg.encoder:
+        logits, _, caches, _ = ed.encdec_forward(
+            params, batch["tokens"], batch["audio_embeds"], cfg,
+            attn_mode=cfg.attn_mode, collect_cache=True,
+            last_only=last_only)
+        enc_len = batch["audio_embeds"].shape[1]
+    else:
+        logits, _, caches = lm.lm_forward(
+            params, batch["tokens"], cfg, attn_mode=cfg.attn_mode,
+            extra_embeds=batch.get("extra_embeds"), collect_cache=True,
+            last_only=last_only)
+        enc_len = 0
+    prefill_len = batch["tokens"].shape[1]
+    extra = batch.get("extra_embeds")
+    if extra is not None and not cfg.encoder:
+        prefill_len += extra.shape[1]   # frontend embeds occupy positions too
+    caches = kvcache.pad_prefill_cache(cfg, caches, prefill_len, capacity,
+                                       enc_len)
+    return logits, caches
+
+
+def model_decode_step(params, token, caches, cfg: ModelConfig, *, pos):
+    """token [B,1]; pos [B] absolute positions.  Handles ring-buffer write
+    indices for SWA archs."""
+    cache_len = None
+    for g, gc in zip(cfg.groups, caches):
+        for j, kind in enumerate(g.pattern):
+            if kind.startswith("attn") and cache_len is None:
+                cache_len = gc[f"sub{j}"]["k"].shape[2]
+    widx = kvcache.write_index(cfg, pos, cache_len) if cache_len else pos
+    if cfg.encoder:
+        return ed.encdec_decode_step(params, token, caches, cfg,
+                                     pos=pos, write_idx=widx)
+    return lm.lm_decode_step(params, token, caches, cfg,
+                             pos=pos, write_idx=widx)

@@ -1,0 +1,263 @@
+"""Grouped-query attention with RoPE, qk-norm, sliding windows and a
+kv-cached decode path.
+
+Sharding modes (picked by ``core.topology`` per arch × mesh):
+
+* ``heads``    — Q/K/V repeated to full head count and sharded over the
+  'model' axis (classic Megatron).  The repeat is a broadcast XLA folds into
+  the dot; it is what makes GQA (kv=4/8) shardable on a 16-way axis.
+* ``sequence`` — for archs whose q-head count does not divide the model axis
+  (gemma-2b/granite-20b MQA 8H, llama3.2 24H, whisper 6H): Q/out are sharded
+  over the *sequence* on the model axis, K/V replicated (they are tiny for
+  MQA); XLA inserts the seq<->hidden reshards at block boundaries
+  (Megatron-SP style).
+
+KV-chunked online softmax (``attn_chunk_kv`` rule) bounds the score
+materialization to [B,H,S,chunk] — the jnp analog of flash attention's
+blocking, used for the 32k prefill cells; the Pallas kernel
+(kernels/flash_attention.py) is the TPU-native version of the same blocking.
+
+Decode is context-parallel: the KV cache is sharded along T (flash-decode
+style); softmax over the sharded axis lowers to small all-reduces.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, PSpec
+from repro.models.layers import apply_rope, rmsnorm
+from repro.models.sharding import current_rules, shard
+
+NEG_INF = -1e30  # large-negative in f32; avoids nan from (-inf) - (-inf)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": PSpec((D, H, Dh), ("embed", "heads", "head_dim"), init=f"scaled:{D}"),
+        "wk": PSpec((D, KV, Dh), ("embed", "kv_heads", "head_dim"), init=f"scaled:{D}"),
+        "wv": PSpec((D, KV, Dh), ("embed", "kv_heads", "head_dim"), init=f"scaled:{D}"),
+        "wo": PSpec((H, Dh, D), ("heads", "head_dim", "embed"), init=f"scaled:{H * Dh}"),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = PSpec((Dh,), ("head_dim",), init="ones")
+        p["k_norm"] = PSpec((Dh,), ("head_dim",), init="ones")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Score-level helpers
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: Optional[int]):
+    """[B,S,T] boolean; True = attend."""
+    if not causal:
+        return None
+    m = kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        m &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    return m
+
+
+def _full_attend(q, k, v, mask, softcap, scale):
+    """q [B,S,H,dh], k/v [B,T,H,dh], mask [B,S,T] or None."""
+    s = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    if mask is not None:
+        s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", p, v)
+
+
+def _chunked_attend(q, k, v, q_pos, kv_pos, causal, window, softcap, scale,
+                    chunk: int):
+    """Online-softmax over KV chunks; scores never exceed [B,H,S,chunk]."""
+    B, S, H, Dh = q.shape
+    T = k.shape[1]
+    q_pos = jnp.broadcast_to(q_pos, (B, S))
+    kv_pos = jnp.broadcast_to(kv_pos, (B, T))
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    nk = (T + pad) // chunk
+    ks = k.reshape(B, nk, chunk, H, Dh).swapaxes(0, 1)
+    vs = v.reshape(B, nk, chunk, H, Dh).swapaxes(0, 1)
+    ps = kv_pos.reshape(B, nk, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, pc = inp
+        s = jnp.einsum("bshd,bchd->bhsc", q, kc).astype(jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        valid = pc[:, None, :] <= q_pos[:, :, None] if causal else pc[:, None, :] < 2**30
+        if causal and window is not None:
+            valid &= pc[:, None, :] > (q_pos[:, :, None] - window)
+        s = jnp.where(valid[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhsc,bchd->bshd", p.astype(q.dtype), vc).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, S, H, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def attention(x: jax.Array, params: dict, cfg: ModelConfig, *,
+              positions: Optional[jax.Array] = None,
+              causal: bool = True,
+              kv_x: Optional[jax.Array] = None,
+              mode: str = "heads",
+              return_kv: bool = False):
+    """x [B,S,D] -> [B,S,D].  ``kv_x`` switches to cross-attention (no rope,
+    no causal mask).  ``return_kv`` also returns grouped (k, v) for prefill
+    caching."""
+    B, S, D = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    T = src.shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", src, params["wv"].astype(x.dtype))
+
+    if cfg.qk_norm and "q_norm" in params:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if kv_x is None and cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    kv_grouped = (k, v)
+    # GQA repeat -> full head count (XLA folds the broadcast into the dot)
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+
+    if mode == "sequence":
+        q = shard(q, "batch", "seq_model", None, None)
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+    else:
+        q = shard(q, "batch", None, "heads_act", None)
+        k = shard(k, "batch", None, "heads_act", None)
+        v = shard(v, "batch", None, "heads_act", None)
+
+    kv_pos = positions if kv_x is None else jnp.broadcast_to(
+        jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    is_causal = causal and kv_x is None
+    scale = Dh ** -0.5
+    rules = current_rules() or {}
+    chunk = rules.get("attn_chunk_kv", 0)
+    if chunk and T > chunk:
+        out = _chunked_attend(q, k, v, positions, kv_pos, is_causal,
+                              cfg.sliding_window, cfg.attn_logit_softcap,
+                              scale, chunk)
+    else:
+        mask = _mask(positions, kv_pos, is_causal, cfg.sliding_window)
+        out = _full_attend(q, k, v, mask, cfg.attn_logit_softcap, scale)
+
+    out = shard(out, "batch", "seq_model" if mode == "sequence" else None,
+                "heads_act" if mode != "sequence" else None, None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    y = shard(y, "batch", "seq_act", "embed_act")
+    if return_kv:
+        return y, kv_grouped
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one new token against a KV cache; context-parallel)
+# ---------------------------------------------------------------------------
+
+
+def attention_decode(x: jax.Array, params: dict, cfg: ModelConfig, *,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     kv_positions: jax.Array, pos: jax.Array,
+                     write_idx: Optional[jax.Array] = None,
+                     cross: bool = False):
+    """One-token decode against a KV cache.
+
+    x [B,1,D]; caches [B,T,KV,Dh] (grouped heads; T may be sharded —
+    context-parallel decode); kv_positions [B,T] (int32; ring-buffer aware —
+    empty slots carry -1); pos [B] absolute position of the new token;
+    write_idx [B] cache slot to write (pos % window for SWA ring buffers).
+    The new K/V entry is inserted *before* attending so the token sees
+    itself.
+
+    Returns (y [B,1,D], k_cache', v_cache', kv_positions').
+    For ``cross=True`` the cache is static (encoder memory): no write.
+    """
+    B, _, D = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if cfg.qk_norm and "q_norm" in params:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+    if not cross:
+        if cfg.use_rope:
+            q = apply_rope(q, pos[:, None], cfg.rope_theta)
+
+        k_new = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
+        v_new = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
+        if cfg.qk_norm and "k_norm" in params:
+            k_new = rmsnorm(k_new, params["k_norm"], cfg.norm_eps)
+        if cfg.use_rope:
+            k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+        if write_idx is None:
+            write_idx = pos
+        b = jnp.arange(B)
+        k_cache = k_cache.at[b, write_idx].set(k_new[:, 0])
+        v_cache = v_cache.at[b, write_idx].set(v_new[:, 0])
+        kv_positions = kv_positions.at[b, write_idx].set(pos)
+
+    q = q.reshape(B, 1, KV, G, Dh)
+    if cross:
+        mask = (kv_positions >= 0)[:, None, None, None, :]          # [B,1,1,1,T]
+    else:
+        valid = kv_positions >= 0
+        within = kv_positions <= pos[:, None]
+        mask = valid & within
+        if cfg.sliding_window is not None:
+            mask &= kv_positions > (pos[:, None] - cfg.sliding_window)
+        mask = mask[:, None, None, None, :]
+
+    scale = Dh ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", q, k_cache).astype(jnp.float32) * scale
+    if cfg.attn_logit_softcap is not None:
+        s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v_cache)
+    out = out.reshape(B, 1, H, Dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, k_cache, v_cache, kv_positions

@@ -1,0 +1,272 @@
+"""Block assembly and layer-group scan machinery.
+
+A model body is a tuple of ``LayerGroup``s; each group's parameters are
+stacked along a leading "layers" axis and the group lowers to a single
+``lax.scan`` (keeps HLO size independent of depth — 52-layer granite compiles
+as fast as a 4-layer toy).  Heterogeneous stacks (jamba's 1:7 attn:mamba
+interleave with alternating MoE) unroll their *pattern* inside the scan body.
+
+Block kinds
+  attn        self-attention + dense MLP
+  attn_moe    self-attention + MoE FFN
+  attn_nc     non-causal self-attention + dense MLP (encoders)
+  attn_cross  self-attn + cross-attn + dense MLP (enc-dec decoders)
+  mamba       mamba mixer + dense MLP
+  mamba_nof   mamba mixer only (no FFN)
+  mamba_moe   mamba mixer + MoE FFN
+  mlstm       mLSTM block (FFN built in via gated projections)
+  slstm       sLSTM block (internal gated FFN)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attention, attention_decode, attention_specs
+from repro.models.common import LayerGroup, ModelConfig, PSpec, is_pspec
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.models.mlp import mlp, mlp_specs
+from repro.models.moe import moe_ffn, moe_specs
+from repro.models.sharding import shard
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def block_specs(kind: str, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    s: dict[str, Any] = {"norm1": rmsnorm_spec(D)}
+    if kind.startswith("attn"):
+        s["attn"] = attention_specs(cfg)
+        if kind == "attn_cross":
+            s["norm_x"] = rmsnorm_spec(D)
+            s["xattn"] = attention_specs(cfg, cross=True)
+        s["norm2"] = rmsnorm_spec(D)
+        s["ffn"] = moe_specs(cfg, cfg.moe) if kind == "attn_moe" else mlp_specs(cfg)
+    elif kind.startswith("mamba"):
+        s["mixer"] = ssm_mod.mamba_specs(cfg, cfg.ssm)
+        if kind == "mamba_moe":
+            s["norm2"] = rmsnorm_spec(D)
+            s["ffn"] = moe_specs(cfg, cfg.moe)
+        elif kind == "mamba":
+            s["norm2"] = rmsnorm_spec(D)
+            s["ffn"] = mlp_specs(cfg)
+    elif kind == "mlstm":
+        s["mixer"] = ssm_mod.mlstm_specs(cfg, cfg.xlstm)
+    elif kind == "slstm":
+        s["mixer"] = ssm_mod.slstm_specs(cfg, cfg.xlstm)
+    else:
+        raise ValueError(kind)
+    return s
+
+
+def stack_specs(specs, n: int):
+    """Add a leading ("layers", n) axis to every PSpec leaf."""
+    return jax.tree.map(
+        lambda p: PSpec((n,) + p.shape, ("layers",) + p.axes, p.init, p.dtype),
+        specs, is_leaf=is_pspec)
+
+
+def group_specs(group: LayerGroup, cfg: ModelConfig) -> dict:
+    per_layer = {f"sub{j}": block_specs(kind, cfg)
+                 for j, kind in enumerate(group.pattern)}
+    return stack_specs(per_layer, group.repeats)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_forward(kind: str, x, p, cfg: ModelConfig, *, positions,
+                  attn_mode: str, causal: bool = True, memory=None,
+                  collect_cache: bool = False):
+    """One block. Returns (x, aux_loss, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind.startswith("attn"):
+        if collect_cache:
+            a, (k, v) = attention(h, p["attn"], cfg, positions=positions,
+                                  causal=causal and kind != "attn_nc",
+                                  mode=attn_mode, return_kv=True)
+            if cfg.sliding_window is not None and \
+                    k.shape[1] > cfg.sliding_window:
+                # SWA: only the last `window` entries can ever be attended
+                # again — trimming here keeps the per-layer prefill cache
+                # O(window), not O(S) (the 32k mixtral prefill cell)
+                k = k[:, -cfg.sliding_window:]
+                v = v[:, -cfg.sliding_window:]
+            cache = {"k": k, "v": v}
+        else:
+            a = attention(h, p["attn"], cfg, positions=positions,
+                          causal=causal and kind != "attn_nc", mode=attn_mode)
+        x = x + a
+        if kind == "attn_cross":
+            hx = rmsnorm(x, p["norm_x"], cfg.norm_eps)
+            if collect_cache:
+                a2, (xk, xv) = attention(hx, p["xattn"], cfg, kv_x=memory,
+                                         causal=False, mode=attn_mode,
+                                         return_kv=True)
+                cache.update({"xk": xk, "xv": xv})
+                x = x + a2
+            else:
+                x = x + attention(hx, p["xattn"], cfg, kv_x=memory,
+                                  causal=False, mode=attn_mode)
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            f, aux = moe_ffn(h2, p["ffn"], cfg, cfg.moe)
+        else:
+            f = mlp(h2, p["ffn"], cfg)
+        x = x + f
+    elif kind.startswith("mamba"):
+        if collect_cache:
+            m, (hstate, buf) = ssm_mod.mamba(h, p["mixer"], cfg, cfg.ssm,
+                                             return_state=True)
+            cache = {"h": hstate, "conv": buf}
+        else:
+            m = ssm_mod.mamba(h, p["mixer"], cfg, cfg.ssm)
+        x = x + m
+        if kind != "mamba_nof":
+            h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+            if kind == "mamba_moe":
+                f, aux = moe_ffn(h2, p["ffn"], cfg, cfg.moe)
+            else:
+                f = mlp(h2, p["ffn"], cfg)
+            x = x + f
+    elif kind == "mlstm":
+        m, st = ssm_mod.mlstm(h, p["mixer"], cfg, cfg.xlstm)
+        if collect_cache:
+            cache = {"C": st[0], "n": st[1], "m": st[2], "conv": st[3]}
+        x = x + m
+    elif kind == "slstm":
+        m, st = ssm_mod.slstm(h, p["mixer"], cfg, cfg.xlstm)
+        if collect_cache:
+            cache = {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}
+        x = x + m
+    else:
+        raise ValueError(kind)
+    return shard(x, "batch", "seq_act", "embed_act"), aux, cache
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "minimal":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if policy == "full":
+        return jax.checkpoint(fn)
+    raise ValueError(policy)
+
+
+def run_groups(x, group_params: list, cfg: ModelConfig, *, positions,
+               attn_mode: str, causal: bool = True, memory=None,
+               remat: Optional[str] = None, collect_cache: bool = False):
+    """Run all layer groups. Returns (x, total_aux, caches).
+
+    caches: list (per group) of stacked-cache pytrees (or None)."""
+    remat = remat if remat is not None else cfg.remat_policy
+    total_aux = jnp.zeros((), jnp.float32)
+    caches = []
+    for group, gp in zip(cfg.groups, group_params):
+
+        def body(carry, layer_p):
+            xx, aux_acc = carry
+            layer_caches = {}
+            for j, kind in enumerate(group.pattern):
+                xx, aux, cache = block_forward(
+                    kind, xx, layer_p[f"sub{j}"], cfg, positions=positions,
+                    attn_mode=attn_mode, causal=causal, memory=memory,
+                    collect_cache=collect_cache)
+                aux_acc = aux_acc + aux
+                if collect_cache:
+                    layer_caches[f"sub{j}"] = cache
+            return (xx, aux_acc), (layer_caches if collect_cache else None)
+
+        body = _remat_wrap(body, remat)
+        (x, total_aux), ys = jax.lax.scan(body, (x, total_aux), gp)
+        caches.append(ys)
+    return x, total_aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token; caches threaded through the scans)
+# ---------------------------------------------------------------------------
+
+
+def block_decode(kind: str, x, p, cfg: ModelConfig, cache: dict, *,
+                 pos, write_idx, memory=None):
+    """One block, one token. Returns (x, new_cache)."""
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind.startswith("attn"):
+        a, kc, vc, kp = attention_decode(
+            h, p["attn"], cfg, k_cache=cache["k"], v_cache=cache["v"],
+            kv_positions=cache["pos"], pos=pos, write_idx=write_idx)
+        cache = dict(cache, k=kc, v=vc, pos=kp)
+        x = x + a
+        if kind == "attn_cross":
+            hx = rmsnorm(x, p["norm_x"], cfg.norm_eps)
+            a2, _, _, _ = attention_decode(
+                hx, p["xattn"], cfg, k_cache=cache["xk"], v_cache=cache["xv"],
+                kv_positions=cache["xpos"], pos=pos, cross=True)
+            x = x + a2
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            f, _ = moe_ffn(h2, p["ffn"], cfg, cfg.moe)
+        else:
+            f = mlp(h2, p["ffn"], cfg)
+        x = x + f
+    elif kind.startswith("mamba"):
+        m, hs, buf = ssm_mod.mamba_decode(h, p["mixer"], cfg, cfg.ssm,
+                                          cache["h"], cache["conv"])
+        cache = dict(cache, h=hs, conv=buf)
+        x = x + m
+        if kind != "mamba_nof":
+            h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+            if kind == "mamba_moe":
+                f, _ = moe_ffn(h2, p["ffn"], cfg, cfg.moe)
+            else:
+                f = mlp(h2, p["ffn"], cfg)
+            x = x + f
+    elif kind == "mlstm":
+        m, st = ssm_mod.mlstm_decode(h, p["mixer"], cfg, cfg.xlstm,
+                                     (cache["C"], cache["n"], cache["m"], cache["conv"]))
+        cache = dict(cache, C=st[0], n=st[1], m=st[2], conv=st[3])
+        x = x + m
+    elif kind == "slstm":
+        m, st = ssm_mod.slstm_decode(h, p["mixer"], cfg, cfg.xlstm,
+                                     (cache["c"], cache["n"], cache["m"], cache["h"]))
+        cache = dict(cache, c=st[0], n=st[1], m=st[2], h=st[3])
+        x = x + m
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def run_groups_decode(x, group_params: list, caches: list, cfg: ModelConfig, *,
+                      pos, write_idx):
+    """One-token step through all groups; caches updated functionally."""
+    new_caches = []
+    for group, gp, gc in zip(cfg.groups, group_params, caches):
+
+        def body(xx, scanned):
+            layer_p, layer_c = scanned
+            for j, kind in enumerate(group.pattern):
+                wi = write_idx.get(kind_cache_key(kind)) if isinstance(write_idx, dict) else write_idx
+                xx, layer_c[f"sub{j}"] = block_decode(
+                    kind, xx, layer_p[f"sub{j}"], cfg, layer_c[f"sub{j}"],
+                    pos=pos, write_idx=wi)
+            return xx, layer_c
+
+        x, nc = jax.lax.scan(body, x, (gp, gc))
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def kind_cache_key(kind: str) -> str:
+    return "attn" if kind.startswith("attn") else "ssm"

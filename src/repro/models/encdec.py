@@ -1,0 +1,99 @@
+"""Encoder-decoder model (whisper family).
+
+The modality frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed frame embeddings [B, T_frames, D_enc]; the encoder is the
+transformer backbone over those embeddings (non-causal), the decoder is a
+causal LM with cross-attention into the encoder memory.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import group_specs, run_groups, run_groups_decode
+from repro.models.common import LayerGroup, ModelConfig, PSpec
+from repro.models.layers import cross_entropy, lm_head, rmsnorm, rmsnorm_spec
+from repro.models.lm import _embed, _unembed_table
+from repro.models.sharding import shard
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    enc = cfg.encoder
+    return cfg.scaled(
+        num_layers=enc.num_layers,
+        groups=(LayerGroup(("attn_nc",), enc.num_layers),),
+        use_rope=False,
+    )
+
+
+def _dec_groups(cfg: ModelConfig) -> ModelConfig:
+    return cfg.scaled(groups=(LayerGroup(("attn_cross",), cfg.num_layers),))
+
+
+def encdec_specs(cfg: ModelConfig) -> dict:
+    enc_cfg = _enc_cfg(cfg)
+    dec_cfg = _dec_groups(cfg)
+    s: dict[str, Any] = {
+        "embed": PSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                       init=f"scaled:{cfg.d_model}"),
+        "enc_groups": [group_specs(g, enc_cfg) for g in enc_cfg.groups],
+        "enc_norm": rmsnorm_spec(cfg.d_model),
+        "groups": [group_specs(g, dec_cfg) for g in dec_cfg.groups],
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.pos_emb == "learned":
+        s["pos_embed"] = PSpec((cfg.max_position_embeddings, cfg.d_model),
+                               (None, "embed"), init="normal")
+    if not cfg.tie_embeddings:
+        s["unembed"] = PSpec((cfg.padded_vocab, cfg.d_model),
+                             ("vocab", "embed"), init=f"scaled:{cfg.d_model}")
+    return s
+
+
+def encode(params, audio_embeds, cfg: ModelConfig, *, attn_mode="heads"):
+    """audio_embeds [B,T,D] -> encoder memory [B,T,D]."""
+    enc_cfg = _enc_cfg(cfg)
+    x = shard(audio_embeds.astype(cfg.dtype), "batch", "seq_act", "embed_act")
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x, _, _ = run_groups(x, params["enc_groups"], enc_cfg, positions=pos,
+                         attn_mode=attn_mode, causal=False)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_forward(params, tokens, audio_embeds, cfg: ModelConfig, *,
+                   attn_mode: str = "heads", collect_cache: bool = False,
+                   last_only: bool = False):
+    dec_cfg = _dec_groups(cfg)
+    memory = encode(params, audio_embeds, cfg, attn_mode=attn_mode)
+    x = _embed(params, tokens, dec_cfg)
+    pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+    x, aux, caches = run_groups(x, params["groups"], dec_cfg, positions=pos,
+                                attn_mode=attn_mode, memory=memory,
+                                collect_cache=collect_cache)
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(x, _unembed_table(params, cfg), cfg)
+    return shard(logits, "batch", None, "vocab_act"), aux, caches, memory
+
+
+def encdec_loss(params, batch, cfg: ModelConfig, *, attn_mode="heads"):
+    logits, aux, _, _ = encdec_forward(
+        params, batch["tokens"], batch["audio_embeds"], cfg, attn_mode=attn_mode)
+    ce = cross_entropy(logits, batch["labels"])
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "moe_aux": aux}
+
+
+def encdec_decode_step(params, token, caches, cfg: ModelConfig, *,
+                       pos, write_idx):
+    dec_cfg = _dec_groups(cfg)
+    x = _embed(params, token, dec_cfg,
+               positions=pos[:, None] if cfg.pos_emb == "learned" else None)
+    x, caches = run_groups_decode(x, params["groups"], caches, dec_cfg,
+                                  pos=pos, write_idx=write_idx)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(x, _unembed_table(params, cfg), cfg)
+    return logits, caches

@@ -1,0 +1,178 @@
+"""Primitive layers: norms, rotary embeddings, embedding table, sharded loss."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, PSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(dim: int) -> PSpec:
+    return PSpec((dim,), ("embed",), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_specs(dim: int) -> dict:
+    return {"scale": PSpec((dim,), ("embed",), init="ones"),
+            "bias": PSpec((dim,), ("embed",), init="zeros")}
+
+
+def layernorm(x: jax.Array, p: dict, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies [head_dim//2], float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: [..., S, H, Dh]; positions: broadcastable to [..., S] (int32).
+    Rotates pairs (x[2i], x[2i+1]) — "interleaved-half" convention (llama).
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)          # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]                   # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(cfg: ModelConfig) -> PSpec:
+    return PSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                 init=f"scaled:{cfg.d_model}")
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Token embedding lookup; table may be vocab-sharded (XLA inserts the
+    mask-gather + all-reduce rewrite)."""
+    x = jnp.take(table, tokens, axis=0).astype(cfg.dtype)
+    return x * jnp.asarray(jnp.sqrt(cfg.d_model), cfg.dtype)  # gemma-style scale
+
+
+# ---------------------------------------------------------------------------
+# Sharded cross-entropy
+# ---------------------------------------------------------------------------
+# Logits are produced vocab-sharded ([B, S, V] with V on the 'model' axis).
+# The CE below only ever reduces over the vocab axis, so with pjit the full
+# unsharded [B,S,V] tensor never materializes: max/logsumexp lower to small
+# all-reduces over the model axis.
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """Mean token cross-entropy. logits [B,S,V] (possibly vocab-sharded),
+    labels [B,S] int32 with -1 = ignore.  Returns scalar float32.
+
+    Only reduces over the vocab axis, so vocab-sharded logits never
+    materialize unsharded — max/sum lower to small model-axis all-reduces."""
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    mask = (labels >= 0)
+    safe_labels = jnp.where(mask, labels, 0)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    label_logit = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    nll = (lse - label_logit) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def lm_head(x: jax.Array, table: jax.Array,
+            cfg: ModelConfig) -> jax.Array:
+    """Project to vocab logits. table [Vp, D] (vocab-sharded, padded to
+    cfg.padded_vocab) -> [B,S,Vp] with pad logits masked to -inf."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if table.shape[0] != cfg.vocab_size:
+        pad_mask = jnp.arange(table.shape[0]) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits
+
+
+def chunked_softmax_xent(x: jax.Array, table: jax.Array, labels: jax.Array,
+                         cfg: ModelConfig, chunk: int) -> jax.Array:
+    """Fused lm_head + CE over sequence chunks: the full [B,S,V] logits
+    tensor never materializes (peak is one [B,chunk,V_shard] block, and the
+    chunk body is rematerialized in the backward pass).
+
+    x [B,S,D]; labels [B,S] (-1 = ignore).  Returns mean-NLL scalar (f32).
+    """
+    B, S, D = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nch = (S + pad) // chunk
+    xs = x.reshape(B, nch, chunk, D).swapaxes(0, 1)          # [nch,B,c,D]
+    ls = labels.reshape(B, nch, chunk).swapaxes(0, 1)        # [nch,B,c]
+
+    @jax.checkpoint
+    def body(carry, inp):
+        nll_acc, cnt_acc = carry
+        xc, lc = inp
+        logits = lm_head(xc, table, cfg).astype(jnp.float32)
+        mask = lc >= 0
+        safe = jnp.where(mask, lc, 0)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = jnp.sum((lse - ll) * mask)
+        return (nll_acc + nll, cnt_acc + jnp.sum(mask)), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xs, ls))
+    return nll / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# activation fns
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(name)

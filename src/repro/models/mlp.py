@@ -1,0 +1,30 @@
+"""Dense gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, PSpec
+from repro.models.layers import act_fn
+from repro.models.sharding import shard
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    return {
+        "wi_gate": PSpec((D, F), ("embed", "mlp"), init=f"scaled:{D}"),
+        "wi_up": PSpec((D, F), ("embed", "mlp"), init=f"scaled:{D}"),
+        "wo": PSpec((F, D), ("mlp", "embed"), init=f"scaled:{F}"),
+    }
+
+
+def mlp(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
+    act = act_fn(cfg.mlp_act)
+    w = params
+    gate = jnp.einsum("bsd,df->bsf", x, w["wi_gate"].astype(x.dtype))
+    up = jnp.einsum("bsd,df->bsf", x, w["wi_up"].astype(x.dtype))
+    h = act(gate) * up
+    h = shard(h, "batch", None, "mlp_act")
+    y = jnp.einsum("bsf,fd->bsd", h, w["wo"].astype(x.dtype))
+    return shard(y, "batch", "seq_act", "embed_act")

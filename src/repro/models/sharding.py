@@ -1,0 +1,56 @@
+"""Activation-sharding context.
+
+Models annotate activations with *logical* axes; the launcher installs a rules
+mapping (logical -> mesh axis) for the active mesh.  Outside any mesh context
+the annotations are no-ops, so the same model code runs on one CPU device and
+on a 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACT_RULES: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "act_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: dict):
+    """rules: logical activation axis name -> mesh axis (str | tuple | None)."""
+    token = _ACT_RULES.set(dict(rules))
+    try:
+        yield
+    finally:
+        _ACT_RULES.reset(token)
+
+
+def current_rules() -> Optional[dict]:
+    return _ACT_RULES.get()
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical activation axes (one per dim; None = any)."""
+    rules = _ACT_RULES.get()
+    if rules is None:
+        return x
+    mesh_axes = []
+    used: set = set()
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            mesh_axes.append(None)
+            continue
+        key = tuple(m) if not isinstance(m, str) else (m,)
+        if any(k in used for k in key):
+            mesh_axes.append(None)
+        else:
+            used.update(key)
+            mesh_axes.append(m)
+    if all(m is None for m in mesh_axes):
+        return x              # no-op (single-device / fully-unsharded rules)
+    return jax.lax.with_sharding_constraint(x, P(*mesh_axes))

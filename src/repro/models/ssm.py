@@ -1,0 +1,479 @@
+"""State-space / recurrent blocks: Mamba (selective SSM) and xLSTM cells.
+
+Mamba runs a *chunked associative scan*: time is split into chunks of
+``ssm.chunk``; within a chunk the diagonal recurrence
+
+    h_t = a_t * h_{t-1} + b_t,   a_t = exp(dt_t A),  b_t = dt_t B_t x_t
+
+is evaluated with ``lax.associative_scan`` (log-depth, MXU friendly) and the
+carry crosses chunks through a small ``lax.scan``.  This bounds the
+materialized state tensor to [B, chunk, d_inner, N] — the same blocking the
+Pallas kernel (kernels/ssm_scan.py) uses in VMEM.
+
+mLSTM keeps a matrix memory C [B,H,dh,dh] and sLSTM a per-head scalar memory;
+both are lax.scan recurrences with exponential-gate stabilization, and both
+expose one-token ``*_decode`` steps with O(1) state — this is what makes the
+long_500k cells feasible for the ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, PSpec, SSMConfig, XLSTMConfig
+from repro.models.sharding import shard
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+
+def _dt_rank(cfg: ModelConfig, ssm: SSMConfig) -> int:
+    return ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def mamba_specs(cfg: ModelConfig, ssm: SSMConfig) -> dict:
+    D = cfg.d_model
+    Di = ssm.expand * D
+    N, K, R = ssm.d_state, ssm.d_conv, _dt_rank(cfg, ssm)
+    return {
+        "in_proj": PSpec((D, 2 * Di), ("embed", "ssm_inner"), init=f"scaled:{D}"),
+        "conv_w": PSpec((K, Di), (None, "ssm_inner"), init=f"scaled:{K}"),
+        "conv_b": PSpec((Di,), ("ssm_inner",), init="zeros"),
+        "x_proj": PSpec((Di, R + 2 * N), ("ssm_inner", None), init=f"scaled:{Di}"),
+        "dt_w": PSpec((R, Di), (None, "ssm_inner"), init=f"scaled:{R}"),
+        "dt_b": PSpec((Di,), ("ssm_inner",), init="const:-4.0"),
+        "A_log": PSpec((Di, N), ("ssm_inner", None), init="arange_log"),
+        "D": PSpec((Di,), ("ssm_inner",), init="ones"),
+        "out_proj": PSpec((Di, D), ("ssm_inner", "embed"), init=f"scaled:{Di}"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x [B,S,Di], w [K,Di]."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        shift = K - 1 - k
+        xk = x if shift == 0 else jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xk * w[k].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _ssm_inputs(x: jax.Array, p: dict, cfg: ModelConfig, ssm: SSMConfig):
+    """Shared front half: projections + conv + gate computations.
+
+    Returns (dt [B,S,Di] f32, B_ssm/C_ssm [B,S,N], xc, z, x_in).  The
+    [B,S,Di,N]-sized a/b gate tensors are NOT built here — they are
+    recomputed per chunk inside the scan body (see ``mamba``), which is
+    what keeps a 4k-seq jamba train step inside HBM."""
+    R, N = _dt_rank(cfg, ssm), ssm.d_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xz = shard(xz, "batch", None, "mlp_act")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+
+    xdb = jnp.einsum("bse,er->bsr", xc, p["x_proj"].astype(x.dtype))
+    dt_in, B_ssm, C_ssm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, p["dt_w"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_b"].astype(jnp.float32)
+    )                                                     # [B,S,Di] f32
+    return dt, B_ssm, C_ssm, xc, z, x_in
+
+
+def _assoc_op(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def mamba(x: jax.Array, p: dict, cfg: ModelConfig, ssm: SSMConfig,
+          h0: Optional[jax.Array] = None, return_state: bool = False):
+    """Full-sequence Mamba mixer. x [B,S,D] -> [B,S,D]
+    (+ (h, conv_buf) serve state when ``return_state``).
+
+    The [B,Q,Di,N] gate tensors a = exp(dt·A), b = dt·B·x exist only inside
+    the (rematerialized) chunk body; the scan carries dt/B/C/xc chunks,
+    which are N× smaller."""
+    B, S, D = x.shape
+    Di, N = ssm.expand * D, ssm.d_state
+    Q = min(ssm.chunk, S)
+    # pad S to a multiple of Q
+    pad = (-S) % Q
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    Sp = S + pad
+
+    dt, B_ssm, C_ssm, xc, z, x_in = _ssm_inputs(xp, p, cfg, ssm)
+    if pad:
+        # padded steps must be identity transitions (a=1, b=0) or they
+        # corrupt the carried state h: dt=0 gives exp(0·A)=1 and 0·B·x=0
+        valid = (jnp.arange(Sp) < S)[None, :, None]
+        dt = dt * valid
+    nc = Sp // Q
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # [Di,N]
+    chunks = lambda t: t.reshape((B, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_step(h, inp):
+        dtc, bc_ssm, cc_ssm, xcc = inp            # [B,Q,Di], [B,Q,N], ...
+        ac = jnp.exp(dtc[..., None] * A)          # [B,Q,Di,N] (transient)
+        bc = (dtc * xcc.astype(jnp.float32))[..., None] \
+            * bc_ssm.astype(jnp.float32)[..., None, :]
+        pa, pb = jax.lax.associative_scan(_assoc_op, (ac, bc), axis=1)
+        h_t = pa * h[:, None] + pb                # [B,Q,Di,N]
+        y = jnp.einsum("bqn,bqen->bqe", cc_ssm.astype(jnp.float32), h_t)
+        return h_t[:, -1], y
+
+    h = jnp.zeros((B, Di, N), jnp.float32) if h0 is None else h0
+    h, ys = jax.lax.scan(chunk_step, h,
+                         (chunks(dt), chunks(B_ssm), chunks(C_ssm),
+                          chunks(xc)))
+    y = ys.swapaxes(0, 1).reshape(B, Sp, Di)[:, :S]
+    xc, z = xc[:, :S], z[:, :S]
+    y = (y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    out = shard(out, "batch", "seq_act", "embed_act")
+    if return_state:
+        K = ssm.d_conv
+        xi = x_in[:, :S]
+        buf = jnp.pad(xi, ((0, 0), (max(0, (K - 1) - S), 0), (0, 0)))[:, -(K - 1):]
+        return out, (h, buf)
+    return out
+
+
+def mamba_decode(x: jax.Array, p: dict, cfg: ModelConfig, ssm: SSMConfig,
+                 h: jax.Array, conv_buf: jax.Array):
+    """One-token step. x [B,1,D]; h [B,Di,N]; conv_buf [B,K-1,Di].
+    Returns (y [B,1,D], h', conv_buf')."""
+    B, _, D = x.shape
+    R, N = _dt_rank(cfg, ssm), ssm.d_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    x_in, z = jnp.split(xz, 2, axis=-1)           # [B,1,Di]
+    window = jnp.concatenate([conv_buf, x_in], axis=1)          # [B,K,Di]
+    xc = jnp.einsum("bke,ke->be", window, p["conv_w"].astype(x.dtype))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))[:, None]  # [B,1,Di]
+
+    xdb = jnp.einsum("bse,er->bsr", xc, p["x_proj"].astype(x.dtype))
+    dt_in, B_ssm, C_ssm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, p["dt_w"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_b"].astype(jnp.float32))[:, 0]    # [B,Di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)                # [B,Di,N]
+    bvec = (dt * xc[:, 0].astype(jnp.float32))[..., None] * B_ssm[:, 0].astype(jnp.float32)[:, None, :]
+    h = a * h + bvec
+    y = jnp.einsum("bn,ben->be", C_ssm[:, 0].astype(jnp.float32), h)
+    y = (y + xc[:, 0].astype(jnp.float32) * p["D"].astype(jnp.float32)).astype(x.dtype)
+    y = (y[:, None] * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, h, window[:, 1:]
+
+
+def mamba_init_state(cfg: ModelConfig, ssm: SSMConfig, batch: int, dtype=jnp.float32):
+    Di = ssm.expand * cfg.d_model
+    return (jnp.zeros((batch, Di, ssm.d_state), jnp.float32),
+            jnp.zeros((batch, ssm.d_conv - 1, Di), dtype))
+
+
+# ===========================================================================
+# mLSTM (matrix-memory LSTM, xLSTM paper)
+# ===========================================================================
+
+
+def mlstm_specs(cfg: ModelConfig, xl: XLSTMConfig) -> dict:
+    D, H = cfg.d_model, cfg.num_heads
+    Di = int(xl.mlstm_proj_factor * D)
+    dh = Di // H
+    return {
+        "up_proj": PSpec((D, 2 * Di), ("embed", "ssm_inner"), init=f"scaled:{D}"),
+        "conv_w": PSpec((xl.conv_window, Di), (None, "ssm_inner"), init=f"scaled:{xl.conv_window}"),
+        "conv_b": PSpec((Di,), ("ssm_inner",), init="zeros"),
+        "wq": PSpec((Di, H, dh), ("ssm_inner", "heads", None), init=f"scaled:{Di}"),
+        "wk": PSpec((Di, H, dh), ("ssm_inner", "heads", None), init=f"scaled:{Di}"),
+        "wv": PSpec((Di, H, dh), ("ssm_inner", "heads", None), init=f"scaled:{Di}"),
+        "w_if": PSpec((Di, 2 * H), ("ssm_inner", None), init=f"scaled:{Di}"),
+        "b_if": PSpec((2 * H,), (None,), init="zeros"),
+        "out_norm": PSpec((Di,), ("ssm_inner",), init="ones"),
+        "down_proj": PSpec((Di, D), ("ssm_inner", "embed"), init=f"scaled:{Di}"),
+    }
+
+
+def _mlstm_cell(q, k, v, i_gate, f_gate, C0, n0, m0):
+    """Sequential mLSTM recurrence (stabilized exponential gating).
+
+    q,k,v [B,S,H,dh]; i_gate,f_gate [B,S,H] (pre-activation, f32).
+    Returns (y [B,S,H,dh], (C,n,m) final)."""
+    dh = q.shape[-1]
+    scale = dh ** -0.5
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, it, ft = t
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)                     # [B,H]
+        f_ = jnp.exp(ft + m - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * jnp.einsum(
+            "bhv,bhk->bhvk", vt, kt * scale)
+        n = f_[..., None] * n + i_[..., None] * (kt * scale)
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        y = num / den[..., None]
+        return (C, n, m_new), y
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_gate.swapaxes(0, 1), f_gate.swapaxes(0, 1))
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    return ys.swapaxes(0, 1), (C, n, m)
+
+
+def _mlstm_chunk(q, k, v, i_gate, f_log, C0, n0, m0):
+    """One chunk of the chunkwise-parallel mLSTM (exact, stabilized).
+
+    q,k,v [B,L,H,dh] (k pre-scaled); i_gate,f_log [B,L,H] (f already
+    log-sigmoid).  Carry (C [B,H,dh,dh], n [B,H,dh], m [B,H]).
+
+    Derivation (matches the sequential cell exactly):
+      g_t = Σ_{τ≤t} logf_τ      a_s = i_s - g_s
+      M_t = max(m_prev, max_{s≤t} a_s)          (row stabilizer, m_t = g_t+M_t)
+      y_t ∝ Σ_{s≤t} e^{a_s - M_t}(k_s·q_t)v_s + e^{m_prev - M_t} q_t·C_prev
+      den_t = max(|Σ_{s≤t} e^{a_s - M_t}(k_s·q_t) + e^{m_prev-M_t} q_t·n_prev|, 1)
+      carry: C' = Σ_s e^{a_s - M_L} v_s k_sᵀ + e^{m_prev - M_L} C_prev
+             m' = g_L + M_L
+    The [B,H,L,L] score block is the only quadratic buffer — the same
+    blocking the Pallas kernel (kernels/mlstm_scan.py) keeps in VMEM.
+    """
+    B, L, H, dh = q.shape
+    g = jnp.cumsum(f_log, axis=1)                        # [B,L,H]
+    a = i_gate - g
+    M = jnp.maximum(jax.lax.cummax(a, axis=1), m0[:, None])   # [B,L,H]
+
+    # intra-chunk attention-like term
+    scores = jnp.einsum("blhd,bshd->bhls", q, k)         # [B,H,L,L]
+    w = jnp.exp(a.transpose(0, 2, 1)[:, :, None, :]      # a_s  [B,H,1,L]
+                - M.transpose(0, 2, 1)[..., None])       # M_t  [B,H,L,1]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    scores = jnp.where(causal, scores * w, 0.0)
+    y_num = jnp.einsum("bhls,bshd->blhd", scores, v)
+
+    # inter-chunk (carry) term
+    inter = jnp.exp(m0[:, None] - M)                     # [B,L,H]
+    y_num = y_num + inter[..., None] * jnp.einsum("blhd,bhvd->blhv", q, C0)
+    # denominator: Σ_{s≤t} w(k_s·q_t) + inter * (q_t·n_prev)
+    d_t = jnp.sum(scores, axis=-1).transpose(0, 2, 1) \
+        + inter * jnp.einsum("blhd,bhd->blh", q, n0)
+    y = y_num / jnp.maximum(jnp.abs(d_t), 1.0)[..., None]
+
+    # carry update
+    M_L, g_L = M[:, -1], g[:, -1]                        # [B,H]
+    wc = jnp.exp(a - M_L[:, None])                       # [B,L,H]
+    C1 = jnp.einsum("blh,blhv,blhk->bhvk", wc, v, k) \
+        + jnp.exp(m0 - M_L)[..., None, None] * C0
+    n1 = jnp.einsum("blh,blhk->bhk", wc, k) \
+        + jnp.exp(m0 - M_L)[..., None] * n0
+    m1 = g_L + M_L
+    return y, (C1, n1, m1)
+
+
+def mlstm(x: jax.Array, p: dict, cfg: ModelConfig, xl: XLSTMConfig,
+          state=None):
+    """mLSTM block mixer, chunkwise-parallel. x [B,S,D] -> [B,S,D].
+
+    Training memory is O(S/chunk · chunk²) score blocks instead of the
+    sequential form's O(S · dh²) per-step carries (which made 4k-seq
+    training OOM: a [B,H,dh,dh] C snapshot per timestep)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    Di = int(xl.mlstm_proj_factor * D)
+    dh = Di // H
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
+    xz = shard(xz, "batch", None, "mlp_act")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    q = jnp.einsum("bse,ehk->bshk", xc, p["wq"].astype(x.dtype)).astype(jnp.float32)
+    k = jnp.einsum("bse,ehk->bshk", xc, p["wk"].astype(x.dtype)).astype(jnp.float32)
+    v = jnp.einsum("bse,ehk->bshk", x_in, p["wv"].astype(x.dtype)).astype(jnp.float32)
+    k = k * (dh ** -0.5)
+    gates = jnp.einsum("bse,eg->bsg", xc, p["w_if"].astype(x.dtype)).astype(jnp.float32)
+    gates = gates + p["b_if"].astype(jnp.float32)
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)         # [B,S,H]
+    f_log = jax.nn.log_sigmoid(f_gate)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state[:3]
+
+    L = min(xl.chunk, S)
+    pad = (-S) % L
+    if pad:
+        zero = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = zero(q), zero(k), zero(v)
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-1e30)   # pad steps contribute e^-inf
+        f_log = jnp.pad(f_log, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // L
+    split = lambda t: t.reshape((B, nc, L) + t.shape[2:]).swapaxes(0, 1)
+
+    def body(carry, inp):
+        qc, kc, vc, ic, fc = inp
+        y, carry = _mlstm_chunk(qc, kc, vc, ic, fc, *carry)
+        return carry, y
+
+    (C, n, m), ys = jax.lax.scan(
+        body, (C0, n0, m0),
+        (split(q), split(k), split(v), split(i_gate), split(f_log)))
+    y = ys.swapaxes(0, 1).reshape(B, S + pad, Di)[:, :S].astype(x.dtype)
+    # per-channel "head norm" (group-norm style simplification) + z gate
+    y = y * p["out_norm"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down_proj"].astype(x.dtype))
+    K = xl.conv_window
+    buf = jnp.pad(x_in, ((0, 0), (max(0, (K - 1) - S), 0), (0, 0)))[:, -(K - 1):]
+    return shard(out, "batch", "seq_act", "embed_act"), (C, n, m, buf.astype(jnp.float32))
+
+
+def mlstm_init_state(cfg: ModelConfig, xl: XLSTMConfig, batch: int):
+    H = cfg.num_heads
+    Di = int(xl.mlstm_proj_factor * cfg.d_model)
+    dh = Di // H
+    return (jnp.zeros((batch, H, dh, dh), jnp.float32),
+            jnp.zeros((batch, H, dh), jnp.float32),
+            jnp.full((batch, H), -jnp.inf, jnp.float32),
+            jnp.zeros((batch, xl.conv_window - 1, Di), jnp.float32))
+
+
+def mlstm_decode(x, p, cfg: ModelConfig, xl: XLSTMConfig, state):
+    """One-token mLSTM step. state = (C, n, m, conv_buf)."""
+    B, _, D = x.shape
+    C0, n0, m0, conv_buf = state
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([conv_buf.astype(x.dtype), x_in], axis=1)
+    xc = jnp.einsum("bke,ke->be", window, p["conv_w"].astype(x.dtype))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))[:, None]
+    q = jnp.einsum("bse,ehk->bshk", xc, p["wq"].astype(x.dtype)).astype(jnp.float32)
+    k = jnp.einsum("bse,ehk->bshk", xc, p["wk"].astype(x.dtype)).astype(jnp.float32)
+    v = jnp.einsum("bse,ehk->bshk", x_in, p["wv"].astype(x.dtype)).astype(jnp.float32)
+    gates = (jnp.einsum("bse,eg->bsg", xc, p["w_if"].astype(x.dtype)).astype(jnp.float32)
+             + p["b_if"].astype(jnp.float32))
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)
+    f_gate = jax.nn.log_sigmoid(f_gate)
+    y, (C, n, m) = _mlstm_cell(q, k, v, i_gate, f_gate, C0, n0, m0)
+    Di = int(xl.mlstm_proj_factor * D)
+    y = y.reshape(B, 1, Di).astype(x.dtype) * p["out_norm"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down_proj"].astype(x.dtype))
+    return out, (C, n, m, window[:, 1:].astype(jnp.float32))
+
+
+# ===========================================================================
+# sLSTM (scalar-memory LSTM with exponential gating, xLSTM paper)
+# ===========================================================================
+
+
+def slstm_specs(cfg: ModelConfig, xl: XLSTMConfig) -> dict:
+    D, H = cfg.d_model, cfg.num_heads
+    dh = D // H
+    F = int(xl.slstm_proj_factor * D)
+    return {
+        # input weights for z,i,f,o stacked: [D, 4, H, dh]
+        "w_in": PSpec((D, 4, H, dh), ("embed", None, "heads", None), init=f"scaled:{D}"),
+        # per-head recurrent weights (block-diagonal): [4, H, dh, dh]
+        "r_rec": PSpec((4, H, dh, dh), (None, "heads", None, None), init=f"scaled:{dh}"),
+        "bias": PSpec((4, H, dh), (None, "heads", None), init="zeros"),
+        "out_norm": PSpec((D,), ("embed",), init="ones"),
+        # post-cell gated FFN (pf = 4/3)
+        "ffn_gate": PSpec((D, F), ("embed", "mlp"), init=f"scaled:{D}"),
+        "ffn_up": PSpec((D, F), ("embed", "mlp"), init=f"scaled:{D}"),
+        "ffn_down": PSpec((F, D), ("mlp", "embed"), init=f"scaled:{F}"),
+    }
+
+
+def _slstm_cell(zx, ix, fx, ox, r_rec, bias, state, chunk: int = 256):
+    """Sequential sLSTM. zx..ox [B,S,H,dh] pre-activations from the input;
+    recurrence adds R @ h_{t-1} per head.  state = (c,n,m,h).
+
+    The recurrence is inherently sequential (R @ h_{t-1} — no parallel
+    form; see DESIGN.md §Arch-applicability), so training memory is
+    bounded by *chunked remat*: the outer scan saves only the carry at
+    chunk boundaries and the backward recomputes the S/chunk inner steps.
+    Without this the per-timestep saves made xlstm-125m train_4k the
+    single most memory-bound cell of the sweep.
+    """
+
+    def step(carry, t):
+        c, n, m, h = carry
+        zt, it, ft, ot = t
+        rec = jnp.einsum("ghij,bhj->gbhi", r_rec, h)       # [4,B,H,dh]
+        z_ = jnp.tanh(zt + rec[0] + bias[0])
+        i_ = it + rec[1] + bias[1]
+        f_ = ft + rec[2] + bias[2]
+        o_ = jax.nn.sigmoid(ot + rec[3] + bias[3])
+        f_log = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(f_log + m, i_)
+        i_e = jnp.exp(i_ - m_new)
+        f_e = jnp.exp(f_log + m - m_new)
+        c = f_e * c + i_e * z_
+        n = f_e * n + i_e
+        h_new = o_ * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h_new), h_new
+
+    B, S = zx.shape[0], zx.shape[1]
+    L = min(chunk, S)
+    if S % L:
+        # ragged tail: plain scan (smoke-scale shapes only)
+        xs = tuple(a.swapaxes(0, 1) for a in (zx, ix, fx, ox))
+        (c, n, m, h), ys = jax.lax.scan(step, state, xs)
+        return ys.swapaxes(0, 1), (c, n, m, h)
+
+    nc = S // L
+    split = lambda a: a.reshape((B, nc, L) + a.shape[2:]).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_body(carry, t):
+        xs = tuple(a.swapaxes(0, 1) for a in t)            # [L,B,H,dh]
+        carry, ys = jax.lax.scan(step, carry, xs)
+        return carry, ys.swapaxes(0, 1)
+
+    (c, n, m, h), ys = jax.lax.scan(
+        chunk_body, state, tuple(split(a) for a in (zx, ix, fx, ox)))
+    ys = ys.swapaxes(0, 1).reshape(B, S, *ys.shape[3:])
+    return ys, (c, n, m, h)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, jnp.full((batch, H, dh), -jnp.inf, jnp.float32), z)
+
+
+def slstm(x: jax.Array, p: dict, cfg: ModelConfig, xl: XLSTMConfig, state=None):
+    """sLSTM block: cell + gated FFN. x [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    pre = jnp.einsum("bsd,dghk->gbshk", x, p["w_in"].astype(x.dtype)).astype(jnp.float32)
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    ys, state = _slstm_cell(pre[0], pre[1], pre[2], pre[3],
+                            p["r_rec"].astype(jnp.float32),
+                            p["bias"].astype(jnp.float32), state)
+    y = ys.reshape(B, S, D).astype(x.dtype) * p["out_norm"].astype(x.dtype)
+    # gated FFN
+    g = jnp.einsum("bsd,df->bsf", y, p["ffn_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", y, p["ffn_up"].astype(x.dtype))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g, approximate=True) * u,
+                     p["ffn_down"].astype(x.dtype))
+    return shard(out, "batch", "seq_act", "embed_act"), state
+
+
+def slstm_decode(x, p, cfg: ModelConfig, xl: XLSTMConfig, state):
+    return slstm(x, p, cfg, xl, state)

@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw_init, adamw_update, OptState
+from repro.optim.schedules import make_schedule

@@ -1,0 +1,113 @@
+"""AdamW with ZeRO-1-style sharded moments.
+
+Moments are f32 pytrees shaped like the params.  Their PartitionSpecs come
+from ``core.topology.zero1_rules``: the param's own sharding *plus* the
+widest replicated dim sharded over the DP ('data') axis where divisible, so
+a 256-chip mesh holds 1/256 of the f32 moments per chip instead of a full
+copy (the ZeRO-1 memory win; the all-gather back is implicit — XLA inserts
+it where the update needs the unsharded value, which for an elementwise
+Adam update is *nowhere*, so the moments never materialize unsharded).
+
+Pure functions; no global state.  Update math follows Loshchilov & Hutter
+(decoupled weight decay), bias-corrected.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Any          # first moment  (f32, param-shaped)
+    nu: Any          # second moment (f32, param-shaped)
+    count: jax.Array  # int32 step
+    master: Any = ()  # f32 master copy when params are bf16 (ZeRO-sharded)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0       # global-norm clip; 0 disables
+
+
+def adamw_init(params) -> OptState:
+    """Moments are always f32.  When params are low-precision (bf16 compute
+    weights — the production mixed-precision regime), the optimizer also
+    carries an f32 master copy; the params the model sees are casts of it.
+    """
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    low_precision = any(
+        l.dtype != jnp.float32 for l in jax.tree.leaves(params))
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) \
+        if low_precision else ()
+    return OptState(mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32),
+                    master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Scale grads to a max global norm.  The norm math is f32 (fused by
+    XLA), but the scaled grads keep their dtype — bf16 grads stay bf16 so
+    mixed-precision training never materializes f32 full-size gradients."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, state: OptState, params, lr, *,
+                 cfg: AdamWConfig = AdamWConfig()):
+    """One AdamW step.  Returns (new_params, new_state, metrics).
+
+    grads may be bf16; all moment math is f32.  With a master copy in the
+    state (mixed precision), the f32 update happens on the (ZeRO-sharded)
+    master and the bf16 compute params are re-cast from it — the f32
+    weights never materialize at the params' replication level.
+    """
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+
+    count = state.count + 1
+    c1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+    mixed = state.master != ()
+
+    def one(p, g, m, v, pf):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = pf - lr * (upd + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m, v, pf
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_f = jax.tree.leaves(state.master) if mixed else \
+        [p.astype(jnp.float32) for p in flat_p]
+    new_p, new_m, new_v, new_f = [], [], [], []
+    for p, g, m, v, f in zip(flat_p, flat_g, flat_m, flat_v, flat_f):
+        np_, nm, nv, nf = one(p, g, m, v, f)
+        new_p.append(np_); new_m.append(nm); new_v.append(nv); new_f.append(nf)
+    new_master = jax.tree.unflatten(tdef, new_f) if mixed else ()
+    return (jax.tree.unflatten(tdef, new_p),
+            OptState(jax.tree.unflatten(tdef, new_m),
+                     jax.tree.unflatten(tdef, new_v), count, new_master),
+            {"grad_norm": gnorm})

@@ -1,0 +1,36 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine_decay(step, warmup: int, total: int, peak: float,
+                 floor_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``floor_frac * peak``."""
+    warm = linear_warmup(step, warmup, peak)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    decayed = peak * (floor_frac + (1 - floor_frac) * cos)
+    return jnp.where(step < warmup, warm, decayed)
+
+
+def constant(step, peak: float):
+    del step
+    return jnp.asarray(peak, jnp.float32)
+
+
+def make_schedule(kind: str = "cosine", *, peak: float = 3e-4,
+                  warmup: int = 100, total: int = 10000,
+                  floor_frac: float = 0.1):
+    """Returns step -> lr (f32 scalar)."""
+    if kind == "cosine":
+        return lambda s: cosine_decay(s, warmup, total, peak, floor_frac)
+    if kind == "linear":
+        return lambda s: linear_warmup(s, warmup, peak)
+    if kind == "constant":
+        return lambda s: constant(s, peak)
+    raise ValueError(kind)

@@ -1,0 +1,142 @@
+"""Continuous-batching serve engine.
+
+A fixed pool of ``num_slots`` decode slots runs in lock-step (one jitted
+decode step per tick).  Requests are admitted into free slots via a
+single-sequence prefill, finished sequences (EOS or max_tokens) free their
+slot.  This is the vLLM-style iteration-level scheduler reduced to its
+JAX-native core: static shapes (slot-padded), no re-compilation when the
+working set changes.
+
+The engine is deliberately host-driven — admission and eviction are Python;
+only the hot loop (decode step over all slots) is jitted.  Inactive slots
+still compute but their cache writes land at write-protected positions
+(pos = -1 slots attend to nothing and their outputs are discarded).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Plan
+from repro.models.common import ModelConfig
+from repro.serve import kvcache
+from repro.serve.steps import make_decode_step, make_prefill_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # [S] int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                 # -1 = never
+    # filled by the engine
+    generated: list = field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+
+
+@dataclass
+class EngineStats:
+    ticks: int = 0
+    tokens_out: int = 0
+    admitted: int = 0
+    finished: int = 0
+
+    @property
+    def summary(self) -> str:
+        return (f"ticks={self.ticks} tokens={self.tokens_out} "
+                f"admitted={self.admitted} finished={self.finished}")
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, plan: Plan, mesh, params, *,
+                 num_slots: int = 4, capacity: int = 128):
+        self.cfg, self.plan, self.mesh = cfg, plan, mesh
+        self.params = params
+        self.num_slots, self.capacity = num_slots, capacity
+        self._prefill = jax.jit(make_prefill_step(cfg, plan, mesh,
+                                                  capacity=capacity))
+        self._decode = jax.jit(make_decode_step(cfg, plan, mesh))
+        # slot state (host side)
+        self.slot_req: list[Optional[Request]] = [None] * num_slots
+        self.slot_pos = np.zeros(num_slots, np.int64)     # next absolute pos
+        self.caches = kvcache.init_cache(cfg, num_slots, capacity)
+        self.tokens = np.zeros((num_slots, 1), np.int32)  # last emitted
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.stats = EngineStats()
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self, slot: int, req: Request):
+        """Prefill one request and splice its caches into ``slot``."""
+        prompt = jnp.asarray(req.prompt[None, :])         # [1, S]
+        batch = {"tokens": prompt}
+        next_tok, pc = self._prefill(self.params, batch)
+        # splice: every cache leaf [R, 1, ...] -> our [R, num_slots, ...]
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[:, slot:slot + 1].set(
+                one.astype(full.dtype)),
+            self.caches, pc)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = len(req.prompt)
+        self.tokens[slot, 0] = int(next_tok[0])
+        req.generated.append(int(next_tok[0]))
+        req.first_token_at = time.perf_counter()
+        self.stats.admitted += 1
+
+    def _free(self, slot: int):
+        req = self.slot_req[slot]
+        req.finished_at = time.perf_counter()
+        self.finished.append(req)
+        self.slot_req[slot] = None
+        self.slot_pos[slot] = 0
+        self.stats.finished += 1
+
+    # -- main loop ----------------------------------------------------------
+
+    def tick(self):
+        """Admit into free slots, run one decode step, collect tokens."""
+        for slot in range(self.num_slots):
+            if self.slot_req[slot] is None and self.queue:
+                self._admit(slot, self.queue.pop(0))
+
+        if not any(r is not None for r in self.slot_req):
+            return False
+
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        nxt, self.caches = self._decode(
+            self.params, jnp.asarray(self.tokens), self.caches, pos)
+        nxt = np.asarray(nxt)
+        self.stats.ticks += 1
+
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            self.tokens[slot, 0] = tok
+            self.slot_pos[slot] += 1
+            self.stats.tokens_out += 1
+            done = (len(req.generated) >= req.max_new_tokens
+                    or tok == req.eos_id)
+            if done:
+                self._free(slot)
+        return True
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
+        for _ in range(max_ticks):
+            busy = self.tick()
+            if not busy and not self.queue:
+                break
+        return self.stats

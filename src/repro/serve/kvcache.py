@@ -1,0 +1,147 @@
+"""Decode-state management: KV caches (dense + SWA ring-buffer), SSM states.
+
+Cache layout mirrors the layer-group structure: one pytree per group, every
+leaf stacked along a leading "layers" axis of length group.repeats, so
+``run_groups_decode`` can thread it through the same ``lax.scan`` as the
+parameters.
+
+For sliding-window archs (mixtral) the attention cache is a ring buffer of
+``window`` slots — decode at 500k context holds 4096 entries, not 500k
+(this is what makes the mixtral long_500k cell feasible).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import LayerGroup, ModelConfig
+
+
+def attn_cache_len(cfg: ModelConfig, context_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, context_len)
+    return context_len
+
+
+def write_index(cfg: ModelConfig, pos: jax.Array, cache_len: int) -> jax.Array:
+    """Ring-buffer write slot for the attention cache."""
+    if cfg.sliding_window is not None:
+        return pos % cache_len
+    return pos
+
+
+def _kind_cache(kind: str, cfg: ModelConfig, B: int, T: int,
+                enc_len: int = 0) -> dict:
+    """Concrete zero-initialized cache for one block."""
+    KV, Dh, H, D = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads, cfg.d_model
+    if kind.startswith("attn"):
+        c = {
+            "k": jnp.zeros((B, T, KV, Dh), cfg.dtype),
+            "v": jnp.zeros((B, T, KV, Dh), cfg.dtype),
+            "pos": jnp.full((B, T), -1, jnp.int32),
+        }
+        if kind == "attn_cross":
+            c["xk"] = jnp.zeros((B, enc_len, KV, Dh), cfg.dtype)
+            c["xv"] = jnp.zeros((B, enc_len, KV, Dh), cfg.dtype)
+            c["xpos"] = jnp.full((B, enc_len), -1, jnp.int32)
+        return c
+    if kind.startswith("mamba"):
+        Di = cfg.ssm.expand * D
+        return {
+            "h": jnp.zeros((B, Di, cfg.ssm.d_state), jnp.float32),
+            "conv": jnp.zeros((B, cfg.ssm.d_conv - 1, Di), cfg.dtype),
+        }
+    if kind == "mlstm":
+        Di = int(cfg.xlstm.mlstm_proj_factor * D)
+        dh = Di // H
+        return {
+            "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((B, H, dh), jnp.float32),
+            "m": jnp.full((B, H), -jnp.inf, jnp.float32),
+            "conv": jnp.zeros((B, cfg.xlstm.conv_window - 1, Di), jnp.float32),
+        }
+    if kind == "slstm":
+        dh = D // H
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        return {"c": z, "n": z,
+                "m": jnp.full((B, H, dh), -jnp.inf, jnp.float32), "h": z}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, context_len: int,
+               enc_len: int = 0) -> list:
+    """Zero cache for decode-from-scratch (or dry-run input specs)."""
+    T = attn_cache_len(cfg, context_len)
+    caches = []
+    for g in cfg.groups:
+        per = {f"sub{j}": _kind_cache(k, cfg, batch, T, enc_len)
+               for j, k in enumerate(g.pattern)}
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (g.repeats,) + a.shape), per))
+    return caches
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, context_len: int,
+                   enc_len: int = 0) -> list:
+    """ShapeDtypeStruct version of init_cache (dry-run; no allocation)."""
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, context_len, enc_len)))
+
+
+def pad_prefill_cache(cfg: ModelConfig, caches: list, prefill_len: int,
+                      capacity: int, enc_len: int = 0) -> list:
+    """Convert ``run_groups(collect_cache=True)`` output into decode caches.
+
+    Prefill k/v are [R,B,S,KV,Dh] where S may already be the trimmed SWA
+    window (block_forward keeps only the last ``window`` entries, so a 32k
+    mixtral prefill never materializes 32k KV per layer); the entries'
+    absolute positions are ``prefill_len - S .. prefill_len - 1``.  Pads /
+    tail-slices the T axis to the decode capacity and, for ring-buffer
+    archs, rolls entries to their ``pos % T`` slots.
+    """
+    out = []
+    for g, gc in zip(cfg.groups, caches):
+        per = {}
+        for j, kind in enumerate(g.pattern):
+            c = gc[f"sub{j}"]
+            if kind.startswith("attn"):
+                k, v = c["k"], c["v"]
+                R, B, S = k.shape[0], k.shape[1], k.shape[2]
+                T = attn_cache_len(cfg, capacity)
+                p_start = prefill_len - S          # absolute pos of entry 0
+                pos = jnp.broadcast_to(
+                    jnp.arange(p_start, prefill_len, dtype=jnp.int32),
+                    (R, B, S))
+                if S >= T:  # keep the window tail, ring-aligned
+                    start = S - T
+                    k, v, pos = (k[:, :, start:], v[:, :, start:],
+                                 pos[:, :, start:])
+                    if cfg.sliding_window is not None:
+                        # entry i holds pos p0+i and must sit at slot
+                        # (p0+i) % T -> roll right by p0 % T
+                        p0 = p_start + start
+                        shift = p0 % T
+                        k = jnp.roll(k, shift, axis=2)
+                        v = jnp.roll(v, shift, axis=2)
+                        pos = jnp.roll(pos, shift, axis=2)
+                else:
+                    padT = T - S
+                    k = jnp.pad(k, ((0, 0), (0, 0), (0, padT), (0, 0), (0, 0)))
+                    v = jnp.pad(v, ((0, 0), (0, 0), (0, padT), (0, 0), (0, 0)))
+                    pos = jnp.pad(pos, ((0, 0), (0, 0), (0, padT)),
+                                  constant_values=-1)
+                nc = {"k": k, "v": v, "pos": pos}
+                if kind == "attn_cross":
+                    R_, B_ = c["xk"].shape[0], c["xk"].shape[1]
+                    nc["xk"], nc["xv"] = c["xk"], c["xv"]
+                    nc["xpos"] = jnp.broadcast_to(
+                        jnp.arange(c["xk"].shape[2], dtype=jnp.int32),
+                        (R_, B_, c["xk"].shape[2]))
+                per[f"sub{j}"] = nc
+            else:
+                per[f"sub{j}"] = c
+        out.append(per)
+    return out

@@ -1,0 +1,68 @@
+"""Serve steps: prefill (context -> caches) and decode (one token).
+
+These are the functions the dry-run lowers for the ``prefill_*`` /
+``decode_*`` / ``long_*`` shapes, and the engine (serve/engine.py) jits for
+actual batched serving.  Activation-sharding rules come from the Plan the
+same way the train step's do, so the serving path exercises the identical
+distribution machinery.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import Plan
+from repro.models.api import (model_decode_step, model_prefill)
+from repro.models.common import ModelConfig
+from repro.models.sharding import activation_sharding
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    """logits [B,1,V] (possibly vocab-sharded) -> next token [B] int32."""
+    return jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1) \
+        .astype(jnp.int32)
+
+
+def temperature_sample(logits: jax.Array, key: jax.Array,
+                       temperature: float = 1.0) -> jax.Array:
+    scaled = logits[:, -1].astype(jnp.float32) / max(temperature, 1e-4)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(cfg: ModelConfig, plan: Plan, mesh, *,
+                      capacity: int) -> Callable:
+    """(params, batch) -> (next_token [B], caches).
+
+    ``capacity`` is the decode-cache length the caches are padded to
+    (ring-buffer size for SWA archs).
+    """
+    rules = dict(plan.act_rules)
+    rules["mesh"] = mesh
+
+    def prefill(params, batch):
+        with activation_sharding(rules):
+            logits, caches = model_prefill(params, batch, cfg, capacity,
+                                           last_only=True)
+            return greedy_sample(logits), caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, plan: Plan, mesh) -> Callable:
+    """(params, token [B,1], caches, pos [B]) -> (next [B], caches).
+
+    ``pos`` is the absolute position of the *incoming* token; ring-buffer
+    write indices for SWA archs are derived inside (kvcache.write_index).
+    """
+    rules = dict(plan.act_rules)
+    rules["mesh"] = mesh
+
+    def decode(params, token, caches, pos):
+        with activation_sharding(rules):
+            logits, caches = model_decode_step(params, token, caches, cfg,
+                                               pos=pos)
+            return greedy_sample(logits), caches
+
+    return decode

@@ -1,0 +1,2 @@
+from repro.train.state import TrainState, init_train_state, train_state_shardings
+from repro.train.steps import make_train_step

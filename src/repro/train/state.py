@@ -1,0 +1,86 @@
+"""Train state: params + optimizer moments + (optional) error-feedback
+residual for compressed cross-pod gradient sync.
+
+The state is a plain NamedTuple pytree so it jits, checkpoints and reshards
+without adapters.  ``train_state_shardings`` derives every leaf's
+NamedSharding from the Plan — params by ``plan.param_rules``, moments by
+``zero1_rules`` (ZeRO-1: f32 moments additionally sharded over the DP axis),
+residual with a leading pod axis (it is per-pod local state).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.topology import Plan, zero1_rules
+from repro.models.common import (abstract_params, init_params,
+                                 partition_specs)
+from repro.optim.adamw import OptState, adamw_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    residual: Any          # EF residual pytree with leading pod dim, or ()
+
+
+def needs_residual(plan: Plan) -> bool:
+    return plan.grad_sync == "hierarchical_int8"
+
+
+def init_train_state(specs, key: jax.Array, plan: Plan,
+                     param_dtype=jnp.float32) -> TrainState:
+    """param_dtype=bf16 selects mixed precision: bf16 compute weights +
+    an f32 master copy inside the optimizer state (ZeRO-1 sharded)."""
+    params = init_params(specs, key, param_dtype)
+    opt = adamw_init(params)
+    residual = ()
+    if needs_residual(plan):
+        npods = plan.mesh_axes.get("pod", 1)
+        residual = jax.tree.map(
+            lambda p: jnp.zeros((npods,) + p.shape, jnp.float32), params)
+    return TrainState(params, opt, residual)
+
+
+def abstract_train_state(specs, plan: Plan,
+                         param_dtype=jnp.float32) -> TrainState:
+    """ShapeDtypeStruct version (dry-run; no allocation)."""
+    params = abstract_params(specs, param_dtype)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    mixed = param_dtype != jnp.float32
+    opt = OptState(mu=jax.tree.map(f32, params),
+                   nu=jax.tree.map(f32, params),
+                   count=jax.ShapeDtypeStruct((), jnp.int32),
+                   master=jax.tree.map(f32, params) if mixed else ())
+    residual = ()
+    if needs_residual(plan):
+        npods = plan.mesh_axes.get("pod", 1)
+        residual = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((npods,) + p.shape, jnp.float32),
+            params)
+    return TrainState(params, opt, residual)
+
+
+def train_state_pspecs(specs, plan: Plan,
+                       param_dtype=jnp.float32) -> TrainState:
+    """PartitionSpec pytree matching TrainState."""
+    p_specs = partition_specs(specs, plan.param_rules)
+    z_specs = partition_specs(specs, zero1_rules(plan))
+    mixed = param_dtype != jnp.float32
+    opt = OptState(mu=z_specs, nu=z_specs, count=P(),
+                   master=z_specs if mixed else ())
+    residual = ()
+    if needs_residual(plan):
+        residual = jax.tree.map(lambda s: P(*(("pod",) + tuple(s))), p_specs)
+    return TrainState(p_specs, opt, residual)
+
+
+def train_state_shardings(specs, plan: Plan, mesh,
+                          param_dtype=jnp.float32) -> TrainState:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        train_state_pspecs(specs, plan, param_dtype),
+                        is_leaf=lambda x: isinstance(x, P))

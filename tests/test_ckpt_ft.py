@@ -1,0 +1,118 @@
+"""Checkpoint + fault-tolerance tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.serialize import load_pytree, save_pytree
+from repro.configs import get_config, get_smoke_config
+from repro.core.topology import make_plan
+from repro.ft.elastic import best_mesh_shape, plan_remesh
+from repro.ft.health import all_healthy, check_devices
+from repro.ft.straggler import StragglerMonitor
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "b": {"c": jnp.arange(10, dtype=jnp.int32),
+                  "d": jnp.asarray(3.5, jnp.bfloat16)},
+            "lst": [jnp.ones((3,)), jnp.zeros((2, 2))]}
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(str(tmp_path / "ck"), t, step=5)
+    back = load_pytree(str(tmp_path / "ck"), t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_load_rejects_shape_mismatch(tmp_path):
+    t = _tree()
+    save_pytree(str(tmp_path / "ck"), t, step=0)
+    bad = dict(t, a=jnp.zeros((4, 16)))
+    with pytest.raises(ValueError, match="shape"):
+        load_pytree(str(tmp_path / "ck"), bad)
+
+
+def test_manager_rotation_and_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=2,
+                            async_save=False)
+    state = _tree()
+    for step in range(5):
+        state = jax.tree.map(lambda x: x + 1 if jnp.issubdtype(
+            x.dtype, jnp.floating) else x, state)
+        mgr.maybe_save(step, state)
+    assert mgr.checkpoints() == [3, 4]
+    restored, step = mgr.restore_latest(state)
+    assert step == 4
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(state["a"]))
+
+
+def test_manager_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep=3,
+                            async_save=True)
+    mgr.maybe_save(0, _tree())
+    mgr.wait()
+    assert mgr.checkpoints() == [0]
+
+
+def test_crash_safety_tmp_dir_ignored(tmp_path):
+    """A partial (crashed) write must not be seen as a checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), save_every=1, async_save=False)
+    mgr.maybe_save(0, _tree())
+    # simulate a crash mid-write: tmp dir + a step dir without manifest
+    os.makedirs(tmp_path / "step_000000099.tmp")
+    os.makedirs(tmp_path / "step_000000042")
+    assert mgr.checkpoints() == [0]
+    _, step = mgr.restore_latest(_tree())
+    assert step == 0
+
+
+# ---------------------------------------------------------------------------
+# ft
+# ---------------------------------------------------------------------------
+
+
+def test_device_health():
+    reports = check_devices()
+    assert all_healthy(reports)
+
+
+def test_straggler_escalation():
+    mon = StragglerMonitor(window=10, warn_ratio=1.5, remesh_ratio=2.5,
+                           abort_ratio=5.0, sustained=3)
+    for i in range(10):
+        assert mon.observe(i, 1.0).action == "ok"
+    # sustained 2x steps -> warn after `sustained` observations
+    acts = [mon.observe(10 + i, 2.0).action for i in range(4)]
+    assert acts[-1] == "warn"
+    acts = [mon.observe(20 + i, 3.0).action for i in range(4)]
+    assert acts[-1] == "remesh"
+    acts = [mon.observe(30 + i, 9.0).action for i in range(4)]
+    assert acts[-1] == "abort"
+    # slow samples never polluted the window
+    assert max(mon.times) <= 1.0
+
+
+def test_best_mesh_shape_preserves_tp():
+    assert best_mesh_shape(512, model_size=16, prefer_pods=2) == (2, 16, 16)
+    # lose a host (8 chips): 504 usable -> 31 data ranks
+    assert best_mesh_shape(504, model_size=16) == (31, 16)
+    assert best_mesh_shape(17, model_size=16) == (1, 16)
+
+
+def test_plan_remesh_preserves_global_batch():
+    cfg = get_config("gemma-2b")
+    old = make_plan(cfg, {"data": 16, "model": 16})
+    dec = plan_remesh(cfg, old_plan=old, n_surviving=128,
+                      global_batch=256, seq_len=4096, old_microbatches=1)
+    assert dec.mesh_shape == (8, 16)
+    assert dec.microbatches == 2            # DP 16->8 => 2x grad accum
+    assert "preserved" in dec.note

@@ -1,0 +1,209 @@
+"""core/ unit tests: fabric, topology plans, compression, PRBS, roofline
+pricing, HLO parsing (on a synthetic module)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import compression, linktest
+from repro.core.fabric import exanode_fabric, tpu_v5e_fabric
+from repro.core.hlo_analysis import analyze_hlo_text, parse_hlo
+from repro.core.roofline import (collective_time, model_flops,
+                                 roofline_from_record)
+from repro.core.topology import make_plan
+from repro.models.api import model_specs
+
+
+# ---------------------------------------------------------------------------
+# fabric / topology
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_tiers_ordered_and_mapped():
+    f = tpu_v5e_fabric(multi_pod=True)
+    assert f.bandwidth_for_axis("model") > f.bandwidth_for_axis("pod")
+    assert f.slowest_axis(["model", "data", "pod"]) == "pod"
+    ex = exanode_fabric()
+    assert ex.tier("sfp").bandwidth < ex.tier("lvds").bandwidth
+
+
+@pytest.mark.parametrize("arch,expect_mode", [
+    ("gemma-2b", "sequence"),       # MQA, 8 q-heads < 16
+    ("granite-20b", "heads"),       # 48 q-heads % 16 == 0 (MQA kv=1)
+    ("mixtral-8x7b", "heads"),      # 32 % 16 == 0
+    ("qwen3-4b", "heads"),
+])
+def test_plan_attention_modes(arch, expect_mode):
+    cfg = get_config(arch)
+    plan = make_plan(cfg, {"data": 16, "model": 16}, seq_len=4096)
+    assert plan.attn_mode == expect_mode
+
+
+def test_plan_moe_regimes():
+    mix = make_plan(get_config("mixtral-8x7b"), {"data": 16, "model": 16})
+    assert mix.moe_regime == "tp"           # 8 experts < 16-way axis
+    qw = make_plan(get_config("qwen3-moe-30b-a3b"), {"data": 16, "model": 16})
+    assert qw.moe_regime == "ep"            # 128 experts on 16-way axis
+    jam = make_plan(get_config("jamba-v0.1-52b"), {"data": 16, "model": 16})
+    assert jam.moe_regime == "ep"           # 16 experts on 16-way
+
+
+def test_plan_grad_sync_degrades_without_pod():
+    cfg = get_config("gemma-2b")
+    p = make_plan(cfg, {"data": 16, "model": 16},
+                  grad_sync="hierarchical_int8")
+    assert p.grad_sync == "hierarchical"
+    p2 = make_plan(cfg, {"pod": 2, "data": 16, "model": 16},
+                   grad_sync="hierarchical_int8")
+    assert p2.grad_sync == "hierarchical_int8"
+
+
+def test_plan_sequence_parallel_guard():
+    cfg = get_config("gemma-2b")
+    p = make_plan(cfg, {"data": 16, "model": 16}, seq_len=4096)
+    assert p.act_rules["seq_act"] == "model"
+    p2 = make_plan(cfg, {"data": 16, "model": 16}, seq_len=4096,
+                   sequence_parallel=False)
+    assert p2.act_rules["seq_act"] is None
+    p3 = make_plan(cfg, {"data": 16, "model": 16}, shape_kind="decode",
+                   seq_len=4096)
+    assert p3.act_rules["seq_act"] is None
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 5
+    q, s, meta = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, s, meta)
+    assert back.shape == x.shape
+    assert float(jnp.max(jnp.abs(back - x))) <= float(jnp.max(s)) / 2 + 1e-6
+
+
+def test_error_feedback_is_lossless_in_expectation():
+    """EF: sum over steps of sent == sum of true grads (telescoping)."""
+    key = jax.random.PRNGKey(1)
+    g_shape = (300,)
+    residual = jnp.zeros(g_shape)
+    total_sent = jnp.zeros(g_shape)
+    total_true = jnp.zeros(g_shape)
+    for i in range(20):
+        g = jax.random.normal(jax.random.fold_in(key, i), g_shape)
+        (sent,), (residual,) = compression.ef_compress((g,), (residual,))
+        total_sent += sent
+        total_true += g
+    # residual is exactly the un-sent mass
+    np.testing.assert_allclose(total_sent + residual, total_true,
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_compressed_bytes_accounting():
+    assert compression.compressed_bytes(1024.0) == 256 + 4.0
+    # ~4x reduction for large payloads
+    assert compression.compressed_bytes(1e9) < 0.27e9
+
+
+# ---------------------------------------------------------------------------
+# PRBS-31
+# ---------------------------------------------------------------------------
+
+
+def test_prbs31_recurrence_and_balance():
+    bits = linktest.prbs31_bits(1 << 14)
+    # recurrence b[n] = b[n-31] ^ b[n-28]
+    n = np.arange(31, len(bits))
+    assert np.all(bits[n] == (bits[n - 31] ^ bits[n - 28]))
+    # roughly balanced (PRBS property)
+    assert abs(float(bits.mean()) - 0.5) < 0.02
+    # deterministic
+    assert np.array_equal(bits[:64], linktest.prbs31_bits(64))
+
+
+def test_linktest_single_device_mesh():
+    mesh = jax.make_mesh((1,), ("model",))
+    reports = linktest.run_link_test(mesh, payload_bytes=1 << 10)
+    assert all(r.ok for r in reports)
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis (synthetic module)
+# ---------------------------------------------------------------------------
+
+SYNTH_HLO = """
+HloModule synth
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %iter = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %next = s32[] add(%iter, %one)
+  %x = f32[128,256] get-tuple-element(%p), index=1
+  %w = f32[256,256] constant(0)
+  %y = f32[128,256] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,256] all-reduce(%y), replica_groups=[16,16]<=[256], use_global_device_ids=true, channel_id=1, to_apply=%add
+  ROOT %t = (s32[], f32[128,256]) tuple(%next, %ar)
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %iter = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%iter, %lim), direction=LT
+}
+
+ENTRY %main (x: f32[128,256]) -> f32[128,256] {
+  %x = f32[128,256] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,256]) tuple(%zero, %x)
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_analysis_trip_count_and_collectives():
+    mesh = type("M", (), {})()
+    mesh.devices = np.empty((16, 16), object)
+    mesh.axis_names = ("data", "model")
+    rec = analyze_hlo_text(SYNTH_HLO, mesh)
+    # dot: 2*128*256*256 flops, x12 trips
+    assert rec["flops"] == pytest.approx(2 * 128 * 256 * 256 * 12)
+    (key, v), = [(k, v) for k, v in rec["collectives"].items()]
+    assert key == "all-reduce@model"        # groups of 16 consecutive ids
+    assert v["count"] == 12
+    assert v["bytes"] == pytest.approx(128 * 256 * 4 * 12)
+
+
+def test_roofline_pricing_tiers():
+    hlo = {"flops": 1e12, "mem_bytes": 1e9,
+           "collectives": {"all-reduce@pod": {"bytes": 1e8, "count": 1},
+                           "all-reduce@model": {"bytes": 1e8, "count": 1}}}
+    fab = tpu_v5e_fabric(multi_pod=True)
+    t, bd = collective_time(hlo, {"pod": 2, "data": 16, "model": 16}, fab)
+    # pod traffic priced on the slow tier: same bytes, more seconds
+    assert bd["pod"]["seconds"] > bd["model"]["seconds"]
+    # int8 pricing shrinks pod seconds ~4x
+    t8, bd8 = collective_time(hlo, {"pod": 2, "data": 16, "model": 16}, fab,
+                              int8_pod=True)
+    assert bd8["pod"]["seconds"] < 0.3 * bd["pod"]["seconds"]
+
+
+def test_model_flops_moe_discount():
+    cfg = get_config("mixtral-8x7b")
+    specs = model_specs(cfg)
+    f_train = model_flops(specs, cfg, tokens=1000, kind="train")
+    f_serve = model_flops(specs, cfg, tokens=1000, kind="decode")
+    assert f_train == pytest.approx(3 * f_serve)
+    # active params far below total (top-2 of 8 experts)
+    dense_equiv = 6 * 46e9 * 1000
+    assert f_train < 0.5 * dense_equiv

@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py
+oracles — the brief's required kernel validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(shape, dtype=jnp.float32, i=0, scale=1.0):
+    return (jax.random.normal(jax.random.fold_in(KEY, i), shape,
+                              jnp.float32) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("B,H,S,D", [(2, 4, 512, 64), (1, 2, 1024, 128),
+                                     (2, 1, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 128)])
+def test_flash_attention(B, H, S, D, dtype, causal, window):
+    q, k, v = (_rand((B, H, S, D), dtype, i) for i in range(3))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=128, bk=128)
+    want = ref.ref_attention(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,KV,T,D", [(2, 8, 2, 1024, 64),
+                                        (1, 4, 4, 512, 128),
+                                        (2, 4, 1, 512, 64)])
+@pytest.mark.parametrize("window", [0, 256])
+def test_decode_attention(B, H, KV, T, D, window):
+    q = _rand((B, H, D), i=1)
+    k = _rand((B, T, KV, D), i=2)
+    v = _rand((B, T, KV, D), i=3)
+    pos = jnp.array([T // 3, 2 * T // 3][:B], jnp.int32)
+    t_idx = jnp.arange(T, dtype=jnp.int32)
+    kv_pos = jnp.where(t_idx[None] <= pos[:, None], t_idx[None], -1)
+    out = ops.decode_attention(q, k, v, kv_pos, pos, window=window, bk=256)
+    G = H // KV
+    want = ref.ref_decode_attention(
+        q, jnp.repeat(k, G, axis=2), jnp.repeat(v, G, axis=2),
+        kv_pos, pos, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,S,dh,chunk", [(2, 4, 512, 64, 128),
+                                            (1, 2, 256, 128, 64),
+                                            (2, 2, 512, 32, 256)])
+def test_mlstm_scan(B, H, S, dh, chunk):
+    q = _rand((B, H, S, dh), i=1)
+    k = _rand((B, H, S, dh), i=2) * dh ** -0.5
+    v = _rand((B, H, S, dh), i=3)
+    ig = _rand((B, H, S), i=4)
+    fl = jax.nn.log_sigmoid(_rand((B, H, S), i=5) + 2.0)
+    out = ops.mlstm_scan(q, k, v, ig, fl, chunk=chunk)
+    tr = lambda t: t.swapaxes(1, 2)
+    C0 = jnp.zeros((B, H, dh, dh))
+    n0 = jnp.zeros((B, H, dh))
+    m0 = jnp.full((B, H), -jnp.inf)
+    y_ref, _ = ref.ref_mlstm_chunk(tr(q), tr(k), tr(v), tr(ig) if ig.ndim == 4
+                                   else ig.swapaxes(1, 2),
+                                   fl.swapaxes(1, 2), C0, n0, m0)
+    np.testing.assert_allclose(out, tr(y_ref), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,Di,N,chunk,dblk", [(2, 512, 256, 16, 128, 128),
+                                                 (1, 256, 512, 8, 256, 256)])
+def test_ssm_chunk_scan(B, S, Di, N, chunk, dblk):
+    dt = jax.nn.softplus(_rand((B, S, Di), i=1))
+    Bs = _rand((B, S, N), i=2)
+    Cs = _rand((B, S, N), i=3)
+    x = _rand((B, S, Di), i=4)
+    A = -jnp.exp(_rand((Di, N), i=5))
+    y, h = ops.ssm_chunk_scan(dt, Bs, Cs, x, A, chunk=chunk, dblk=dblk)
+    a = jnp.exp(dt[..., None] * A)
+    b = (dt * x)[..., None] * Bs[:, :, None, :]
+    y_ref, h_ref = ref.ref_mamba_chunk_scan(a, b, Cs)
+    np.testing.assert_allclose(y, y_ref, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(h, h_ref, atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("nb", [64, 256])
+def test_quantize_int8(nb):
+    x = _rand((nb, 256), i=6, scale=10.0)
+    q, s = ops.quantize_int8(x)
+    qr, sr = ref.ref_quantize_int8(x.reshape(-1))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(s, sr, atol=1e-6)
+    deq = ops.dequantize_int8(q, s)
+    # max error bounded by half a quantization step per block
+    assert float(jnp.max(jnp.abs(deq - x))) <= float(jnp.max(s)) / 2 + 1e-6
+
+
+@pytest.mark.parametrize("N,D,F", [(512, 128, 512), (256, 256, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swiglu_ffn(N, D, F, dtype):
+    x = _rand((N, D), dtype, i=7)
+    wg = _rand((D, F), dtype, i=8, scale=0.05)
+    wu = _rand((D, F), dtype, i=9, scale=0.05)
+    wd = _rand((F, D), dtype, i=10, scale=0.05)
+    y = ops.swiglu_ffn(x, wg, wu, wd, br=128, bf=256)
+    want = ref.ref_swiglu_ffn(x, wg, wu, wd)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(y.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=tol, rtol=tol)

@@ -1,0 +1,105 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core import compression, linktest
+from repro.core.roofline import _wire_bytes
+from repro.launch.specs import _fit_spec
+from repro.models.layers import cross_entropy
+from repro.serve.kvcache import write_index
+from repro.configs import get_smoke_config
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(arrays(np.float32, st.integers(1, 500),
+              elements=st.floats(-1e3, 1e3, width=32)))
+def test_quantization_error_bounded_by_half_step(x):
+    """∀x: |dequant(quant(x)) - x| ≤ scale/2 elementwise per block."""
+    xj = jnp.asarray(x)
+    q, s, meta = compression.quantize_int8(xj, block=64)
+    back = compression.dequantize_int8(q, s, meta)
+    n = x.shape[0]
+    pad = (-n) % 64
+    scales = np.repeat(np.asarray(s), 64)[:n]
+    err = np.abs(np.asarray(back) - x)
+    assert np.all(err <= scales / 2 + 1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       st.integers(1, 4), st.integers(1, 32), st.integers(1, 32))
+def test_fit_spec_only_assigns_divisible_axes(shape, npod, ndata, nmodel):
+    """The spec fitter never assigns an axis that does not divide the dim,
+    and never uses a mesh axis twice."""
+    axes = {"pod": npod, "data": ndata, "model": nmodel}
+    prefs = [[("pod", "data"), "model", "data"] for _ in shape]
+    spec = _fit_spec(tuple(shape), prefs, axes)
+    used = []
+    for dim, entry in zip(shape, tuple(spec)):
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        size = 1
+        for nm in names:
+            size *= axes[nm]
+            used.append(nm)
+        assert dim % size == 0
+    assert len(used) == len(set(used))
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 20), st.integers(1, 2 ** 16))
+def test_ring_write_index_in_range(pos, window):
+    cfg = get_smoke_config("mixtral-8x7b").scaled(sliding_window=window)
+    idx = int(write_index(cfg, jnp.asarray(pos), window))
+    assert 0 <= idx < window
+    # consecutive positions map to consecutive slots (mod window)
+    idx2 = int(write_index(cfg, jnp.asarray(pos + 1), window))
+    assert idx2 == (idx + 1) % window
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.floats(1.0, 1e9))
+def test_wire_bytes_monotone_and_bounded(p, payload):
+    """Ring formulas: wire bytes < 2*payload, increasing in p."""
+    ar = _wire_bytes("all-reduce", payload, p)
+    ag = _wire_bytes("all-gather", payload, p)
+    assert 0 < ar < 2 * payload
+    assert 0 < ag < payload
+    assert _wire_bytes("all-reduce", payload, p) >= \
+        _wire_bytes("all-reduce", payload, max(2, p - 1)) - 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 3), st.integers(2, 16), st.integers(2, 50))
+def test_cross_entropy_uniform_logits_is_log_v(b, s, v):
+    """CE of constant logits == log(V) regardless of labels."""
+    logits = jnp.zeros((b, s, v))
+    labels = jnp.zeros((b, s), jnp.int32)
+    got = float(cross_entropy(logits, labels))
+    assert abs(got - float(jnp.log(v))) < 1e-5
+
+
+@settings(**SETTINGS)
+@given(st.integers(32, 4096))
+def test_prbs31_deterministic_prefix(n):
+    a = linktest.prbs31_bits(n)
+    b = linktest.prbs31_bits(n + 17)
+    assert np.array_equal(a, b[:n])
+
+
+@settings(**SETTINGS)
+@given(arrays(np.float32, st.tuples(st.integers(1, 8), st.integers(1, 64)),
+              elements=st.floats(-100, 100, width=32)))
+def test_ef_residual_telescopes(g):
+    """After one EF step: sent + residual == grad + old_residual exactly."""
+    gj = jnp.asarray(g)
+    r0 = jnp.zeros_like(gj)
+    (sent,), (r1,) = compression.ef_compress((gj,), (r0,))
+    np.testing.assert_allclose(np.asarray(sent + r1), g, atol=1e-5)
