@@ -1,0 +1,163 @@
+"""Serve-engine throughput: fast path vs the pre-PR legacy engine.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+
+Measures decode tokens/s and admissions/s for the same mixed-length request
+flood on (a) ``_LegacyEngine`` — a faithful replica of the pre-fast-path
+engine (one prefill jit call per request, full-cache ``tree.map`` splice,
+host-blocking token collection every tick, int64 host positions) — and
+(b) the current ``ServeEngine`` (donated in-place caches, batched bucketed
+admission, double-buffered async collection).  Both run the reference
+decode-attention path so the comparison isolates the data-path changes.
+
+``--smoke`` shrinks the flood for CI; the speedup line is emitted either
+way (benchmarks/common.py CSV convention).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_smoke_config
+from repro.core.topology import make_plan
+from repro.models.api import model_specs
+from repro.models.common import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.steps import make_decode_step, make_prefill_step
+
+
+class _LegacyEngine:
+    """Pre-fast-path ServeEngine, kept verbatim as the benchmark baseline:
+    per-request prefill, O(num_slots x capacity) admission splice, one
+    blocking device->host sync per tick."""
+
+    def __init__(self, cfg, plan, mesh, params, *, num_slots=4, capacity=128):
+        from repro.serve import kvcache
+        self.cfg, self.params = cfg, params
+        self.num_slots, self.capacity = num_slots, capacity
+        self._prefill = jax.jit(make_prefill_step(cfg, plan, mesh,
+                                                  capacity=capacity))
+        self._decode = jax.jit(make_decode_step(cfg, plan, mesh,
+                                                attn_impl="ref"))
+        self.slot_req = [None] * num_slots
+        self.slot_pos = np.zeros(num_slots, np.int64)
+        self.caches = kvcache.init_cache(cfg, num_slots, capacity)
+        self.tokens = np.zeros((num_slots, 1), np.int32)
+        self.queue: list = []
+        self.finished: list = []
+        self.tokens_out = 0
+        self.admitted = 0
+
+    def submit(self, req):
+        self.queue.append(req)
+
+    def _admit(self, slot, req):
+        prompt = jnp.asarray(req.prompt[None, :])
+        next_tok, pc = self._prefill(self.params, {"tokens": prompt})
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[:, slot:slot + 1].set(
+                one.astype(full.dtype)),
+            self.caches, pc)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = len(req.prompt)
+        self.tokens[slot, 0] = int(next_tok[0])
+        req.generated.append(int(next_tok[0]))
+        self.admitted += 1
+
+    def tick(self):
+        for slot in range(self.num_slots):
+            if self.slot_req[slot] is None and self.queue:
+                self._admit(slot, self.queue.pop(0))
+        if not any(r is not None for r in self.slot_req):
+            return False
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        nxt, self.caches = self._decode(
+            self.params, jnp.asarray(self.tokens), self.caches, pos)
+        nxt = np.asarray(nxt)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            self.tokens[slot, 0] = tok
+            self.slot_pos[slot] += 1
+            self.tokens_out += 1
+            if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
+                self.finished.append(req)
+                self.slot_req[slot] = None
+                self.slot_pos[slot] = 0
+        return True
+
+    def run_to_completion(self, max_ticks=10_000):
+        for _ in range(max_ticks):
+            if not self.tick() and not self.queue:
+                break
+
+
+def _requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(4, 17)),
+                                        dtype=np.int32),
+                    max_new_tokens=int(rng.integers(6, 13)))
+            for i in range(n)]
+
+
+def _run(make_engine, cfg, n_requests) -> dict:
+    # warmup pass compiles prefill buckets + decode outside the timed window
+    warm = make_engine()
+    for r in _requests(cfg, 4, seed=99):
+        warm.submit(r)
+    warm.run_to_completion()
+
+    eng = make_engine()
+    reqs = _requests(cfg, n_requests)
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    wall = time.perf_counter() - t0
+    toks = getattr(eng, "stats", eng).tokens_out
+    admitted = getattr(eng, "stats", eng).admitted
+    assert len(eng.finished) == n_requests, len(eng.finished)
+    return {"wall": wall, "tok_s": toks / wall, "adm_s": admitted / wall}
+
+
+def main(smoke: bool = False):
+    n_requests = 8 if smoke else 24
+    num_slots, capacity = 4, 64
+    cfg = get_smoke_config("llama3.2-3b")
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    plan = make_plan(cfg, {})
+
+    legacy = _run(lambda: _LegacyEngine(cfg, plan, None, params,
+                                        num_slots=num_slots,
+                                        capacity=capacity),
+                  cfg, n_requests)
+    fast = _run(lambda: ServeEngine(cfg, plan, None, params,
+                                    num_slots=num_slots, capacity=capacity,
+                                    attn_impl="ref"),
+                cfg, n_requests)
+
+    emit("serve_legacy_us_per_req", legacy["wall"] * 1e6 / max(1, n_requests),
+         f"tok_s={legacy['tok_s']:.1f} adm_s={legacy['adm_s']:.2f}")
+    emit("serve_fast_us_per_req", fast["wall"] * 1e6 / max(1, n_requests),
+         f"tok_s={fast['tok_s']:.1f} adm_s={fast['adm_s']:.2f}")
+    speed = fast["tok_s"] / legacy["tok_s"]
+    adm = fast["adm_s"] / legacy["adm_s"]
+    print(f"# serve fast path: {speed:.2f}x decode tokens/s, "
+          f"{adm:.2f}x admissions/s "
+          f"(legacy {legacy['tok_s']:.1f} -> fast {fast['tok_s']:.1f} tok/s)",
+          flush=True)
+    if not smoke:
+        assert speed >= 1.3, f"fast path regressed: {speed:.2f}x < 1.3x"
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -12,13 +12,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_collectives, bench_linktest, bench_memtest,
-                            bench_roofline, bench_step)
+                            bench_roofline, bench_serve, bench_step)
     sections = [
         ("linktest (paper §III.b IBERT/PRBS-31)", bench_linktest.main),
         ("memtest (paper §III.b DDR soak)", bench_memtest.main),
         ("collectives (paper thesis: tiered vs flat)",
          bench_collectives.main),
         ("step timing (smoke-scale, CPU wall)", bench_step.main),
+        ("serve engine (fast path vs legacy)", bench_serve.main),
         ("roofline (from dry-run records)", bench_roofline.main),
     ]
     failed = []

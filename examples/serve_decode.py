@@ -3,10 +3,12 @@
     PYTHONPATH=src python examples/serve_decode.py
 
 Mixed prompt lengths and generation budgets arrive faster than slots
-exist; the engine admits into free slots via prefill, decodes all active
-slots in lock-step, and reports throughput + latency percentiles.  Uses
+exist; the engine admits into free slots via batched prefill, decodes all
+active slots in lock-step with donated in-place caches and double-buffered
+token collection, and reports throughput + latency percentiles.  Uses
 mixtral's smoke config so the MoE routing and the SWA ring-buffer KV cache
-are on the serving path.
+are on the serving path (SWA admission buckets are exact prompt lengths,
+so same-length arrivals still share one prefill call).
 """
 import os
 import sys
@@ -47,8 +49,10 @@ def main():
     ttft = sorted(r.first_token_at - r.submitted_at for r in eng.finished)
     pick = lambda xs, q: xs[min(len(xs) - 1, int(q * len(xs)))]
     print(f"engine: {stats.summary}")
-    print(f"throughput: {stats.tokens_out / wall:.1f} tok/s "
-          f"({stats.tokens_out} tokens in {wall:.2f}s)")
+    print(f"throughput: {stats.tokens_out / wall:.1f} tok/s, "
+          f"{stats.admitted / wall:.2f} admissions/s "
+          f"({stats.tokens_out} tokens in {wall:.2f}s, "
+          f"{stats.prefill_calls} prefill calls)")
     print(f"latency p50={pick(lat, .5):.3f}s p95={pick(lat, .95):.3f}s  "
           f"ttft p50={pick(ttft, .5):.3f}s")
     assert stats.finished == n_requests

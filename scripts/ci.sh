@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 test suite + serve-path smoke benchmark on CPU.
+#
+#     bash scripts/ci.sh
+#
+# Mirrors ROADMAP.md's tier-1 verify command and adds the serve fast-path
+# smoke run so data-path regressions (admission batching, donation, kernel
+# fallback) are caught even when no unit test covers the exact shape.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== serve fast-path smoke benchmark =="
+python -m benchmarks.bench_serve --smoke
+
+echo "CI OK"

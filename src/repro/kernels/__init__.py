@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Public surface: ``repro.kernels.ops`` (interpret-mode aware jit wrappers)
+# and ``repro.kernels.ref`` (pure-jnp oracles).  The serve engine's decode
+# hot loop pulls ``ops.decode_attention`` (flash-decode) through
+# ``models.attention.attention_decode`` when the active sharding rules set
+# ``decode_attn_impl = "pallas"`` (see serve/steps.py for the backend
+# selection policy).
+
+__all__ = ["ops", "ref"]

@@ -79,7 +79,9 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
     bk = min(bk, T)
-    assert T % bk == 0, (T, bk)
+    while T % bk:        # shrink to a divisor (serve capacities vary)
+        bk //= 2
+    assert bk >= 1, (T, bk)
     scale = D ** -0.5
 
     qg = q.reshape(B, KV, G, D)

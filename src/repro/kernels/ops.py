@@ -1,9 +1,10 @@
 """jit'd public wrappers over the Pallas kernels.
 
-``interpret`` defaults to True because this container is CPU-only (the
-brief's validation mode); the launchers flip it to False on real TPUs via
-``set_interpret_mode``.  Every op has a pure-jnp oracle in ref.py and a
-sweep test in tests/test_kernels.py.
+``interpret`` resolves per-backend: compiled on TPU, interpreter everywhere
+else (this container is CPU-only — the brief's validation mode).  Nothing
+has to remember to flip it for production; ``set_interpret_mode`` remains
+as an explicit override for experiments.  Every op has a pure-jnp oracle in
+ref.py and a sweep test in tests/test_kernels.py.
 """
 from __future__ import annotations
 
@@ -17,45 +18,52 @@ from repro.kernels import mlstm_scan as _ml
 from repro.kernels import quant as _q
 from repro.kernels import ssm_scan as _ssm
 
-_INTERPRET = True
+_INTERPRET: bool | None = None   # None = auto (backend-resolved per call)
 
 
-def set_interpret_mode(on: bool):
-    """False on real TPU hardware; True (default) on CPU."""
+def set_interpret_mode(on: bool | None):
+    """Explicit override: False forces compiled kernels, True forces the
+    interpreter, None restores backend auto-detection."""
     global _INTERPRET
     _INTERPRET = on
 
 
+def _interpret() -> bool:
+    if _INTERPRET is None:
+        return jax.default_backend() != "tpu"
+    return _INTERPRET
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, **kw):
-    kw.setdefault("interpret", _INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return _fa.flash_attention(q, k, v, causal=causal, window=window, **kw)
 
 
 def decode_attention(q, k, v, kv_pos, pos, *, window=0, **kw):
-    kw.setdefault("interpret", _INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return _da.decode_attention(q, k, v, kv_pos, pos, window=window, **kw)
 
 
 def mlstm_scan(q, k, v, i_gate, f_log, *, chunk=256, **kw):
-    kw.setdefault("interpret", _INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return _ml.mlstm_scan(q, k, v, i_gate, f_log, chunk=chunk, **kw)
 
 
 def ssm_chunk_scan(dt, B_ssm, C_ssm, x, A, *, chunk=256, **kw):
-    kw.setdefault("interpret", _INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return _ssm.ssm_chunk_scan(dt, B_ssm, C_ssm, x, A, chunk=chunk, **kw)
 
 
 def quantize_int8(x, **kw):
-    kw.setdefault("interpret", _INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return _q.quantize_int8(x, **kw)
 
 
 def dequantize_int8(q, scale, **kw):
-    kw.setdefault("interpret", _INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return _q.dequantize_int8(q, scale, **kw)
 
 
 def swiglu_ffn(x, w_gate, w_up, w_down, **kw):
-    kw.setdefault("interpret", _INTERPRET)
+    kw.setdefault("interpret", _interpret())
     return _ffn.swiglu_ffn(x, w_gate, w_up, w_down, **kw)

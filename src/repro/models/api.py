@@ -42,22 +42,28 @@ def model_forward(params, batch, cfg: ModelConfig):
 
 
 def model_prefill(params, batch, cfg: ModelConfig, capacity: int,
-                  last_only: bool = False):
+                  last_only: bool = False, last_index=None):
     """Full-context forward that also returns decode-ready caches.
 
     ``last_only`` returns logits for the final position only ([B,1,V]) —
-    the serving path never materializes full prefill logits."""
+    the serving path never materializes full prefill logits.  ``last_index``
+    [B] int32 selects a per-row last position instead (right-padded batched
+    admission; pad rows carry garbage past their true length)."""
     if cfg.encoder:
         logits, _, caches, _ = ed.encdec_forward(
             params, batch["tokens"], batch["audio_embeds"], cfg,
             attn_mode=cfg.attn_mode, collect_cache=True,
-            last_only=last_only)
+            last_only=last_only, last_index=last_index)
         enc_len = batch["audio_embeds"].shape[1]
     else:
+        extra = batch.get("extra_embeds")
+        li = last_index
+        if li is not None and extra is not None:
+            li = li + extra.shape[1]   # frontend embeds shift real positions
         logits, _, caches = lm.lm_forward(
             params, batch["tokens"], cfg, attn_mode=cfg.attn_mode,
-            extra_embeds=batch.get("extra_embeds"), collect_cache=True,
-            last_only=last_only)
+            extra_embeds=extra, collect_cache=True,
+            last_only=last_only, last_index=li)
         enc_len = 0
     prefill_len = batch["tokens"].shape[1]
     extra = batch.get("extra_embeds")

@@ -198,6 +198,19 @@ def attention(x: jax.Array, params: dict, cfg: ModelConfig, *,
 # ---------------------------------------------------------------------------
 
 
+def pallas_decode_supported(cfg: ModelConfig, cache_len: int,
+                            cross: bool = False) -> bool:
+    """Whether the Pallas flash-decode kernel can serve this decode shape.
+
+    The kernel has no logit-softcap or cross-attention variant, and its kv
+    grid needs the cache length to split into equal blocks (T <= bk or
+    T % bk == 0)."""
+    from repro.kernels.decode_attention import DEFAULT_BK
+    return (not cross
+            and cfg.attn_logit_softcap is None
+            and (cache_len <= DEFAULT_BK or cache_len % DEFAULT_BK == 0))
+
+
 def attention_decode(x: jax.Array, params: dict, cfg: ModelConfig, *,
                      k_cache: jax.Array, v_cache: jax.Array,
                      kv_positions: jax.Array, pos: jax.Array,
@@ -239,6 +252,20 @@ def attention_decode(x: jax.Array, params: dict, cfg: ModelConfig, *,
         k_cache = k_cache.at[b, write_idx].set(k_new[:, 0])
         v_cache = v_cache.at[b, write_idx].set(v_new[:, 0])
         kv_positions = kv_positions.at[b, write_idx].set(pos)
+
+    rules = current_rules() or {}
+    if (rules.get("decode_attn_impl") == "pallas"
+            and pallas_decode_supported(cfg, k_cache.shape[1], cross=cross)):
+        # Flash-decode Pallas kernel: online softmax over kv blocks, never
+        # materializes the [T] score vector in HBM.  Positional masking
+        # (incl. the SWA ring buffer) matches the jnp path below.
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.decode_attention(
+            q[:, 0], k_cache, v_cache, kv_positions, pos,
+            window=cfg.sliding_window or 0)
+        y = jnp.einsum("bshk,hkd->bsd", out[:, None],
+                       params["wo"].astype(x.dtype))
+        return y, k_cache, v_cache, kv_positions
 
     q = q.reshape(B, 1, KV, G, Dh)
     if cross:

@@ -64,7 +64,7 @@ def encode(params, audio_embeds, cfg: ModelConfig, *, attn_mode="heads"):
 
 def encdec_forward(params, tokens, audio_embeds, cfg: ModelConfig, *,
                    attn_mode: str = "heads", collect_cache: bool = False,
-                   last_only: bool = False):
+                   last_only: bool = False, last_index=None):
     dec_cfg = _dec_groups(cfg)
     memory = encode(params, audio_embeds, cfg, attn_mode=attn_mode)
     x = _embed(params, tokens, dec_cfg)
@@ -72,7 +72,10 @@ def encdec_forward(params, tokens, audio_embeds, cfg: ModelConfig, *,
     x, aux, caches = run_groups(x, params["groups"], dec_cfg, positions=pos,
                                 attn_mode=attn_mode, memory=memory,
                                 collect_cache=collect_cache)
-    if last_only:
+    if last_index is not None:
+        x = jnp.take_along_axis(
+            x, last_index.astype(jnp.int32)[:, None, None], axis=1)
+    elif last_only:
         x = x[:, -1:]
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(x, _unembed_table(params, cfg), cfg)

@@ -54,12 +54,14 @@ def _unembed_table(params, cfg: ModelConfig):
 def lm_forward(params, tokens, cfg: ModelConfig, *,
                positions=None, attn_mode: str = "heads",
                extra_embeds=None, collect_cache: bool = False,
-               last_only: bool = False):
+               last_only: bool = False, last_index=None):
     """tokens [B,S] -> logits [B,S_total,V] (vocab-sharded).
 
     ``extra_embeds`` [B,F,D] (vision/audio stub embeddings) are prepended;
     positions then cover the concatenated sequence.  ``last_only`` projects
-    logits for the final position only (serving prefill: [B,1,V])."""
+    logits for the final position only (serving prefill: [B,1,V]);
+    ``last_index`` [B] int32 picks a per-row position instead (right-padded
+    batched prefill — rows of different true lengths in one call)."""
     x = _embed(params, tokens, cfg, positions)
     if extra_embeds is not None:
         x = jnp.concatenate([extra_embeds.astype(cfg.dtype), x], axis=1)
@@ -69,7 +71,10 @@ def lm_forward(params, tokens, cfg: ModelConfig, *,
     x, aux, caches = run_groups(
         x, params["groups"], cfg, positions=positions, attn_mode=attn_mode,
         collect_cache=collect_cache)
-    if last_only:
+    if last_index is not None:
+        x = jnp.take_along_axis(
+            x, last_index.astype(jnp.int32)[:, None, None], axis=1)
+    elif last_only:
         x = x[:, -1:]
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(x, _unembed_table(params, cfg), cfg)

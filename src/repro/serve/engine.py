@@ -1,22 +1,62 @@
 """Continuous-batching serve engine.
 
 A fixed pool of ``num_slots`` decode slots runs in lock-step (one jitted
-decode step per tick).  Requests are admitted into free slots via a
-single-sequence prefill, finished sequences (EOS or max_tokens) free their
-slot.  This is the vLLM-style iteration-level scheduler reduced to its
-JAX-native core: static shapes (slot-padded), no re-compilation when the
-working set changes.
+decode step per tick).  Requests are admitted into free slots via batched
+prefill, finished sequences (EOS or max_tokens) free their slot.  This is
+the vLLM-style iteration-level scheduler reduced to its JAX-native core:
+static shapes (slot-padded), no re-compilation when the working set
+changes.
 
 The engine is deliberately host-driven — admission and eviction are Python;
 only the hot loop (decode step over all slots) is jitted.  Inactive slots
-still compute but their cache writes land at write-protected positions
-(pos = -1 slots attend to nothing and their outputs are discarded).
+still compute: their outputs are discarded and their cache writes are junk
+that attends to nothing (the entries' positions exceed every live query)
+and is fully overwritten by the admission splice when the slot is reused.
+
+Serving fast path
+-----------------
+
+The data path is built for throughput; four mechanisms keep the device hot
+and the host off the critical path:
+
+* **Donated in-place state.**  The decode step and the admission splice are
+  jitted with ``donate_argnums`` on the slot-stacked cache pytree, and the
+  splice writes each admitted row with ``lax.dynamic_update_slice`` — XLA
+  updates the donated buffers in place, so admission costs O(slot), not
+  O(num_slots x capacity), and the per-tick cache update never copies the
+  pool.
+* **Batched, bucketed admission.**  Up to ``max_admit`` queued requests are
+  admitted per prefill call: consecutive same-bucket prompts are right-padded
+  to a power-of-two bucket length (capped at ``capacity``) and run through
+  one padded-batch prefill; the admission batch itself is padded to a
+  power-of-two row count by repeating the last request, so compilation count
+  is bounded by O(log buckets x log num_slots).  SWA (ring-buffer) archs use
+  exact prompt lengths as buckets — right-padding past the window would trim
+  real entries out of the ring.  Pad rows/columns are invalidated in the
+  cache (``kvcache.mask_prefill_pos``), and next tokens come from each row's
+  true last position (``last_index``).  Note the standard continuous-
+  batching caveat: batch-coupled compute (MoE expert-capacity drops) can
+  make a request's tokens depend on what it was admitted or decoded with —
+  true of every lock-step decode tick already, now of admission too.
+* **Async token collection.**  Tokens and positions are device-resident
+  int32 arrays advanced inside the jitted step; the device->host transfer is
+  double-buffered: each tick dispatches decode step *t*, then
+  ``jax.device_get``s step *t-1*'s tokens while *t* runs.  EOS/max_tokens
+  detection therefore lags one tick; the extra speculative token of a
+  finished slot is discarded at collection (``Request.done`` guard) and the
+  slot's junk writes are fully overwritten at re-admission.
+* **Kernel fallback rules.**  Decode attention resolves via
+  ``steps.resolve_decode_attn_impl``: the Pallas flash-decode kernel on
+  TPU-capable backends, the reference jnp softmax elsewhere (or when the
+  arch needs logit softcap / the cache length doesn't block evenly);
+  ``REPRO_DECODE_ATTN=pallas|ref`` overrides.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +79,7 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: float = 0.0
     finished_at: float = 0.0
+    done: bool = False
 
 
 @dataclass
@@ -47,28 +88,59 @@ class EngineStats:
     tokens_out: int = 0
     admitted: int = 0
     finished: int = 0
+    prefill_calls: int = 0
 
     @property
     def summary(self) -> str:
         return (f"ticks={self.ticks} tokens={self.tokens_out} "
-                f"admitted={self.admitted} finished={self.finished}")
+                f"admitted={self.admitted} finished={self.finished} "
+                f"prefills={self.prefill_calls}")
+
+
+def _install_admitted(caches, part, slots, tok, pos, next_tok, lengths):
+    """Jitted admission install: splice prefill caches into their slots and
+    seed the device-resident token/position arrays.  ``caches`` is donated
+    by the caller's jit wrapper; every write is a dynamic_update_slice so
+    XLA aliases in place.  Reverse order mirrors kvcache.splice_slots
+    (trailing rows are pad duplicates)."""
+    caches = kvcache.splice_slots(caches, part, slots)
+    for i in reversed(range(slots.shape[0])):
+        tok = jax.lax.dynamic_update_slice(
+            tok, next_tok[i:i + 1][:, None], (slots[i], 0))
+        pos = jax.lax.dynamic_update_slice(
+            pos, lengths[i:i + 1].astype(pos.dtype), (slots[i],))
+    return caches, tok, pos
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, plan: Plan, mesh, params, *,
-                 num_slots: int = 4, capacity: int = 128):
+                 num_slots: int = 4, capacity: int = 128,
+                 max_admit: Optional[int] = None,
+                 attn_impl: str = "auto", donate: bool = True):
         self.cfg, self.plan, self.mesh = cfg, plan, mesh
         self.params = params
         self.num_slots, self.capacity = num_slots, capacity
+        self.max_admit = max_admit if max_admit is not None else num_slots
         self._prefill = jax.jit(make_prefill_step(cfg, plan, mesh,
                                                   capacity=capacity))
-        self._decode = jax.jit(make_decode_step(cfg, plan, mesh))
-        # slot state (host side)
+        decode = make_decode_step(cfg, plan, mesh, attn_impl=attn_impl,
+                                  advance_pos=True)
+        donate_kw = dict(donate_argnums=(2,)) if donate else {}
+        self._decode = jax.jit(decode, **donate_kw)
+        splice_kw = dict(donate_argnums=(0,)) if donate else {}
+        self._splice = jax.jit(_install_admitted, **splice_kw)
+        # slot state: host-side bookkeeping + device-resident hot-loop state
         self.slot_req: list[Optional[Request]] = [None] * num_slots
-        self.slot_pos = np.zeros(num_slots, np.int64)     # next absolute pos
+        # Diagnostic host mirror of per-request progress (next absolute pos,
+        # 0 when free).  The hot loop never reads it — the authoritative
+        # position array is the device-resident ``_pos``, which also keeps
+        # advancing on inactive slots (harmless junk, reset at re-admission).
+        self.slot_pos = np.zeros(num_slots, np.int32)
         self.caches = kvcache.init_cache(cfg, num_slots, capacity)
-        self.tokens = np.zeros((num_slots, 1), np.int32)  # last emitted
-        self.queue: list[Request] = []
+        self._tok = jnp.zeros((num_slots, 1), jnp.int32)  # last emitted
+        self._pos = jnp.zeros((num_slots,), jnp.int32)
+        self._inflight = None   # (device tokens of step t-1, slot->req snap)
+        self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self.stats = EngineStats()
 
@@ -78,25 +150,76 @@ class ServeEngine:
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
 
-    def _admit(self, slot: int, req: Request):
-        """Prefill one request and splice its caches into ``slot``."""
-        prompt = jnp.asarray(req.prompt[None, :])         # [1, S]
-        batch = {"tokens": prompt}
+    def _bucket_len(self, n: int) -> int:
+        """Prefill padding bucket for a prompt of length ``n``.
+
+        Dense archs: next power of two (>= 8), capped at capacity so the
+        decode-cache tail-trim never drops real entries.  SWA archs: exact
+        length (padding past the window would push real KV out of the
+        ring)."""
+        if self.cfg.sliding_window is not None or n > self.capacity:
+            return n
+        b = 8
+        while b < n:
+            b *= 2
+        return min(b, self.capacity)
+
+    def _admit_batch(self) -> int:
+        """Admit consecutive same-bucket queued requests through one padded
+        batched prefill call per group.  Returns number admitted."""
+        admitted = 0
+        free = [s for s in range(self.num_slots)
+                if self.slot_req[s] is None]
+        while free and self.queue:
+            k = min(len(free), self.max_admit)
+            group = [self.queue.popleft()]
+            blen = self._bucket_len(len(group[0].prompt))
+            while (len(group) < k and self.queue and
+                   self._bucket_len(len(self.queue[0].prompt)) == blen):
+                group.append(self.queue.popleft())
+            slots, free = free[:len(group)], free[len(group):]
+            self._admit_group(slots, group, blen)
+            admitted += len(group)
+        return admitted
+
+    def _admit_group(self, slots: list, group: list, blen: int):
+        """One prefill call for ``group`` (same bucket), spliced into
+        ``slots``.  The batch is padded to a power-of-two row count by
+        repeating the last request (bounded recompilation); pad rows write
+        the same payload to the same slot."""
+        B = len(group)
+        Bp = 1 << (B - 1).bit_length()
+        toks = np.zeros((Bp, blen), np.int32)
+        lens = np.zeros(Bp, np.int32)
+        slot_ids = np.zeros(Bp, np.int32)
+        for i, (s, r) in enumerate(zip(slots, group)):
+            L = len(r.prompt)
+            toks[i, :L] = r.prompt
+            lens[i], slot_ids[i] = L, s
+        toks[B:] = toks[B - 1]
+        lens[B:], slot_ids[B:] = lens[B - 1], slot_ids[B - 1]
+
+        batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens)}
         next_tok, pc = self._prefill(self.params, batch)
-        # splice: every cache leaf [R, 1, ...] -> our [R, num_slots, ...]
-        self.caches = jax.tree.map(
-            lambda full, one: full.at[:, slot:slot + 1].set(
-                one.astype(full.dtype)),
-            self.caches, pc)
-        self.slot_req[slot] = req
-        self.slot_pos[slot] = len(req.prompt)
-        self.tokens[slot, 0] = int(next_tok[0])
-        req.generated.append(int(next_tok[0]))
-        req.first_token_at = time.perf_counter()
-        self.stats.admitted += 1
+        self.stats.prefill_calls += 1
+        self.caches, self._tok, self._pos = self._splice(
+            self.caches, pc, jnp.asarray(slot_ids), self._tok, self._pos,
+            next_tok, jnp.asarray(lens))
+        first = np.asarray(jax.device_get(next_tok)).reshape(-1)
+        now = time.perf_counter()
+        for i, (s, r) in enumerate(zip(slots, group)):
+            self.slot_req[s] = r
+            self.slot_pos[s] = lens[i]
+            tok = int(first[i])
+            r.generated.append(tok)
+            r.first_token_at = now
+            self.stats.admitted += 1
+            if len(r.generated) >= r.max_new_tokens or tok == r.eos_id:
+                self._free(s)     # degenerate: done at prefill
 
     def _free(self, slot: int):
         req = self.slot_req[slot]
+        req.done = True
         req.finished_at = time.perf_counter()
         self.finished.append(req)
         self.slot_req[slot] = None
@@ -105,34 +228,47 @@ class ServeEngine:
 
     # -- main loop ----------------------------------------------------------
 
-    def tick(self):
-        """Admit into free slots, run one decode step, collect tokens."""
-        for slot in range(self.num_slots):
-            if self.slot_req[slot] is None and self.queue:
-                self._admit(slot, self.queue.pop(0))
+    def _collect(self, inflight):
+        """Pull the previous tick's tokens to the host and apply them.
 
-        if not any(r is not None for r in self.slot_req):
-            return False
-
-        pos = jnp.asarray(self.slot_pos, jnp.int32)
-        nxt, self.caches = self._decode(
-            self.params, jnp.asarray(self.tokens), self.caches, pos)
-        nxt = np.asarray(nxt)
-        self.stats.ticks += 1
-
-        for slot, req in enumerate(self.slot_req):
-            if req is None:
+        Runs *after* the current step was dispatched, so the transfer
+        overlaps device compute.  Tokens of slots whose request already
+        finished (freed last tick, step was speculative) are discarded."""
+        tok_dev, reqs = inflight
+        vals = np.asarray(jax.device_get(tok_dev)).reshape(-1)
+        for slot, req in enumerate(reqs):
+            if req is None or req.done:
                 continue
-            tok = int(nxt[slot])
+            tok = int(vals[slot])
             req.generated.append(tok)
-            self.tokens[slot, 0] = tok
             self.slot_pos[slot] += 1
             self.stats.tokens_out += 1
-            done = (len(req.generated) >= req.max_new_tokens
-                    or tok == req.eos_id)
-            if done:
+            if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
                 self._free(slot)
-        return True
+
+    def tick(self) -> bool:
+        """Dispatch one decode step, collect the previous one, admit.
+
+        Order matters: dispatch first (device starts immediately), then the
+        host overlaps collection + admission bookkeeping with the running
+        step.  Admissions take effect on the next tick's step (the splice is
+        queued behind the step via its data dependency on the caches)."""
+        dispatched = None
+        if any(r is not None for r in self.slot_req):
+            tok, caches, pos = self._decode(self.params, self._tok,
+                                            self.caches, self._pos)
+            # the old cache buffer was donated — replace references now
+            self.caches, self._tok, self._pos = caches, tok, pos
+            dispatched = (tok, list(self.slot_req))
+            self.stats.ticks += 1
+
+        processed = self._inflight is not None
+        if processed:
+            self._collect(self._inflight)
+        self._inflight = dispatched
+
+        admitted = self._admit_batch()
+        return dispatched is not None or processed or admitted > 0
 
     def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
         for _ in range(max_ticks):

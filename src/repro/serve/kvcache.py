@@ -91,6 +91,52 @@ def abstract_cache(cfg: ModelConfig, batch: int, context_len: int,
         jax.eval_shape(lambda: init_cache(cfg, batch, context_len, enc_len)))
 
 
+def mask_prefill_pos(cfg: ModelConfig, caches: list,
+                     lengths: jax.Array) -> list:
+    """Invalidate right-pad entries after a padded batched prefill.
+
+    ``lengths`` [B] int32 true prompt lengths.  Every attention-cache entry
+    whose absolute position is >= its row's true length was produced by a
+    pad token: its ``pos`` is set to -1 (empty) so no decode step ever
+    attends to it.  K/V payloads stay in place — masking is positional
+    everywhere downstream, and dense/ring write indices overwrite the slots
+    as decode advances."""
+    out = []
+    for g, gc in zip(cfg.groups, caches):
+        per = {}
+        for j, kind in enumerate(g.pattern):
+            c = gc[f"sub{j}"]
+            if kind.startswith("attn"):
+                p = c["pos"]                              # [R, B, T]
+                keep = (p >= 0) & (p < lengths[None, :, None])
+                c = dict(c, pos=jnp.where(keep, p, -1))
+            per[f"sub{j}"] = c
+        out.append(per)
+    return out
+
+
+def splice_slots(full, part, slots: jax.Array):
+    """Write per-request prefill caches into decode slots, O(rows written).
+
+    ``full`` leaves are [R, num_slots, ...]; ``part`` leaves [R, B, ...]
+    (B = admitted batch); ``slots`` [B] int32 slot ids.  Each admitted row
+    lands via ``lax.dynamic_update_index_in_dim``, which XLA performs in
+    place when the caller donates ``full`` — unlike the full-cache
+    ``tree.map(.at[:, slot].set)`` splice this replaces, whose cost scaled
+    with num_slots x capacity.  Rows are written in reverse so duplicate
+    slot ids resolve to the *earliest* row: the engine pads admission
+    batches by repeating the last request, and batch-coupled compute (MoE
+    capacity dropping) can make a trailing duplicate differ from its
+    authentic row."""
+    def one(f, p):
+        p = p.astype(f.dtype)
+        for i in reversed(range(p.shape[1])):
+            f = jax.lax.dynamic_update_index_in_dim(f, p[:, i], slots[i],
+                                                    axis=1)
+        return f
+    return jax.tree.map(one, full, part)
+
+
 def pad_prefill_cache(cfg: ModelConfig, caches: list, prefill_len: int,
                       capacity: int, enc_len: int = 0) -> list:
     """Convert ``run_groups(collect_cache=True)`` output into decode caches.

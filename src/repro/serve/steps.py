@@ -5,10 +5,29 @@ These are the functions the dry-run lowers for the ``prefill_*`` /
 actual batched serving.  Activation-sharding rules come from the Plan the
 same way the train step's do, so the serving path exercises the identical
 distribution machinery.
+
+Serving fast path (engine-only knobs; the dry-run keeps the legacy
+contracts):
+
+* ``make_prefill_step`` accepts an optional ``batch["lengths"]`` [B] int32 —
+  right-padded multi-request admission batches.  Next-token logits are
+  gathered at each row's true last position and pad cache entries are
+  invalidated (``kvcache.mask_prefill_pos``) so decode never attends to
+  them.
+* ``make_decode_step(..., advance_pos=True)`` returns
+  ``(token [B,1], caches, pos+1)`` so the engine can keep tokens and
+  positions device-resident across ticks (no per-tick host round-trip).
+* ``make_decode_step(..., attn_impl=...)`` selects the decode attention:
+  ``"pallas"`` routes eligible layers through the flash-decode kernel
+  (kernels/decode_attention.py), ``"ref"`` keeps the jnp softmax path,
+  ``"auto"`` picks Pallas on TPU backends and the reference path elsewhere
+  (interpret-mode Pallas on CPU is for numerics, not speed).  The
+  ``REPRO_DECODE_ATTN`` env var overrides all of it.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import os
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +36,7 @@ from repro.core.topology import Plan
 from repro.models.api import (model_decode_step, model_prefill)
 from repro.models.common import ModelConfig
 from repro.models.sharding import activation_sharding
+from repro.serve import kvcache
 
 
 def greedy_sample(logits: jax.Array) -> jax.Array:
@@ -31,38 +51,84 @@ def temperature_sample(logits: jax.Array, key: jax.Array,
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
+def resolve_decode_attn_impl(impl: str, cfg: ModelConfig) -> str:
+    """Serve decode-attention backend policy.
+
+    "auto" -> "pallas" on TPU-capable backends, "ref" elsewhere.  Explicit
+    "pallas"/"ref" are honored as-is (CPU "pallas" runs the kernel in
+    interpret mode — the numerics-validation path).  ``REPRO_DECODE_ATTN``
+    overrides everything.  Archs the kernel cannot express (logit softcap)
+    resolve to "ref"; per-layer shape eligibility is still re-checked at
+    trace time (models.attention.pallas_decode_supported)."""
+    env = os.environ.get("REPRO_DECODE_ATTN", "").strip().lower()
+    if env in ("pallas", "ref"):
+        impl = env
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl not in ("pallas", "ref"):
+        raise ValueError(f"unknown decode attn impl {impl!r}")
+    if impl == "pallas" and cfg.attn_logit_softcap is not None:
+        impl = "ref"
+    return impl
+
+
 def make_prefill_step(cfg: ModelConfig, plan: Plan, mesh, *,
                       capacity: int) -> Callable:
     """(params, batch) -> (next_token [B], caches).
 
     ``capacity`` is the decode-cache length the caches are padded to
-    (ring-buffer size for SWA archs).
+    (ring-buffer size for SWA archs).  ``batch["lengths"]`` [B] int32, when
+    present, marks rows as right-padded to a common bucket length: the
+    next token comes from each row's true last position and pad cache
+    entries are invalidated.
     """
     rules = dict(plan.act_rules)
     rules["mesh"] = mesh
 
     def prefill(params, batch):
         with activation_sharding(rules):
+            lengths = batch.get("lengths")
+            if lengths is None:
+                logits, caches = model_prefill(params, batch, cfg, capacity,
+                                               last_only=True)
+                return greedy_sample(logits), caches
+            lengths = lengths.astype(jnp.int32)
             logits, caches = model_prefill(params, batch, cfg, capacity,
-                                           last_only=True)
+                                           last_index=lengths - 1)
+            extra = batch.get("extra_embeds")
+            if extra is not None and not cfg.encoder:
+                # frontend embeds occupy positions 0..F-1, shifting every
+                # real token (mirrors model_prefill's last_index offset)
+                lengths = lengths + extra.shape[1]
+            caches = kvcache.mask_prefill_pos(cfg, caches, lengths)
             return greedy_sample(logits), caches
 
     return prefill
 
 
-def make_decode_step(cfg: ModelConfig, plan: Plan, mesh) -> Callable:
+def make_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
+                     attn_impl: str = "auto",
+                     advance_pos: bool = False) -> Callable:
     """(params, token [B,1], caches, pos [B]) -> (next [B], caches).
 
     ``pos`` is the absolute position of the *incoming* token; ring-buffer
     write indices for SWA archs are derived inside (kvcache.write_index).
+    With ``advance_pos`` the step instead returns
+    ``(next [B,1], caches, pos+1)`` — the engine's device-resident hot-loop
+    contract (every slot advances; inactive slots' writes are overwritten
+    at re-admission).
     """
     rules = dict(plan.act_rules)
     rules["mesh"] = mesh
+    rules["decode_attn_impl"] = resolve_decode_attn_impl(attn_impl, cfg)
 
     def decode(params, token, caches, pos):
         with activation_sharding(rules):
             logits, caches = model_decode_step(params, token, caches, cfg,
                                                pos=pos)
-            return greedy_sample(logits), caches
+            nxt = greedy_sample(logits)
+            if advance_pos:
+                return nxt[:, None], caches, pos + 1
+            return nxt, caches
 
     return decode
