@@ -14,7 +14,7 @@ import os
 from benchmarks.common import emit
 from repro.configs import SHAPES, get_config
 from repro.core.roofline import format_rows, roofline_from_record
-from repro.models.api import model_specs
+from repro.models.registry import model_specs
 
 RESULTS = os.environ.get("REPRO_DRYRUN_DIR",
                          os.path.join(os.path.dirname(__file__), "..",

@@ -11,10 +11,14 @@ admission, double-buffered async collection).  Both run the reference
 decode-attention path so the comparison isolates the data-path changes.
 
 ``--smoke`` shrinks the flood for CI; the speedup line is emitted either
-way (benchmarks/common.py CSV convention).
+way (benchmarks/common.py CSV convention), and the fast-path tokens/s and
+admissions/s land in ``BENCH_serve.json`` at the repo root so the perf
+trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -23,12 +27,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs import get_smoke_config
-from repro.core.topology import make_plan
-from repro.models.api import model_specs
-from repro.models.common import init_params
+from repro.runtime import Runtime
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.steps import make_decode_step, make_prefill_step
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                          "BENCH_serve.json")
 
 
 class _LegacyEngine:
@@ -132,17 +136,16 @@ def _run(make_engine, cfg, n_requests) -> dict:
 def main(smoke: bool = False):
     n_requests = 8 if smoke else 24
     num_slots, capacity = 4, 64
-    cfg = get_smoke_config("llama3.2-3b")
-    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
-    plan = make_plan(cfg, {})
+    rt = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
+                        capacity=capacity)
+    cfg, plan, params = rt.cfg, rt.plan, rt.params
 
     legacy = _run(lambda: _LegacyEngine(cfg, plan, None, params,
                                         num_slots=num_slots,
                                         capacity=capacity),
                   cfg, n_requests)
-    fast = _run(lambda: ServeEngine(cfg, plan, None, params,
-                                    num_slots=num_slots, capacity=capacity,
-                                    attn_impl="ref"),
+    fast = _run(lambda: ServeEngine(rt, num_slots=num_slots,
+                                    capacity=capacity, attn_impl="ref"),
                 cfg, n_requests)
 
     emit("serve_legacy_us_per_req", legacy["wall"] * 1e6 / max(1, n_requests),
@@ -155,6 +158,21 @@ def main(smoke: bool = False):
           f"{adm:.2f}x admissions/s "
           f"(legacy {legacy['tok_s']:.1f} -> fast {fast['tok_s']:.1f} tok/s)",
           flush=True)
+
+    record = {
+        "arch": rt.arch, "smoke": smoke, "n_requests": n_requests,
+        "num_slots": num_slots, "capacity": capacity,
+        "tokens_per_s": round(fast["tok_s"], 2),
+        "admissions_per_s": round(fast["adm_s"], 3),
+        "legacy_tokens_per_s": round(legacy["tok_s"], 2),
+        "legacy_admissions_per_s": round(legacy["adm_s"], 3),
+        "speedup_tokens": round(speed, 3),
+        "speedup_admissions": round(adm, 3),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"# wrote {os.path.normpath(BENCH_JSON)}", flush=True)
+
     if not smoke:
         assert speed >= 1.3, f"fast path regressed: {speed:.2f}x < 1.3x"
 

@@ -1,5 +1,6 @@
 """Smoke-scale step timing on CPU (wall-clock sanity, not TPU perf):
-train step + decode step for three representative archs."""
+train step + decode step for three representative archs, all assembled
+through the ``repro.runtime`` surface."""
 from __future__ import annotations
 
 import jax
@@ -7,26 +8,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.configs import get_smoke_config
-from repro.core.topology import make_plan
 from repro.data.pipeline import DataConfig, synthetic_batch
-from repro.models.api import model_specs
-from repro.models.common import init_params
-from repro.serve.steps import make_decode_step, make_prefill_step
-from repro.train.state import init_train_state
-from repro.train.steps import make_train_step
+from repro.runtime import Runtime
 
 
 def main():
     for arch in ("exanode-100m", "mixtral-8x7b", "xlstm-125m"):
-        cfg = get_smoke_config(arch)
-        specs = model_specs(cfg)
-        plan = make_plan(cfg, {})
         B, S = 4, 64
+        rt = Runtime.create(arch, smoke=True, shape_kind="train", seq_len=S)
 
-        step = jax.jit(make_train_step(cfg, plan, specs, None))
-        state = init_train_state(specs, jax.random.PRNGKey(0), plan)
-        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=S,
+        step = jax.jit(rt.make_train_step())
+        state = rt.init_train_state()
+        dcfg = DataConfig(vocab_size=rt.cfg.vocab_size, seq_len=S,
                           global_batch=B)
         batch = {k: jnp.asarray(v) for k, v in
                  synthetic_batch(dcfg, 0).items()}
@@ -35,10 +28,11 @@ def main():
         emit(f"train_step_{arch}_b{B}_s{S}", t * 1e6,
              f"tok_per_s={toks / t:.0f}")
 
-        params = init_params(specs, jax.random.PRNGKey(0))
-        prefill = jax.jit(make_prefill_step(cfg, plan, None, capacity=S + 8))
+        srv = rt.reshape(shape_kind="decode", capacity=S + 8)
+        params = srv.params
+        prefill = jax.jit(srv.make_prefill_step())
         nxt, caches = prefill(params, {"tokens": batch["tokens"]})
-        decode = jax.jit(make_decode_step(cfg, plan, None))
+        decode = jax.jit(srv.make_decode_step())
         tok = jnp.asarray(np.full((B, 1), 3, np.int32))
         pos = jnp.full((B,), S, jnp.int32)
         t = time_fn(lambda p, tk, c, po: decode(p, tk, c, po)[0],

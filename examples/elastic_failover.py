@@ -20,49 +20,39 @@ if "XLA_FLAGS" not in os.environ:
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax                                                # noqa: E402
-import jax.numpy as jnp                                   # noqa: E402
 import numpy as np                                        # noqa: E402
-from jax.sharding import NamedSharding                    # noqa: E402
 
 from repro.checkpoint.manager import CheckpointManager    # noqa: E402
 from repro.configs import get_smoke_config                # noqa: E402
-from repro.core.topology import batch_pspec, make_plan, mesh_axes_of  # noqa: E402
+from repro.core.topology import make_plan                 # noqa: E402
 from repro.data.pipeline import DataConfig, synthetic_batch  # noqa: E402
 from repro.ft.elastic import make_elastic_mesh, plan_remesh  # noqa: E402
-from repro.models.api import model_specs                  # noqa: E402
 from repro.optim.schedules import make_schedule           # noqa: E402
-from repro.train.state import (init_train_state,          # noqa: E402
-                               train_state_shardings)
-from repro.train.steps import make_train_step             # noqa: E402
+from repro.runtime import Runtime                         # noqa: E402
 
 CKPT = "/tmp/elastic_demo_ckpt"
 GLOBAL_BATCH, SEQ = 16, 64
 
 
-def run_phase(mesh, cfg, specs, dcfg, *, steps, start, microbatches,
-              restore):
-    plan = make_plan(cfg, mesh_axes_of(mesh), grad_sync="hierarchical",
-                     seq_len=SEQ)
-    step = make_train_step(cfg, plan, specs, mesh, microbatches=microbatches,
-                           schedule=make_schedule("constant", peak=3e-3))
-    shardings = train_state_shardings(specs, plan, mesh)
+def run_phase(mesh, cfg, dcfg, *, steps, start, microbatches, restore):
+    rt = Runtime.create(cfg, mesh, shape_kind="train", seq_len=SEQ,
+                        grad_sync="hierarchical")
+    shardings = rt.state_shardings
+    jstep = rt.compile_train_step(
+        microbatches=microbatches,
+        schedule=make_schedule("constant", peak=3e-3), donate=False)
     mgr = CheckpointManager(CKPT, save_every=5, async_save=False)
     with mesh:
         if restore:
-            state, at = mgr.restore_latest(
-                init_train_state(specs, jax.random.PRNGKey(0), plan),
-                shardings=shardings)
+            state, at = mgr.restore_latest(rt.init_train_state(),
+                                           shardings=shardings)
             assert state is not None
             print(f"  restored step {at} into mesh "
                   f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
             start = at + 1
         else:
-            state = jax.device_put(
-                init_train_state(specs, jax.random.PRNGKey(0), plan),
-                shardings)
-        jstep = jax.jit(step, in_shardings=(shardings, None),
-                        out_shardings=(shardings, None))
-        bspec = NamedSharding(mesh, batch_pspec(plan))
+            state = jax.device_put(rt.init_train_state(), shardings)
+        bspec = rt.batch_sharding
         losses = []
         for s in range(start, start + steps):
             batch = {k: jax.device_put(v, bspec)
@@ -79,13 +69,12 @@ def main():
     import shutil
     shutil.rmtree(CKPT, ignore_errors=True)
     cfg = get_smoke_config("exanode-100m")
-    specs = model_specs(cfg)
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
                       global_batch=GLOBAL_BATCH, branch=4)
 
     print("phase 1: healthy mesh (4 data x 2 model), 15 steps")
     mesh1 = jax.make_mesh((4, 2), ("data", "model"))
-    losses1, last = run_phase(mesh1, cfg, specs, dcfg, steps=15, start=0,
+    losses1, last = run_phase(mesh1, cfg, dcfg, steps=15, start=0,
                               microbatches=1, restore=False)
     print(f"  loss {losses1[0]:.3f} -> {losses1[-1]:.3f}")
 
@@ -99,7 +88,7 @@ def main():
 
     print("phase 2: resume on the surviving mesh")
     mesh2 = make_elastic_mesh(decision, devices=jax.devices()[:4])
-    losses2, _ = run_phase(mesh2, cfg, specs, dcfg,
+    losses2, _ = run_phase(mesh2, cfg, dcfg,
                            steps=10, start=last + 1,
                            microbatches=decision.microbatches, restore=True)
     print(f"  loss {losses2[0]:.3f} -> {losses2[-1]:.3f}")

@@ -1,53 +1,45 @@
-"""Quickstart: the public API in ~60 lines.
+"""Quickstart: the public `repro.runtime` API in ~50 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a reduced gemma-2b, plans its distribution for the current devices,
-runs a few train steps on synthetic data, then serves a greedy completion
-— the whole stack end to end on one CPU.
+One ``Runtime.create`` call owns the whole chain — arch registry lookup,
+fabric-aware Plan, parameter specs, compiled executables.  Builds a reduced
+gemma-2b, trains a few steps on synthetic data, then serves greedy
+completions from the trained weights — the whole stack end to end on one
+CPU (the same calls plan the 2x16x16 production mesh in launch/).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke_config
-from repro.core.topology import describe, make_plan
 from repro.data.pipeline import DataConfig, synthetic_batch
-from repro.models.api import model_specs
-from repro.models.common import count_params, init_params
 from repro.optim.schedules import make_schedule
-from repro.serve.engine import Request, ServeEngine
-from repro.train.state import init_train_state
-from repro.train.steps import make_train_step
+from repro.runtime import Runtime
+from repro.serve.engine import Request
 
-# 1. pick an architecture (any of the 10 assigned ones + the demo config)
-cfg = get_smoke_config("gemma-2b")
-specs = model_specs(cfg)
-print(f"arch={cfg.name}  params={count_params(specs):,}")
+# 1. build the runtime: arch registry -> fabric plan -> specs -> executables
+rt = Runtime.create("gemma-2b", smoke=True, shape_kind="train", seq_len=64)
+print(rt.describe())
 
-# 2. plan the distribution for whatever devices exist (1 CPU here; the
-#    same call plans the 2x16x16 production mesh in launch/)
-plan = make_plan(cfg, {}, shape_kind="train", seq_len=64)
-print(describe(plan))
-
-# 3. train a few steps on the deterministic synthetic bigram stream
-step = jax.jit(make_train_step(cfg, plan, specs, None,
-                               schedule=make_schedule("constant", peak=3e-3)))
-state = init_train_state(specs, jax.random.PRNGKey(0), plan)
-dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8,
+# 2. train a few steps on the deterministic synthetic bigram stream
+jstep = rt.compile_train_step(
+    schedule=make_schedule("constant", peak=3e-3))
+state = rt.init_train_state()
+dcfg = DataConfig(vocab_size=rt.cfg.vocab_size, seq_len=64, global_batch=8,
                   branch=4)
 for i in range(10):
     batch = {k: jnp.asarray(v) for k, v in synthetic_batch(dcfg, i).items()}
-    state, metrics = step(state, batch)
+    state, metrics = jstep(state, batch)
     if i % 3 == 0:
         print(f"step {i}: loss={float(metrics['loss']):.4f}")
 
-# 4. serve greedy completions from the trained weights
-eng = ServeEngine(cfg, plan, None, state.params, num_slots=2, capacity=48)
+# 3. re-plan the same runtime for decode and serve greedy completions from
+#    the trained weights (continuous batching, donated in-place KV caches)
+srv = rt.reshape(shape_kind="decode", capacity=48)
+eng = srv.engine(num_slots=2, params=state.params)
 rng = np.random.default_rng(0)
 for rid in range(3):
     eng.submit(Request(rid=rid,
-                       prompt=rng.integers(0, cfg.vocab_size, size=8,
+                       prompt=rng.integers(0, rt.cfg.vocab_size, size=8,
                                            dtype=np.int32),
                        max_new_tokens=8))
 stats = eng.run_to_completion()

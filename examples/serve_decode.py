@@ -7,8 +7,9 @@ exist; the engine admits into free slots via batched prefill, decodes all
 active slots in lock-step with donated in-place caches and double-buffered
 token collection, and reports throughput + latency percentiles.  Uses
 mixtral's smoke config so the MoE routing and the SWA ring-buffer KV cache
-are on the serving path (SWA admission buckets are exact prompt lengths,
-so same-length arrivals still share one prefill call).
+are on the serving path (the registry's ``caps.swa`` flag makes admission
+buckets exact prompt lengths, so same-length arrivals still share one
+prefill call).
 """
 import os
 import sys
@@ -16,21 +17,17 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax                                                # noqa: E402
 import numpy as np                                        # noqa: E402
 
-from repro.configs import get_smoke_config                # noqa: E402
-from repro.core.topology import make_plan                 # noqa: E402
-from repro.models.api import model_specs                  # noqa: E402
-from repro.models.common import init_params               # noqa: E402
-from repro.serve.engine import Request, ServeEngine       # noqa: E402
+from repro.runtime import Runtime                         # noqa: E402
+from repro.serve.engine import Request                    # noqa: E402
 
 
 def main():
-    cfg = get_smoke_config("mixtral-8x7b")
-    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
-    plan = make_plan(cfg, {}, shape_kind="decode")
-    eng = ServeEngine(cfg, plan, None, params, num_slots=4, capacity=64)
+    rt = Runtime.create("mixtral-8x7b", smoke=True, shape_kind="decode",
+                        capacity=64)
+    print(rt.describe())
+    eng = rt.engine(num_slots=4)
 
     rng = np.random.default_rng(0)
     n_requests = 12
@@ -38,7 +35,7 @@ def main():
     for rid in range(n_requests):
         eng.submit(Request(
             rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size,
+            prompt=rng.integers(0, rt.cfg.vocab_size,
                                 size=int(rng.integers(4, 24)),
                                 dtype=np.int32),
             max_new_tokens=int(rng.integers(4, 16))))

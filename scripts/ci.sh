@@ -1,18 +1,31 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test suite + serve-path smoke benchmark on CPU.
+# CI gate: bytecode-compile + tier-1 test suite + registry and serve smokes.
 #
 #     bash scripts/ci.sh
 #
-# Mirrors ROADMAP.md's tier-1 verify command and adds the serve fast-path
-# smoke run so data-path regressions (admission batching, donation, kernel
-# fallback) are caught even when no unit test covers the exact shape.
+# Mirrors ROADMAP.md's tier-1 verify command and adds (a) a compileall pass
+# so syntax errors anywhere in src/ fail fast, (b) the all-arch registry
+# smoke (every configs.ARCHS entry builds a Runtime whose prefill/decode
+# match the legacy models/api path bit-for-bit), and (c) the serve
+# fast-path smoke benchmark so data-path regressions (admission batching,
+# donation, kernel fallback) are caught even when no unit test covers the
+# exact shape.  The serve smoke also refreshes BENCH_serve.json (tokens/s,
+# admissions/s) at the repo root for the perf trajectory.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== compileall =="
+python -m compileall -q src
+
+echo "== all-arch registry smoke =="
+python -m pytest -q tests/test_registry.py
+
 echo "== tier-1 pytest =="
-python -m pytest -x -q
+# registry smoke already ran above — skip the re-run (ROADMAP's tier-1
+# command without --ignore covers it when run standalone)
+python -m pytest -x -q --ignore=tests/test_registry.py
 
 echo "== serve fast-path smoke benchmark =="
 python -m benchmarks.bench_serve --smoke

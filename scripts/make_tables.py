@@ -12,7 +12,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import SHAPES, get_config            # noqa: E402
 from repro.core.roofline import roofline_from_record    # noqa: E402
-from repro.models.api import model_specs                # noqa: E402
+from repro.models.registry import model_specs           # noqa: E402
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 

@@ -1,0 +1,45 @@
+"""Version-compatibility shims.
+
+The container pins jax 0.4.x, where ``shard_map`` still lives in the
+experimental namespace and speaks the old kwargs (``auto``/``check_rep``);
+newer jax exposes ``jax.shard_map`` with ``axis_names``/``check_vma``.
+Callers use the new-style surface from here and it is translated when the
+old API is all that exists.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+_new_shard_map = getattr(jax, "shard_map", None)
+
+if _new_shard_map is not None:
+    shard_map = _new_shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+    _OLD_PARAMS = frozenset(inspect.signature(_old_shard_map).parameters)
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None, **kw):
+        """New-style shard_map on old jax: ``axis_names`` (manual axes)
+        becomes ``auto`` (its complement), ``check_vma`` becomes
+        ``check_rep``."""
+        if axis_names is not None:
+            kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if check_vma is not None:
+            key = "check_rep" if "check_rep" in _OLD_PARAMS else "check_vma"
+            kw[key] = check_vma
+        return _old_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+def axis_size(axis) -> int:
+    """``jax.lax.axis_size`` on new jax; on 0.4.x ``psum(1, axis)``'s
+    static fast path gives the same mapped-axis size."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+__all__ = ["axis_size", "shard_map"]

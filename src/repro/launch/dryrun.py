@@ -69,6 +69,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):        # newer jax: one dict per computation
+        cost = cost[0] if cost else None
     rec.update(
         status="OK",
         lower_s=round(t_lower - t0, 1),

@@ -14,6 +14,23 @@ from __future__ import annotations
 import jax
 
 
+def mesh_from_spec(spec: str):
+    """``"2x4"`` -> a (data, model) mesh; one axis-naming table for every
+    driver (launch/train, launch/serve, Runtime.create all resolve spec
+    strings here).
+
+    1 dim  -> ("model",);  2 dims -> ("data", "model");
+    3 dims -> ("pod", "data", "model") with the leading axis on the slow
+    (DCN) tier."""
+    dims = tuple(int(x) for x in spec.split("x"))
+    names = {1: ("model",), 2: ("data", "model"),
+             3: ("pod", "data", "model")}
+    if len(dims) not in names:
+        raise ValueError(f"mesh spec {spec!r}: want 1-3 'x'-separated dims "
+                         "(e.g. '8', '2x4', '2x2x2')")
+    return jax.make_mesh(dims, names[len(dims)])
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -1,27 +1,24 @@
-"""Serving launcher: preflight -> engine -> batched requests.
+"""Serving launcher: preflight -> Runtime -> engine -> batched requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch exanode-100m \
         --smoke --requests 8 --max-new 16 [--mesh 2x4]
 
-Runs the continuous-batching engine (serve/engine.py) over synthetic
-prompts and reports throughput/latency percentiles — the serving-side
-end-to-end driver.
+Builds a decode-shaped ``repro.runtime.Runtime``, runs the
+continuous-batching engine (serve/engine.py) over synthetic prompts and
+reports throughput/latency percentiles — the serving-side end-to-end
+driver.
 """
 from __future__ import annotations
 
 import argparse
-import statistics
 
-import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.topology import make_plan, mesh_axes_of
 from repro.launch import preflight as pf
-from repro.launch.train import make_mesh_from_arg
-from repro.models.api import model_specs
-from repro.models.common import init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.launch.mesh import mesh_from_spec
+from repro.runtime import Runtime
+from repro.serve.engine import Request
 
 
 def main(argv=None):
@@ -38,9 +35,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    mesh = make_mesh_from_arg(args.mesh) if args.mesh else None
-    axes = mesh_axes_of(mesh) if mesh else {}
-    plan = make_plan(cfg, axes, shape_kind="decode", seq_len=args.capacity)
+    mesh = mesh_from_spec(args.mesh) if args.mesh else None
+    rt = Runtime.create(cfg, mesh, shape_kind="decode",
+                        capacity=args.capacity)
+    print(rt.describe(), flush=True)
 
     if mesh and not args.no_preflight:
         with mesh:
@@ -49,9 +47,7 @@ def main(argv=None):
             if not rep.ok:
                 raise SystemExit("preflight failed")
 
-    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, plan, mesh, params, num_slots=args.slots,
-                      capacity=args.capacity)
+    eng = rt.engine(num_slots=args.slots)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(

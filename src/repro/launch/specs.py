@@ -1,13 +1,15 @@
 """Abstract input specs + shardings for every (arch × shape) cell.
 
-``build_cell(arch, shape_name, mesh)`` returns everything the dry-run (and
-the real launcher) needs to lower one cell:
+``build_cell(arch, shape_name, mesh)`` assembles one ``repro.runtime.
+Runtime`` and returns everything the dry-run (and the real launcher) needs
+to lower one cell:
 
-    CellSpec(step_fn, abstract_args, in_shardings, out_shardings, plan, cfg)
+    CellSpec(step_fn, abstract_args, in_shardings, out_shardings, runtime)
 
 All stand-ins are ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable,
-zero allocation.  The same builders feed the real launchers with concrete
-arrays, so the dry-run and production paths cannot drift.
+zero allocation.  The Runtime underneath is the same object the real
+launchers drive with concrete arrays, so the dry-run and production paths
+cannot drift.
 """
 from __future__ import annotations
 
@@ -20,14 +22,12 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, cell_is_applicable, get_config
-from repro.core.topology import (Plan, batch_pspec, cache_pspecs, make_plan,
-                                 mesh_axes_of)
-from repro.models.api import model_specs
+from repro.core.topology import Plan
+from repro.models.registry import Capabilities
 from repro.models.common import ModelConfig, abstract_params
+from repro.runtime import Runtime
 from repro.serve import kvcache
-from repro.serve.steps import make_decode_step, make_prefill_step
 from repro.train.state import abstract_train_state, train_state_pspecs
-from repro.train.steps import make_train_step
 
 
 @dataclass
@@ -39,9 +39,16 @@ class CellSpec:
     abstract_args: tuple
     in_pspecs: tuple                # PartitionSpec pytrees (mirror args)
     out_pspecs: Any                 # PartitionSpec pytrees (or None = auto)
-    plan: Plan
-    cfg: ModelConfig
+    runtime: Runtime                # the assembled fabric->plan->specs chain
     note: str = ""
+
+    @property
+    def plan(self) -> Plan:
+        return self.runtime.plan
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.runtime.cfg
 
 
 # per-cell execution overrides: (arch, shape) -> dict
@@ -61,12 +68,12 @@ CELL_OVERRIDES: dict = {
 }
 
 
-def _batch_specs(cfg: ModelConfig, seq_len: int, batch: int,
-                 kind: str) -> dict:
+def _batch_specs(cfg: ModelConfig, caps: Capabilities, seq_len: int,
+                 batch: int, kind: str) -> dict:
     """Abstract host batch for train/prefill."""
     S = seq_len
     d = {}
-    if cfg.encoder:                              # audio: frontend is stubbed
+    if caps.has_encoder:                         # audio: frontend is stubbed
         d["audio_embeds"] = jax.ShapeDtypeStruct(
             (batch, cfg.frontend_len, cfg.d_model), jnp.float32)
         d["tokens"] = jax.ShapeDtypeStruct((batch, S), jnp.int32)
@@ -134,10 +141,10 @@ def _cache_prefs(name: str, batch_axes) -> list:
     return [None, B, None, None, None]   # n/m/c and friends: batch only
 
 
-def _cache_abstract_and_specs(cfg: ModelConfig, plan: Plan, batch: int,
-                              context: int):
+def _cache_abstract_and_specs(cfg: ModelConfig, caps: Capabilities,
+                              plan: Plan, batch: int, context: int):
     """(abstract caches, divisibility-clipped PartitionSpec tree)."""
-    enc_len = cfg.frontend_len if cfg.encoder else 0
+    enc_len = cfg.frontend_len if caps.has_encoder else 0
     caches = kvcache.abstract_cache(cfg, batch, context, enc_len)
     mesh_axes = plan.mesh_axes
 
@@ -163,7 +170,6 @@ def build_cell(arch: str, shape_name: str, mesh, *,
     if not ok:
         raise ValueError(f"cell ({arch},{shape_name}) skipped: {reason}")
 
-    axes = mesh_axes_of(mesh)
     ov = dict(CELL_OVERRIDES.get((arch, shape_name), {}))
     if microbatches is not None:
         ov["microbatches"] = microbatches
@@ -172,9 +178,20 @@ def build_cell(arch: str, shape_name: str, mesh, *,
     k = ov.get("microbatches", 1)
     remat_policy = ov.get("remat", "full" if kind == "train" else "none")
     cfg = cfg.scaled(remat_policy=remat_policy)
+    if kind == "train":
+        # full-size training runs mixed precision: bf16 compute weights,
+        # f32 master + moments ZeRO-1-sharded in the optimizer state
+        cfg = cfg.scaled(param_dtype=jnp.bfloat16)
 
-    plan = make_plan(cfg, axes, shape_kind=kind, grad_sync=grad_sync,
-                     seq_len=S, **(extra_plan_kw or {}))
+    # train: bf16 compute weights (f32 masters live in the opt state);
+    # prefill/decode: serving runs bf16 weights — keep the Runtime's
+    # param_dtype in lock-step with the abstract args lowered below so
+    # driving rt.params into the compiled cell never retraces
+    rt = Runtime.create(cfg, mesh, shape_kind=kind, seq_len=S, capacity=S,
+                        grad_sync=grad_sync, param_dtype=jnp.bfloat16,
+                        plan_kw=extra_plan_kw)
+    plan, specs, caps = rt.plan, rt.specs, rt.caps
+    axes = plan.mesh_axes
     # grad-accumulation cannot split below the DP width: a microbatch
     # smaller than the DP axes replicates tokens (and silently multiplies
     # MoE dispatch work) — clamp k so (B/k) % dp == 0
@@ -182,17 +199,12 @@ def build_cell(arch: str, shape_name: str, mesh, *,
         k_max = max(1, B // plan.dp_size)
         while k > 1 and (k > k_max or (B // k) % plan.dp_size):
             k -= 1
-    specs = model_specs(cfg)
-    bspec = batch_pspec(plan)
 
     if kind == "train":
-        # full-size training runs mixed precision: bf16 compute weights,
-        # f32 master + moments ZeRO-1-sharded in the optimizer state
-        cfg = cfg.scaled(param_dtype=jnp.bfloat16)
-        step = make_train_step(cfg, plan, specs, mesh, microbatches=k)
+        step = rt.make_train_step(microbatches=k)
         state = abstract_train_state(specs, plan, jnp.bfloat16)
         st_pspecs = train_state_pspecs(specs, plan, jnp.bfloat16)
-        batch = _batch_specs(cfg, S, B, kind)
+        batch = _batch_specs(cfg, caps, S, B, kind)
         b_pspecs = {key: _fit_spec(v.shape, [[tuple(plan.batch_axes)]], axes)
                     for key, v in batch.items()}
         args = (state, batch)
@@ -200,10 +212,10 @@ def build_cell(arch: str, shape_name: str, mesh, *,
         out_pspecs = (st_pspecs, None)
         note = f"microbatches={k} remat={remat_policy} sync={plan.grad_sync}"
     elif kind == "prefill":
-        step = make_prefill_step(cfg, plan, mesh, capacity=S)
+        step = rt.make_prefill_step(capacity=S)
         params = abstract_params(specs, jnp.bfloat16)   # serving: bf16 weights
         p_pspecs = train_state_pspecs(specs, plan).params
-        batch = _batch_specs(cfg, S, B, kind)
+        batch = _batch_specs(cfg, caps, S, B, kind)
         b_pspecs = {key: _fit_spec(v.shape, [[tuple(plan.batch_axes)]], axes)
                     for key, v in batch.items()}
         args = (params, batch)
@@ -211,10 +223,10 @@ def build_cell(arch: str, shape_name: str, mesh, *,
         out_pspecs = None
         note = f"capacity={S}"
     else:  # decode
-        step = make_decode_step(cfg, plan, mesh)
+        step = rt.make_decode_step()
         params = abstract_params(specs, jnp.bfloat16)   # serving: bf16 weights
         p_pspecs = train_state_pspecs(specs, plan).params
-        caches, c_pspecs = _cache_abstract_and_specs(cfg, plan, B, S)
+        caches, c_pspecs = _cache_abstract_and_specs(cfg, caps, plan, B, S)
         token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
         pos = jax.ShapeDtypeStruct((B,), jnp.int32)
         tok_spec = _fit_spec((B, 1), [[tuple(plan.batch_axes)], None], axes)
@@ -226,7 +238,7 @@ def build_cell(arch: str, shape_name: str, mesh, *,
 
     return CellSpec(arch=arch, shape_name=shape_name, kind=kind,
                     step_fn=step, abstract_args=args, in_pspecs=in_pspecs,
-                    out_pspecs=out_pspecs, plan=plan, cfg=cfg, note=note)
+                    out_pspecs=out_pspecs, runtime=rt, note=note)
 
 
 def shardings_of(pspec_tree, mesh):

@@ -6,10 +6,11 @@
 
 On this CPU container use --smoke (reduced config) and a small mesh; the
 same driver runs the production mesh on real hardware (the dry-run proves
-those configs compile).  The loop wires together every subsystem:
-data/pipeline (deterministic, resumable), train/steps (tier-aware sync),
-checkpoint/manager (async, rotated), ft/straggler (step-time watchdog),
-launch/preflight (the paper's bring-up sequence).
+those configs compile).  The loop wires together every subsystem through
+one ``repro.runtime.Runtime``: data/pipeline (deterministic, resumable),
+the Runtime's compiled train step (tier-aware sync), checkpoint/manager
+(async, rotated), ft/straggler (step-time watchdog), launch/preflight (the
+paper's bring-up sequence).
 """
 from __future__ import annotations
 
@@ -18,27 +19,16 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.topology import batch_pspec, describe, make_plan, mesh_axes_of
 from repro.data.pipeline import DataConfig, synthetic_batch
 from repro.ft.straggler import StragglerMonitor
 from repro.launch import preflight as pf
-from repro.models.api import model_specs
+from repro.launch.mesh import mesh_from_spec
 from repro.optim.adamw import AdamWConfig
 from repro.optim.schedules import make_schedule
-from repro.train.state import init_train_state, train_state_shardings
-from repro.train.steps import make_train_step
+from repro.runtime import Runtime
 from repro.checkpoint.manager import CheckpointManager
-
-
-def make_mesh_from_arg(spec: str):
-    dims = tuple(int(x) for x in spec.split("x"))
-    names = {1: ("model",), 2: ("data", "model"),
-             3: ("pod", "data", "model")}[len(dims)]
-    return jax.make_mesh(dims, names)
 
 
 def train_loop(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
@@ -46,25 +36,21 @@ def train_loop(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
                lr: float = 3e-4, ckpt_dir: str = "", save_every: int = 50,
                run_preflight: bool = True, log_every: int = 10,
                param_dtype=jnp.float32):
-    specs = model_specs(cfg)
-    plan = make_plan(cfg, mesh_axes_of(mesh), shape_kind="train",
-                     grad_sync=grad_sync, seq_len=seq_len)
-    print(describe(plan), flush=True)
+    rt = Runtime.create(cfg, mesh, shape_kind="train", seq_len=seq_len,
+                        grad_sync=grad_sync, param_dtype=param_dtype)
+    print(rt.describe(), flush=True)
 
     schedule = make_schedule("cosine", peak=lr, warmup=min(100, steps // 10),
                              total=steps)
-    step_fn = make_train_step(cfg, plan, specs, mesh, schedule=schedule,
-                              opt_cfg=AdamWConfig(),
-                              microbatches=microbatches)
-    shardings = train_state_shardings(specs, plan, mesh, param_dtype)
-    jstep = jax.jit(step_fn, in_shardings=(shardings, None),
-                    out_shardings=(shardings, None), donate_argnums=(0,))
+    jstep = rt.compile_train_step(schedule=schedule, opt_cfg=AdamWConfig(),
+                                  microbatches=microbatches)
+    shardings = rt.state_shardings
 
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
                       global_batch=global_batch,
                       frontend_len=cfg.frontend_len if cfg.frontend else 0,
                       d_model=cfg.d_model)
-    bspec = NamedSharding(mesh, batch_pspec(plan))
+    bspec = rt.batch_sharding
 
     def put(batch):
         return {k: jax.device_put(v, bspec) for k, v in batch.items()}
@@ -79,9 +65,7 @@ def train_loop(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
             if not rep.ok:
                 raise SystemExit("preflight failed; not starting")
 
-        state = init_train_state(specs, jax.random.PRNGKey(0), plan,
-                                 param_dtype)
-        state = jax.device_put(state, shardings)
+        state = jax.device_put(rt.init_train_state(), shardings)
         start = 0
         if mgr is not None:
             restored, at = mgr.restore_latest(state, shardings=shardings)
@@ -137,7 +121,7 @@ def main(argv=None):
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.mesh:
-        mesh = make_mesh_from_arg(args.mesh)
+        mesh = mesh_from_spec(args.mesh)
     else:
         n = len(jax.devices())
         mesh = jax.make_mesh((1, n), ("data", "model"))

@@ -1,5 +1,7 @@
-from repro.models.api import (model_decode_step, model_forward, model_loss,
-                              model_prefill, model_specs)
+from repro.models.registry import (Capabilities, ModelFamily, capabilities,
+                                   get_family, list_families, model_decode_step,
+                                   model_forward, model_loss, model_prefill,
+                                   model_specs, register_family, resolve)
 from repro.models.common import (LayerGroup, ModelConfig, MoEConfig, PSpec,
                                  SSMConfig, XLSTMConfig, abstract_params,
                                  count_params, init_params, partition_specs)

@@ -1,90 +1,15 @@
-"""Unified model facade: one surface over decoder-only and enc-dec archs.
+"""DEPRECATED: thin shim over the arch registry (repro/models/registry.py).
 
-    specs = model_specs(cfg)
-    params = init_params(specs, key)
-    loss, metrics = model_loss(params, batch, cfg)
-    logits, caches = model_prefill(params, batch, cfg, capacity)
-    logits, caches = model_decode_step(params, token, caches, cfg, pos=...)
+The ``cfg.encoder`` if/else dispatch that used to live here is now the
+registry's ``ModelFamily`` protocol; the public entry point is
+``repro.runtime.Runtime``.  This module re-exports the functional surface
+unchanged so external callers keep working; new code should import from
+``repro.models.registry`` (or use a ``Runtime``).
 """
 from __future__ import annotations
 
-from typing import Optional
+from repro.models.registry import (model_decode_step, model_forward,
+                                   model_loss, model_prefill, model_specs)
 
-import jax
-import jax.numpy as jnp
-
-from repro.models import encdec as ed
-from repro.models import lm
-from repro.models.common import ModelConfig
-from repro.serve import kvcache
-
-
-def model_specs(cfg: ModelConfig):
-    return ed.encdec_specs(cfg) if cfg.encoder else lm.lm_specs(cfg)
-
-
-def model_loss(params, batch, cfg: ModelConfig):
-    if cfg.encoder:
-        return ed.encdec_loss(params, batch, cfg, attn_mode=cfg.attn_mode)
-    return lm.lm_loss(params, batch, cfg, attn_mode=cfg.attn_mode)
-
-
-def model_forward(params, batch, cfg: ModelConfig):
-    if cfg.encoder:
-        logits, aux, _, _ = ed.encdec_forward(
-            params, batch["tokens"], batch["audio_embeds"], cfg,
-            attn_mode=cfg.attn_mode)
-    else:
-        logits, aux, _ = lm.lm_forward(
-            params, batch["tokens"], cfg, attn_mode=cfg.attn_mode,
-            extra_embeds=batch.get("extra_embeds"))
-    return logits, aux
-
-
-def model_prefill(params, batch, cfg: ModelConfig, capacity: int,
-                  last_only: bool = False, last_index=None):
-    """Full-context forward that also returns decode-ready caches.
-
-    ``last_only`` returns logits for the final position only ([B,1,V]) —
-    the serving path never materializes full prefill logits.  ``last_index``
-    [B] int32 selects a per-row last position instead (right-padded batched
-    admission; pad rows carry garbage past their true length)."""
-    if cfg.encoder:
-        logits, _, caches, _ = ed.encdec_forward(
-            params, batch["tokens"], batch["audio_embeds"], cfg,
-            attn_mode=cfg.attn_mode, collect_cache=True,
-            last_only=last_only, last_index=last_index)
-        enc_len = batch["audio_embeds"].shape[1]
-    else:
-        extra = batch.get("extra_embeds")
-        li = last_index
-        if li is not None and extra is not None:
-            li = li + extra.shape[1]   # frontend embeds shift real positions
-        logits, _, caches = lm.lm_forward(
-            params, batch["tokens"], cfg, attn_mode=cfg.attn_mode,
-            extra_embeds=extra, collect_cache=True,
-            last_only=last_only, last_index=li)
-        enc_len = 0
-    prefill_len = batch["tokens"].shape[1]
-    extra = batch.get("extra_embeds")
-    if extra is not None and not cfg.encoder:
-        prefill_len += extra.shape[1]   # frontend embeds occupy positions too
-    caches = kvcache.pad_prefill_cache(cfg, caches, prefill_len, capacity,
-                                       enc_len)
-    return logits, caches
-
-
-def model_decode_step(params, token, caches, cfg: ModelConfig, *, pos):
-    """token [B,1]; pos [B] absolute positions.  Handles ring-buffer write
-    indices for SWA archs."""
-    cache_len = None
-    for g, gc in zip(cfg.groups, caches):
-        for j, kind in enumerate(g.pattern):
-            if kind.startswith("attn") and cache_len is None:
-                cache_len = gc[f"sub{j}"]["k"].shape[2]
-    widx = kvcache.write_index(cfg, pos, cache_len) if cache_len else pos
-    if cfg.encoder:
-        return ed.encdec_decode_step(params, token, caches, cfg,
-                                     pos=pos, write_idx=widx)
-    return lm.lm_decode_step(params, token, caches, cfg,
-                             pos=pos, write_idx=widx)
+__all__ = ["model_specs", "model_loss", "model_forward", "model_prefill",
+           "model_decode_step"]

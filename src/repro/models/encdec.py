@@ -20,7 +20,10 @@ from repro.models.sharding import shard
 
 
 def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
-    enc = cfg.encoder
+    # the registry owns presence-dispatch on the encoder sub-config; this
+    # module only runs for configs its family already matched
+    from repro.models.registry import encoder_config
+    enc = encoder_config(cfg)
     return cfg.scaled(
         num_layers=enc.num_layers,
         groups=(LayerGroup(("attn_nc",), enc.num_layers),),

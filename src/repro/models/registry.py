@@ -1,0 +1,282 @@
+"""Arch registry: one dispatch point for every model family.
+
+The paper's bring-up flow is one disciplined sequence (substrate -> links ->
+memory -> workload); the software analog is one dispatch layer between a
+``ModelConfig`` and the family that implements it.  Each family registers a
+``ModelFamily`` protocol object carrying
+
+  * the functional surface (specs / loss / forward / prefill / decode_step)
+  * a ``matches(cfg)`` predicate used by ``resolve(cfg)``
+  * ``capabilities(cfg)`` flags (has_encoder, swa, softcap,
+    supports_flash_decode, ...) that drive kernel and bucketing selection in
+    serve/steps.py and serve/engine.py
+
+so adding an arch family (SSM/xLSTM already exist as configs; a dedicated
+state-space family is the expected next registrant) means registering one
+object here instead of editing ~10 ``cfg.encoder`` if/else branches.  The
+old ``models/api.py`` facade is now a thin deprecated shim over this module;
+the public entry point is ``repro.runtime.Runtime``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.models import encdec as ed
+from repro.models import lm
+from repro.models.common import EncoderConfig, ModelConfig
+from repro.serve import kvcache
+
+
+def encoder_config(cfg: ModelConfig) -> Optional[EncoderConfig]:
+    """Single accessor for the encoder sub-config.
+
+    Presence-dispatch on this field is the registry's job; model code asks
+    here instead of branching on the raw attribute."""
+    return cfg.encoder
+
+
+# ---------------------------------------------------------------------------
+# Capabilities
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Capabilities:
+    """Per-(family × config) flags that select kernels and bucketing.
+
+    ``swa`` -> the KV cache is a ring buffer, so serve admission buckets are
+    exact prompt lengths (right-padding past the window would trim real
+    entries).  ``supports_flash_decode`` -> the Pallas flash-decode kernel
+    can express the arch (no logit softcap; per-layer shape eligibility is
+    still re-checked at trace time by models.attention).
+    """
+
+    has_encoder: bool            # enc-dec: cross-attn memory, stub frontend
+    has_frontend: bool           # decoder-only with prepended frontend embeds
+    swa: bool                    # sliding-window attention (ring-buffer KV)
+    softcap: bool                # attention logit softcap present
+    subquadratic: bool           # long_500k-feasible context handling
+    supports_flash_decode: bool  # Pallas flash-decode kernel expressible
+
+    @property
+    def summary(self) -> str:
+        on = [n for n in ("has_encoder", "has_frontend", "swa", "softcap",
+                          "subquadratic", "supports_flash_decode")
+              if getattr(self, n)]
+        return ",".join(on) or "-"
+
+
+# ---------------------------------------------------------------------------
+# ModelFamily protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelFamily:
+    """One arch family's functional surface + capability law.
+
+    Signatures (mirroring the old models/api.py facade):
+      specs(cfg)                                          -> PSpec tree
+      loss(params, batch, cfg)                            -> (loss, metrics)
+      forward(params, batch, cfg)                         -> (logits, aux)
+      prefill(params, batch, cfg, capacity,
+              last_only=False, last_index=None)           -> (logits, caches)
+      decode_step(params, token, caches, cfg, *, pos)     -> (logits, caches)
+    """
+
+    name: str
+    has_encoder: bool
+    matches: Callable[[ModelConfig], bool]
+    specs: Callable
+    loss: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+
+    def capabilities(self, cfg: ModelConfig) -> Capabilities:
+        return Capabilities(
+            has_encoder=self.has_encoder,
+            has_frontend=bool(cfg.frontend) and not self.has_encoder,
+            swa=cfg.sliding_window is not None,
+            softcap=cfg.attn_logit_softcap is not None,
+            subquadratic=cfg.subquadratic,
+            supports_flash_decode=cfg.attn_logit_softcap is None,
+        )
+
+
+_FAMILIES: dict[str, ModelFamily] = {}
+_MATCH_ORDER: list[str] = []     # specific families, probed in order
+_FALLBACKS: list[str] = []       # catch-alls, probed last
+
+
+def register_family(family: ModelFamily, *, fallback: bool = False):
+    """Register a family; ``fallback`` families are probed after every
+    specific one (the decoder-only LM family is the canonical fallback)."""
+    if family.name in _FAMILIES:
+        raise ValueError(f"family {family.name!r} already registered")
+    _FAMILIES[family.name] = family
+    (_FALLBACKS if fallback else _MATCH_ORDER).append(family.name)
+    return family
+
+
+def get_family(name: str) -> ModelFamily:
+    if name not in _FAMILIES:
+        raise KeyError(f"unknown family {name!r}; known: {list_families()}")
+    return _FAMILIES[name]
+
+
+def list_families() -> list[str]:
+    return _MATCH_ORDER + _FALLBACKS
+
+
+def resolve(cfg: ModelConfig) -> ModelFamily:
+    """The registered family implementing ``cfg`` (first match wins)."""
+    for name in _MATCH_ORDER + _FALLBACKS:
+        fam = _FAMILIES[name]
+        if fam.matches(cfg):
+            return fam
+    raise KeyError(f"no registered family matches config {cfg.name!r}")
+
+
+def capabilities(cfg: ModelConfig) -> Capabilities:
+    return resolve(cfg).capabilities(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Shared decode plumbing
+# ---------------------------------------------------------------------------
+
+
+def _decode_write_index(cfg: ModelConfig, caches, pos):
+    """Ring-buffer write indices for SWA archs (absolute pos elsewhere);
+    the cache length comes from the first attention sub-layer's K cache."""
+    cache_len = None
+    for g, gc in zip(cfg.groups, caches):
+        for j, kind in enumerate(g.pattern):
+            if kind.startswith("attn") and cache_len is None:
+                cache_len = gc[f"sub{j}"]["k"].shape[2]
+    return kvcache.write_index(cfg, pos, cache_len) if cache_len else pos
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM family (dense / moe / hybrid / ssm / vlm)
+# ---------------------------------------------------------------------------
+
+
+def _lm_loss(params, batch, cfg: ModelConfig):
+    return lm.lm_loss(params, batch, cfg, attn_mode=cfg.attn_mode)
+
+
+def _lm_forward(params, batch, cfg: ModelConfig):
+    logits, aux, _ = lm.lm_forward(
+        params, batch["tokens"], cfg, attn_mode=cfg.attn_mode,
+        extra_embeds=batch.get("extra_embeds"))
+    return logits, aux
+
+
+def _lm_prefill(params, batch, cfg: ModelConfig, capacity: int,
+                last_only: bool = False, last_index=None):
+    extra = batch.get("extra_embeds")
+    li = last_index
+    if li is not None and extra is not None:
+        li = li + extra.shape[1]   # frontend embeds shift real positions
+    logits, _, caches = lm.lm_forward(
+        params, batch["tokens"], cfg, attn_mode=cfg.attn_mode,
+        extra_embeds=extra, collect_cache=True,
+        last_only=last_only, last_index=li)
+    prefill_len = batch["tokens"].shape[1]
+    if extra is not None:
+        prefill_len += extra.shape[1]   # frontend embeds occupy positions too
+    caches = kvcache.pad_prefill_cache(cfg, caches, prefill_len, capacity, 0)
+    return logits, caches
+
+
+def _lm_decode_step(params, token, caches, cfg: ModelConfig, *, pos):
+    widx = _decode_write_index(cfg, caches, pos)
+    return lm.lm_decode_step(params, token, caches, cfg,
+                             pos=pos, write_idx=widx)
+
+
+LM_FAMILY = register_family(ModelFamily(
+    name="lm", has_encoder=False,
+    matches=lambda cfg: True,
+    specs=lm.lm_specs, loss=_lm_loss, forward=_lm_forward,
+    prefill=_lm_prefill, decode_step=_lm_decode_step,
+), fallback=True)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder family (whisper-style audio)
+# ---------------------------------------------------------------------------
+
+
+def _encdec_loss(params, batch, cfg: ModelConfig):
+    return ed.encdec_loss(params, batch, cfg, attn_mode=cfg.attn_mode)
+
+
+def _encdec_forward(params, batch, cfg: ModelConfig):
+    logits, aux, _, _ = ed.encdec_forward(
+        params, batch["tokens"], batch["audio_embeds"], cfg,
+        attn_mode=cfg.attn_mode)
+    return logits, aux
+
+
+def _encdec_prefill(params, batch, cfg: ModelConfig, capacity: int,
+                    last_only: bool = False, last_index=None):
+    logits, _, caches, _ = ed.encdec_forward(
+        params, batch["tokens"], batch["audio_embeds"], cfg,
+        attn_mode=cfg.attn_mode, collect_cache=True,
+        last_only=last_only, last_index=last_index)
+    enc_len = batch["audio_embeds"].shape[1]
+    prefill_len = batch["tokens"].shape[1]
+    caches = kvcache.pad_prefill_cache(cfg, caches, prefill_len, capacity,
+                                       enc_len)
+    return logits, caches
+
+
+def _encdec_decode_step(params, token, caches, cfg: ModelConfig, *, pos):
+    widx = _decode_write_index(cfg, caches, pos)
+    return ed.encdec_decode_step(params, token, caches, cfg,
+                                 pos=pos, write_idx=widx)
+
+
+ENCDEC_FAMILY = register_family(ModelFamily(
+    name="encdec", has_encoder=True,
+    matches=lambda cfg: encoder_config(cfg) is not None,
+    specs=ed.encdec_specs, loss=_encdec_loss, forward=_encdec_forward,
+    prefill=_encdec_prefill, decode_step=_encdec_decode_step,
+))
+
+
+# ---------------------------------------------------------------------------
+# Functional convenience surface (what the deprecated models/api.py re-exports)
+# ---------------------------------------------------------------------------
+
+
+def model_specs(cfg: ModelConfig):
+    return resolve(cfg).specs(cfg)
+
+
+def model_loss(params, batch, cfg: ModelConfig):
+    return resolve(cfg).loss(params, batch, cfg)
+
+
+def model_forward(params, batch, cfg: ModelConfig):
+    return resolve(cfg).forward(params, batch, cfg)
+
+
+def model_prefill(params, batch, cfg: ModelConfig, capacity: int,
+                  last_only: bool = False, last_index=None):
+    """Full-context forward that also returns decode-ready caches.
+
+    ``last_only`` returns logits for the final position only ([B,1,V]);
+    ``last_index`` [B] int32 selects a per-row last position instead
+    (right-padded batched admission)."""
+    return resolve(cfg).prefill(params, batch, cfg, capacity,
+                                last_only=last_only, last_index=last_index)
+
+
+def model_decode_step(params, token, caches, cfg: ModelConfig, *, pos):
+    """token [B,1]; pos [B] absolute positions."""
+    return resolve(cfg).decode_step(params, token, caches, cfg, pos=pos)

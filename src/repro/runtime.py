@@ -1,0 +1,326 @@
+"""One ``repro.runtime`` surface: fabric -> Plan -> specs/params -> executables.
+
+The paper brings a tiered machine up through one disciplined sequence
+(substrate -> links -> memory -> workload); ``Runtime`` is that sequence as
+an object.  ``Runtime.create(arch, mesh, shape_kind=...)`` owns the whole
+chain — arch registry lookup, fabric-aware ``Plan``, parameter specs, lazy
+param materialization, and cached jitted executables — so every driver
+(launchers, examples, benchmarks, the serve engine, the dry-run cells)
+assembles the stack through one entry point instead of re-wiring
+``make_plan`` + ``model_specs`` + step factories by hand.
+
+    rt = Runtime.create("gemma-2b", "2x4", shape_kind="train", seq_len=512,
+                        smoke=True)
+    print(rt.describe())                  # plan + tiers + kernels, one report
+    state = rt.init_train_state()
+    state, metrics = rt.train_step(state, batch)
+
+    srv = rt.reshape(shape_kind="decode", capacity=128)
+    logits, caches = srv.prefill(batch)   # model-level executables
+    logits, caches = srv.decode_step(token, caches, pos)
+    engine = srv.engine(num_slots=8)      # continuous-batching serve engine
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import topology
+from repro.core.topology import Plan, batch_pspec, make_plan, mesh_axes_of
+from repro.models import registry
+from repro.models.common import ModelConfig, count_params, init_params
+from repro.models.sharding import activation_sharding
+from repro.serve import steps as serve_steps
+from repro.train import steps as train_steps
+from repro.train import state as train_state_mod
+
+
+class Runtime:
+    """Everything one (arch × mesh × shape) cell needs, in one object.
+
+    Build with :meth:`create`; the constructor is internal plumbing.
+    Model-level executables (``prefill`` / ``decode_step`` / ``loss``)
+    return logits and are jitted once per Runtime; engine-level serve steps
+    (greedy sampling, donated caches) come from :meth:`make_prefill_step` /
+    :meth:`make_decode_step` and power :meth:`engine`.
+    """
+
+    def __init__(self, *, arch: str, cfg: ModelConfig,
+                 family: registry.ModelFamily, mesh, plan: Plan, specs,
+                 seq_len: int, capacity: int, attn_impl: str,
+                 param_dtype, seed: int, params=None, plan_kw=None):
+        self.arch = arch
+        self.cfg = cfg
+        self.family = family
+        self.caps = family.capabilities(cfg)
+        self.mesh = mesh
+        self.plan = plan
+        self.specs = specs
+        self.seq_len = seq_len
+        self.capacity = capacity
+        self.attn_impl = attn_impl          # requested; resolution is lazy
+        self.param_dtype = param_dtype
+        self.seed = seed
+        self.plan_kw = dict(plan_kw or {})
+        self._params = params
+        self._exec: dict[str, Callable] = {}
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def create(cls, arch: Union[str, ModelConfig], mesh=None, *,
+               shape_kind: str = "decode", smoke: bool = False,
+               seq_len: Optional[int] = None, capacity: Optional[int] = None,
+               grad_sync: str = "hierarchical", attn_impl: str = "auto",
+               param_dtype=jnp.float32, seed: int = 0, params=None,
+               plan_kw: Optional[dict] = None) -> "Runtime":
+        """Build the full chain for one cell.
+
+        ``arch`` is a registry name from ``repro.configs.ARCHS`` (``smoke``
+        selects the reduced same-family config) or a ready ``ModelConfig``.
+        ``mesh`` is a ``jax.sharding.Mesh``, a spec string like ``"2x4"``
+        (resolved via ``launch.mesh.mesh_from_spec``), or None for the
+        single-device/unsharded plan.  ``seq_len`` sizes the plan's
+        activation decisions; ``capacity`` is the decode-cache length used
+        by prefill/decode executables and the serve engine (they default to
+        each other, else 128).
+        """
+        if isinstance(arch, ModelConfig):
+            if smoke:
+                raise ValueError(
+                    "smoke=True only applies when arch is a registry name; "
+                    "pass get_smoke_config(name) directly instead")
+            cfg, name = arch, arch.name
+        else:
+            name = arch
+            cfg = get_smoke_config(arch) if smoke else get_config(arch)
+        if isinstance(mesh, str):
+            from repro.launch.mesh import mesh_from_spec
+            mesh = mesh_from_spec(mesh)
+
+        capacity = capacity if capacity is not None else (seq_len or 128)
+        seq_len = seq_len if seq_len is not None else capacity
+        axes = mesh_axes_of(mesh) if mesh is not None else {}
+        if not axes and grad_sync != "flat":
+            # ZeRO-1 grad layouts need a mesh to constrain against; the
+            # single-device plan degenerates to the flat sync
+            grad_sync = "flat"
+        plan = make_plan(cfg, axes, shape_kind=shape_kind,
+                         grad_sync=grad_sync, seq_len=seq_len,
+                         **(plan_kw or {}))
+        family = registry.resolve(cfg)
+        return cls(arch=name, cfg=cfg, family=family, mesh=mesh, plan=plan,
+                   specs=family.specs(cfg), seq_len=seq_len,
+                   capacity=capacity, attn_impl=attn_impl,
+                   param_dtype=param_dtype, seed=seed, params=params,
+                   plan_kw=plan_kw)
+
+    def reshape(self, *, shape_kind: str, seq_len: Optional[int] = None,
+                capacity: Optional[int] = None, grad_sync: Optional[str] = None,
+                attn_impl: Optional[str] = None,
+                plan_kw: Optional[dict] = None) -> "Runtime":
+        """A new Runtime over the same cfg/params with a re-planned fabric
+        mapping (e.g. train -> decode); materialized params and the original
+        plan overrides are carried over (``plan_kw`` entries merge on top)."""
+        return Runtime.create(
+            self.cfg, self.mesh, shape_kind=shape_kind,
+            seq_len=seq_len, capacity=capacity,
+            grad_sync=grad_sync if grad_sync is not None else self.plan.grad_sync,
+            attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
+            param_dtype=self.param_dtype, seed=self.seed,
+            params=self._params, plan_kw={**self.plan_kw, **(plan_kw or {})})
+
+    # -- params / state -----------------------------------------------------
+
+    @property
+    def params(self):
+        """Materialized params (lazy; seeded by ``seed``).  Assignable —
+        e.g. trained weights or a checkpoint restore."""
+        if self._params is None:
+            self._params = init_params(self.specs,
+                                       jax.random.PRNGKey(self.seed),
+                                       self.param_dtype)
+        return self._params
+
+    @params.setter
+    def params(self, value):
+        self._params = value
+
+    def init_train_state(self, key=None):
+        key = jax.random.PRNGKey(self.seed) if key is None else key
+        return train_state_mod.init_train_state(self.specs, key, self.plan,
+                                                self.param_dtype)
+
+    @property
+    def state_shardings(self):
+        """TrainState NamedSharding tree (None without a mesh)."""
+        if self.mesh is None:
+            return None
+        return train_state_mod.train_state_shardings(
+            self.specs, self.plan, self.mesh, self.param_dtype)
+
+    @property
+    def batch_sharding(self) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, batch_pspec(self.plan))
+
+    @property
+    def num_params(self) -> int:
+        return count_params(self.specs)
+
+    # -- step factories (un-jitted; dry-run cells + engine build on these) --
+
+    def make_train_step(self, *, schedule=None, opt_cfg=None,
+                        microbatches: int = 1) -> Callable:
+        return train_steps.make_train_step(
+            self.cfg, self.plan, self.specs, self.mesh, schedule=schedule,
+            opt_cfg=opt_cfg, microbatches=microbatches)
+
+    def make_prefill_step(self, *, capacity: Optional[int] = None) -> Callable:
+        return serve_steps.make_prefill_step(
+            self.cfg, self.plan, self.mesh,
+            capacity=capacity if capacity is not None else self.capacity)
+
+    def make_decode_step(self, *, attn_impl: Optional[str] = None,
+                         advance_pos: bool = False) -> Callable:
+        return serve_steps.make_decode_step(
+            self.cfg, self.plan, self.mesh,
+            attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
+            advance_pos=advance_pos)
+
+    # -- compiled executables ----------------------------------------------
+
+    def compile_train_step(self, *, schedule=None, opt_cfg=None,
+                           microbatches: int = 1, donate: bool = True):
+        """Jitted (state, batch) -> (state, metrics), sharded + state-donated
+        when a mesh is present."""
+        step = self.make_train_step(schedule=schedule, opt_cfg=opt_cfg,
+                                    microbatches=microbatches)
+        donate_kw = dict(donate_argnums=(0,)) if donate else {}
+        if self.mesh is None:
+            return jax.jit(step, **donate_kw)
+        sh = self.state_shardings
+        return jax.jit(step, in_shardings=(sh, None),
+                       out_shardings=(sh, None), **donate_kw)
+
+    @property
+    def train_step(self):
+        """Default compiled train step (cosine-free constant schedule comes
+        from train/steps defaults; pass your own via compile_train_step)."""
+        if "train_step" not in self._exec:
+            self._exec["train_step"] = self.compile_train_step()
+        return self._exec["train_step"]
+
+    def _with_rules(self, fn):
+        """Run ``fn`` under the plan's activation rules when a mesh exists;
+        without one the model-level path is left bare so it is bit-for-bit
+        the legacy ``models/api`` path (the registry parity contract)."""
+        if self.mesh is None:
+            return fn()
+        rules = dict(self.plan.act_rules)
+        rules["mesh"] = self.mesh
+        with activation_sharding(rules):
+            return fn()
+
+    @property
+    def loss(self):
+        """Jitted (batch) -> (loss, metrics) over ``rt.params``
+        (override per call with ``params=``)."""
+        if "loss" not in self._exec:
+            fam, cfg = self.family, self.cfg
+
+            @jax.jit
+            def _loss(params, batch):
+                return self._with_rules(lambda: fam.loss(params, batch, cfg))
+
+            self._exec["loss"] = \
+                lambda batch, *, params=None: _loss(self._p(params), batch)
+        return self._exec["loss"]
+
+    @property
+    def prefill(self):
+        """Jitted (batch) -> (logits, caches) at ``capacity``; supports
+        ``last_only`` / ``last_index`` like the family prefill."""
+        if "prefill" not in self._exec:
+            fam, cfg, cap = self.family, self.cfg, self.capacity
+
+            def _raw(params, batch, last_index, last_only):
+                return self._with_rules(lambda: fam.prefill(
+                    params, batch, cfg, cap,
+                    last_only=last_only, last_index=last_index))
+
+            jfn = jax.jit(_raw, static_argnames=("last_only",))
+            self._exec["prefill"] = (
+                lambda batch, *, last_only=False, last_index=None, params=None:
+                jfn(self._p(params), batch, last_index, last_only=last_only))
+        return self._exec["prefill"]
+
+    @property
+    def decode_step(self):
+        """Jitted (token [B,1], caches, pos [B]) -> (logits, caches)."""
+        if "decode" not in self._exec:
+            fam, cfg = self.family, self.cfg
+
+            @jax.jit
+            def _raw(params, token, caches, pos):
+                return self._with_rules(
+                    lambda: fam.decode_step(params, token, caches, cfg,
+                                            pos=pos))
+
+            self._exec["decode"] = (
+                lambda token, caches, pos, *, params=None:
+                _raw(self._p(params), token, caches, pos))
+        return self._exec["decode"]
+
+    def _p(self, params):
+        return self.params if params is None else params
+
+    # -- serving ------------------------------------------------------------
+
+    def engine(self, *, num_slots: int = 4, capacity: Optional[int] = None,
+               max_admit: Optional[int] = None,
+               attn_impl: Optional[str] = None, donate: bool = True,
+               params=None):
+        """A continuous-batching ServeEngine over this Runtime."""
+        from repro.serve.engine import ServeEngine
+        return ServeEngine(self, num_slots=num_slots, capacity=capacity,
+                           max_admit=max_admit, attn_impl=attn_impl,
+                           donate=donate, params=params)
+
+    # -- report -------------------------------------------------------------
+
+    @property
+    def decode_attn_impl(self) -> str:
+        """The decode-attention backend the serve path will actually use
+        (env override + capability fallback applied now)."""
+        return serve_steps.resolve_decode_attn_impl(self.attn_impl, self.cfg)
+
+    def describe(self) -> str:
+        """Plan + tier placement + kernel selection in one report."""
+        plan = self.plan
+        tiers = ", ".join(
+            f"{ax}({sz})->{plan.fabric.axis_tier.get(ax, 'local')}"
+            for ax, sz in plan.mesh_axes.items()) or "single-device"
+        lines = [
+            f"runtime[{self.cfg.name}] family={self.family.name} "
+            f"params={self.num_params:,}",
+            f"  caps      : {self.caps.summary}",
+            f"  tiers     : {tiers} (fabric {plan.fabric.name})",
+            topology.describe(plan),
+            f"  kernels   : decode_attn={self.decode_attn_impl} "
+            f"(requested {self.attn_impl}); flash_decode_ok="
+            f"{self.caps.supports_flash_decode}",
+            f"  serve     : capacity={self.capacity} "
+            f"swa_bucketing={'exact' if self.caps.swa else 'pow2'}",
+        ]
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return (f"Runtime({self.cfg.name!r}, family={self.family.name!r}, "
+                f"shape_kind={self.plan.shape_kind!r}, "
+                f"mesh={self.plan.mesh_axes})")

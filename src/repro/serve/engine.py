@@ -62,10 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.topology import Plan
-from repro.models.common import ModelConfig
 from repro.serve import kvcache
-from repro.serve.steps import make_decode_step, make_prefill_step
 
 
 @dataclass
@@ -113,18 +110,28 @@ def _install_admitted(caches, part, slots, tok, pos, next_tok, lengths):
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, plan: Plan, mesh, params, *,
-                 num_slots: int = 4, capacity: int = 128,
+    """Continuous-batching engine over a ``repro.runtime.Runtime``.
+
+    The Runtime owns arch/plan/mesh/params and the step factories; the
+    engine owns slots, admission and the device-resident hot loop.
+    ``capacity`` / ``attn_impl`` / ``params`` default to the Runtime's own
+    (``params=`` lets quickstarts serve freshly trained weights)."""
+
+    def __init__(self, runtime, *, num_slots: int = 4,
+                 capacity: Optional[int] = None,
                  max_admit: Optional[int] = None,
-                 attn_impl: str = "auto", donate: bool = True):
-        self.cfg, self.plan, self.mesh = cfg, plan, mesh
-        self.params = params
+                 attn_impl: Optional[str] = None, donate: bool = True,
+                 params=None):
+        rt = runtime
+        self.rt = rt
+        self.cfg, self.plan, self.mesh = rt.cfg, rt.plan, rt.mesh
+        self.caps = rt.caps
+        self.params = params if params is not None else rt.params
+        capacity = capacity if capacity is not None else rt.capacity
         self.num_slots, self.capacity = num_slots, capacity
         self.max_admit = max_admit if max_admit is not None else num_slots
-        self._prefill = jax.jit(make_prefill_step(cfg, plan, mesh,
-                                                  capacity=capacity))
-        decode = make_decode_step(cfg, plan, mesh, attn_impl=attn_impl,
-                                  advance_pos=True)
+        self._prefill = jax.jit(rt.make_prefill_step(capacity=capacity))
+        decode = rt.make_decode_step(attn_impl=attn_impl, advance_pos=True)
         donate_kw = dict(donate_argnums=(2,)) if donate else {}
         self._decode = jax.jit(decode, **donate_kw)
         splice_kw = dict(donate_argnums=(0,)) if donate else {}
@@ -136,7 +143,7 @@ class ServeEngine:
         # position array is the device-resident ``_pos``, which also keeps
         # advancing on inactive slots (harmless junk, reset at re-admission).
         self.slot_pos = np.zeros(num_slots, np.int32)
-        self.caches = kvcache.init_cache(cfg, num_slots, capacity)
+        self.caches = kvcache.init_cache(self.cfg, num_slots, capacity)
         self._tok = jnp.zeros((num_slots, 1), jnp.int32)  # last emitted
         self._pos = jnp.zeros((num_slots,), jnp.int32)
         self._inflight = None   # (device tokens of step t-1, slot->req snap)
@@ -154,10 +161,10 @@ class ServeEngine:
         """Prefill padding bucket for a prompt of length ``n``.
 
         Dense archs: next power of two (>= 8), capped at capacity so the
-        decode-cache tail-trim never drops real entries.  SWA archs: exact
-        length (padding past the window would push real KV out of the
-        ring)."""
-        if self.cfg.sliding_window is not None or n > self.capacity:
+        decode-cache tail-trim never drops real entries.  SWA archs (the
+        registry's ``caps.swa`` flag): exact length (padding past the window
+        would push real KV out of the ring)."""
+        if self.caps.swa or n > self.capacity:
             return n
         b = 8
         while b < n:

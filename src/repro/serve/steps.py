@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.topology import Plan
-from repro.models.api import (model_decode_step, model_prefill)
+from repro.models.registry import (capabilities, model_decode_step,
+                                   model_prefill)
 from repro.models.common import ModelConfig
 from repro.models.sharding import activation_sharding
 from repro.serve import kvcache
@@ -51,23 +52,34 @@ def temperature_sample(logits: jax.Array, key: jax.Array,
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
+DECODE_ATTN_CHOICES = ("auto", "pallas", "ref")
+
+
 def resolve_decode_attn_impl(impl: str, cfg: ModelConfig) -> str:
     """Serve decode-attention backend policy.
 
     "auto" -> "pallas" on TPU-capable backends, "ref" elsewhere.  Explicit
     "pallas"/"ref" are honored as-is (CPU "pallas" runs the kernel in
     interpret mode — the numerics-validation path).  ``REPRO_DECODE_ATTN``
-    overrides everything.  Archs the kernel cannot express (logit softcap)
-    resolve to "ref"; per-layer shape eligibility is still re-checked at
-    trace time (models.attention.pallas_decode_supported)."""
+    overrides everything; unknown values fail fast instead of silently
+    selecting a fallback.  Archs whose registry capabilities rule the kernel
+    out (``supports_flash_decode`` is False, e.g. logit softcap) resolve to
+    "ref"; per-layer shape eligibility is still re-checked at trace time
+    (models.attention.pallas_decode_supported)."""
     env = os.environ.get("REPRO_DECODE_ATTN", "").strip().lower()
-    if env in ("pallas", "ref"):
+    if env:
+        if env not in DECODE_ATTN_CHOICES:
+            raise ValueError(
+                f"REPRO_DECODE_ATTN={env!r} is not a valid decode-attention "
+                f"impl; valid choices: {', '.join(DECODE_ATTN_CHOICES)}")
         impl = env
+    if impl not in DECODE_ATTN_CHOICES:
+        raise ValueError(
+            f"unknown decode attn impl {impl!r}; valid choices: "
+            f"{', '.join(DECODE_ATTN_CHOICES)}")
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl not in ("pallas", "ref"):
-        raise ValueError(f"unknown decode attn impl {impl!r}")
-    if impl == "pallas" and cfg.attn_logit_softcap is not None:
+    if impl == "pallas" and not capabilities(cfg).supports_flash_decode:
         impl = "ref"
     return impl
 
@@ -84,6 +96,7 @@ def make_prefill_step(cfg: ModelConfig, plan: Plan, mesh, *,
     """
     rules = dict(plan.act_rules)
     rules["mesh"] = mesh
+    caps = capabilities(cfg)
 
     def prefill(params, batch):
         with activation_sharding(rules):
@@ -96,7 +109,7 @@ def make_prefill_step(cfg: ModelConfig, plan: Plan, mesh, *,
             logits, caches = model_prefill(params, batch, cfg, capacity,
                                            last_index=lengths - 1)
             extra = batch.get("extra_embeds")
-            if extra is not None and not cfg.encoder:
+            if extra is not None and not caps.has_encoder:
                 # frontend embeds occupy positions 0..F-1, shifting every
                 # real token (mirrors model_prefill's last_index offset)
                 lengths = lengths + extra.shape[1]

@@ -35,7 +35,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compression
 from repro.core.topology import Plan, batch_pspec, inner_act_rules, zero1_rules
-from repro.models.api import model_loss
+from repro.models.registry import model_loss
 from repro.models.common import ModelConfig, partition_specs
 from repro.models.sharding import activation_sharding
 from repro.optim.adamw import AdamWConfig, adamw_update

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.models.api import (model_decode_step, model_loss, model_prefill,
-                              model_specs)
+from repro.models.registry import (model_decode_step, model_loss,
+                                   model_prefill, model_specs)
 from repro.models.common import count_params, init_params
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 
@@ -81,7 +81,7 @@ def test_smoke_train_step(arch):
 
 
 DECODE_TOL = {            # MoE capacity dropping is batch-context dependent
-    "mixtral-8x7b": 3.0, "qwen3-moe-30b-a3b": 3.0, "jamba-v0.1-52b": 3.0,
+    "mixtral-8x7b": 3.0, "qwen3-moe-30b-a3b": 3.5, "jamba-v0.1-52b": 3.0,
     "xlstm-125m": 0.2,    # bf16 conv accumulation-order noise
 }
 

@@ -12,7 +12,7 @@ from repro.core.hlo_analysis import analyze_hlo_text, parse_hlo
 from repro.core.roofline import (collective_time, model_flops,
                                  roofline_from_record)
 from repro.core.topology import make_plan
-from repro.models.api import model_specs
+from repro.models.registry import model_specs
 
 
 # ---------------------------------------------------------------------------

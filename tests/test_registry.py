@@ -1,0 +1,146 @@
+"""Arch-registry + Runtime surface tests.
+
+The all-arch smoke test is the registry's parity contract: for every entry
+in ``configs.ARCHS`` a ``Runtime`` (smoke config, CPU mesh) must produce
+prefill + decode logits bit-for-bit identical to the legacy
+``models/api.py`` path.  Satellite coverage: ``mesh_from_spec``'s one
+axis-naming table and the fail-fast ``REPRO_DECODE_ATTN`` validation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.models import api as legacy_api
+from repro.models import registry
+from repro.runtime import Runtime
+from repro.serve.steps import resolve_decode_attn_impl
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _smoke_batch(cfg, B=2, S=8):
+    k = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if registry.capabilities(cfg).has_encoder:
+        batch["audio_embeds"] = jax.random.normal(
+            jax.random.fold_in(k, 1), (B, 16, cfg.d_model), jnp.float32)
+    elif cfg.frontend:
+        batch["extra_embeds"] = jax.random.normal(
+            jax.random.fold_in(k, 2), (B, 4, cfg.d_model), jnp.float32)
+    return batch
+
+
+# -- registry dispatch ------------------------------------------------------
+
+
+def test_resolve_families():
+    assert registry.resolve(get_smoke_config("whisper-tiny")).name == "encdec"
+    for arch in ("llama3.2-3b", "mixtral-8x7b", "xlstm-125m",
+                 "internvl2-26b"):
+        assert registry.resolve(get_smoke_config(arch)).name == "lm"
+    assert set(registry.list_families()) >= {"lm", "encdec"}
+    with pytest.raises(KeyError):
+        registry.get_family("nope")
+
+
+def test_capability_flags():
+    swa = registry.capabilities(get_smoke_config("mixtral-8x7b"))
+    assert swa.swa and not swa.has_encoder
+    enc = registry.capabilities(get_smoke_config("whisper-tiny"))
+    assert enc.has_encoder and not enc.has_frontend
+    vlm = registry.capabilities(get_smoke_config("internvl2-26b"))
+    assert vlm.has_frontend and not vlm.has_encoder
+    capped = registry.capabilities(
+        get_smoke_config("llama3.2-3b").scaled(attn_logit_softcap=30.0))
+    assert capped.softcap and not capped.supports_flash_decode
+    plain = registry.capabilities(get_smoke_config("llama3.2-3b"))
+    assert plain.supports_flash_decode and not plain.softcap
+
+
+def test_register_family_rejects_duplicates():
+    with pytest.raises(ValueError):
+        registry.register_family(registry.LM_FAMILY)
+
+
+# -- all-arch Runtime parity (the acceptance test) --------------------------
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_runtime_matches_legacy_api(arch):
+    """Runtime prefill + one decode step == the legacy models/api path,
+    bit for bit, for every registered arch (smoke config, CPU mesh).
+
+    models/api is now a shim over the registry, so what this actually pins
+    is the Runtime executable wrapping (jit, act-rules context, capacity
+    padding, params plumbing) against the raw family surface — any future
+    divergence between the two paths fails here first.  Family-port
+    correctness itself is covered by test_archs' prefill/decode
+    consistency checks."""
+    rt = Runtime.create(arch, smoke=True, shape_kind="decode", capacity=20)
+    cfg = rt.cfg
+    B, S = 2, 8
+    batch = _smoke_batch(cfg, B, S)
+    off = 4 if (cfg.frontend and not rt.caps.has_encoder) else 0
+
+    logits_rt, caches_rt = rt.prefill(batch)
+    ref = jax.jit(lambda p, b: legacy_api.model_prefill(p, b, cfg, 20))
+    logits_ref, caches_ref = ref(rt.params, batch)
+    np.testing.assert_array_equal(np.asarray(logits_rt),
+                                  np.asarray(logits_ref))
+
+    tok = jax.random.randint(jax.random.PRNGKey(3), (B, 1), 0,
+                             cfg.vocab_size)
+    pos = jnp.full((B,), S + off, jnp.int32)
+    dec_rt, _ = rt.decode_step(tok, caches_rt, pos)
+    dec_ref, _ = jax.jit(
+        lambda p, t, c, po: legacy_api.model_decode_step(p, t, c, cfg,
+                                                         pos=po))(
+        rt.params, tok, caches_ref, pos)
+    np.testing.assert_array_equal(np.asarray(dec_rt), np.asarray(dec_ref))
+
+
+def test_runtime_describe_reports_the_chain():
+    rt = Runtime.create("mixtral-8x7b", smoke=True, shape_kind="decode",
+                        capacity=32)
+    rep = rt.describe()
+    for needle in ("family=lm", "caps", "swa", "plan[", "kernels",
+                   "decode_attn=", "capacity=32", "swa_bucketing=exact"):
+        assert needle in rep, (needle, rep)
+
+
+def test_runtime_reshape_shares_params():
+    rt = Runtime.create("exanode-100m", smoke=True, shape_kind="train",
+                        seq_len=32)
+    _ = rt.params
+    srv = rt.reshape(shape_kind="decode", capacity=16)
+    assert srv.plan.shape_kind == "decode" and srv.capacity == 16
+    a = jax.tree.leaves(rt.params)[0]
+    b = jax.tree.leaves(srv.params)[0]
+    assert a is b                      # same materialized tree, no re-init
+
+
+# -- satellite: mesh_from_spec is the one axis-naming table -----------------
+
+
+def test_mesh_from_spec_axis_table():
+    from repro.launch.mesh import mesh_from_spec
+    m = mesh_from_spec("1x1")
+    assert m.axis_names == ("data", "model")
+    m3 = mesh_from_spec("1x1x1")
+    assert m3.axis_names == ("pod", "data", "model")
+    with pytest.raises(ValueError):
+        mesh_from_spec("1x1x1x1")
+
+
+# -- satellite: REPRO_DECODE_ATTN fails fast --------------------------------
+
+
+def test_bad_decode_attn_env_fails_fast(monkeypatch):
+    cfg = get_smoke_config("llama3.2-3b")
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "bogus")
+    with pytest.raises(ValueError, match="valid choices.*pallas"):
+        resolve_decode_attn_impl("auto", cfg)
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "auto")
+    assert resolve_decode_attn_impl("ref", cfg) in ("pallas", "ref")

@@ -13,19 +13,19 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.topology import make_plan
-from repro.models.api import model_decode_step, model_prefill, model_specs
+from repro.models.registry import (model_decode_step, model_prefill,
+                                   model_specs)
 from repro.models.common import init_params
 from repro.models.sharding import activation_sharding
+from repro.runtime import Runtime
 from repro.serve import kvcache
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.steps import (make_prefill_step, resolve_decode_attn_impl)
 
 
 def _engine(arch="llama3.2-3b", **kw):
-    cfg = get_smoke_config(arch)
-    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
-    plan = make_plan(cfg, {})
-    return cfg, ServeEngine(cfg, plan, None, params, **kw)
+    rt = Runtime.create(arch, smoke=True, shape_kind="decode")
+    return rt.cfg, ServeEngine(rt, **kw)
 
 
 # -- kvcache: ring-buffer write index --------------------------------------

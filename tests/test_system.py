@@ -56,7 +56,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding
 from repro.configs import get_smoke_config
 from repro.core.topology import make_plan, batch_pspec
-from repro.models.api import model_specs
+from repro.models.registry import model_specs
 from repro.train.state import init_train_state, train_state_shardings
 from repro.train.steps import make_train_step
 

@@ -9,10 +9,11 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core.topology import make_plan
 from repro.data.pipeline import DataConfig, make_batch_iterator, synthetic_batch
-from repro.models.api import model_specs
+from repro.models.registry import model_specs
 from repro.models.common import init_params
 from repro.optim.adamw import AdamWConfig
 from repro.optim.schedules import make_schedule
+from repro.runtime import Runtime
 from repro.serve.engine import Request, ServeEngine
 from repro.train.state import init_train_state
 from repro.train.steps import make_train_step
@@ -104,10 +105,10 @@ def test_data_pipeline_deterministic_and_resumable():
 
 
 def test_serve_engine_continuous_batching():
-    cfg = get_smoke_config("llama3.2-3b")
-    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
-    plan = make_plan(cfg, {})
-    eng = ServeEngine(cfg, plan, None, params, num_slots=2, capacity=32)
+    rt = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
+                        capacity=32)
+    cfg = rt.cfg
+    eng = rt.engine(num_slots=2)
     rng = np.random.default_rng(0)
     for i in range(5):
         eng.submit(Request(rid=i, prompt=rng.integers(
@@ -121,15 +122,14 @@ def test_serve_engine_continuous_batching():
 def test_serve_engine_matches_unbatched_decode():
     """A request decoded alongside others == the same request alone
     (slot isolation)."""
-    cfg = get_smoke_config("llama3.2-3b")
-    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
-    plan = make_plan(cfg, {})
+    rt = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
+                        capacity=32)
+    cfg = rt.cfg
     rng = np.random.default_rng(1)
     prompt = rng.integers(0, cfg.vocab_size, size=6, dtype=np.int32)
 
     def run(slots, extra):
-        eng = ServeEngine(cfg, plan, None, params, num_slots=slots,
-                          capacity=32)
+        eng = ServeEngine(rt, num_slots=slots)
         eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
         for i in range(extra):
             eng.submit(Request(rid=1 + i, prompt=rng.integers(
