@@ -1,45 +1,91 @@
-"""Smoke-scale step timing on CPU (wall-clock sanity, not TPU perf):
-train step + decode step for three representative archs, all assembled
-through the ``repro.runtime`` surface."""
+"""Training-step timing: Pallas fast path vs the jnp reference forward.
+
+    PYTHONPATH=src python -m benchmarks.bench_step [--smoke]
+
+For each representative arch the same smoke-scale train step (loss + grads
++ AdamW update through the ``repro.runtime`` surface) is timed twice — once
+with ``attn_impl/ffn_impl="ref"`` (pure-jnp attention + SwiGLU) and once
+with ``"pallas"`` (flash-attention + fused-FFN custom-VJP kernels) — and
+the per-arch speedup lands in ``BENCH_step.json`` at the repo root, the
+training-side sibling of ``BENCH_serve.json``, so the step-time trajectory
+is machine-readable across PRs.
+
+On CPU the Pallas kernels run in *interpret mode*: that validates the
+numerics and the wiring (what CI needs) but is slower than XLA's fused jnp
+path, so the recorded CPU "speedup" is < 1 by design.  The JSON records the
+backend so downstream tooling can tell validation runs from real TPU
+timings.  ``--smoke`` shrinks shapes/iters for CI; the decode-step timing
+of the old bench lives on in ``bench_serve``.
+"""
 from __future__ import annotations
+
+import json
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.data.pipeline import DataConfig, synthetic_batch
 from repro.runtime import Runtime
 
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                          "BENCH_step.json")
 
-def main():
-    for arch in ("exanode-100m", "mixtral-8x7b", "xlstm-125m"):
-        B, S = 4, 64
-        rt = Runtime.create(arch, smoke=True, shape_kind="train", seq_len=S)
+ARCHS = ("exanode-100m", "llama3.2-3b", "mixtral-8x7b")
 
-        step = jax.jit(rt.make_train_step())
-        state = rt.init_train_state()
-        dcfg = DataConfig(vocab_size=rt.cfg.vocab_size, seq_len=S,
-                          global_batch=B)
-        batch = {k: jnp.asarray(v) for k, v in
-                 synthetic_batch(dcfg, 0).items()}
-        t = time_fn(lambda s, b: step(s, b)[1]["loss"], state, batch)
+
+def _time_train_step(arch: str, impl: str, B: int, S: int,
+                     iters: int) -> float:
+    rt = Runtime.create(arch, smoke=True, shape_kind="train", seq_len=S,
+                        attn_impl=impl, ffn_impl=impl)
+    step = jax.jit(rt.make_train_step())
+    state = rt.init_train_state()
+    dcfg = DataConfig(vocab_size=rt.cfg.vocab_size, seq_len=S, global_batch=B)
+    batch = {k: jnp.asarray(v) for k, v in synthetic_batch(dcfg, 0).items()}
+    return time_fn(lambda s, b: step(s, b)[1]["loss"], state, batch,
+                   warmup=1, iters=iters)
+
+
+def main(smoke: bool = False):
+    B, S = (2, 32) if smoke else (4, 64)
+    iters = 3 if smoke else 5
+    backend = jax.default_backend()
+
+    archs_record = {}
+    for arch in ARCHS:
+        t_ref = _time_train_step(arch, "ref", B, S, iters)
+        t_fast = _time_train_step(arch, "pallas", B, S, iters)
         toks = B * S
-        emit(f"train_step_{arch}_b{B}_s{S}", t * 1e6,
-             f"tok_per_s={toks / t:.0f}")
+        speedup = t_ref / t_fast
+        emit(f"train_step_ref_{arch}_b{B}_s{S}", t_ref * 1e6,
+             f"tok_per_s={toks / t_ref:.0f}")
+        emit(f"train_step_pallas_{arch}_b{B}_s{S}", t_fast * 1e6,
+             f"tok_per_s={toks / t_fast:.0f} speedup={speedup:.2f}x")
+        archs_record[arch] = {
+            "ref_us": round(t_ref * 1e6, 1),
+            "pallas_us": round(t_fast * 1e6, 1),
+            "speedup": round(speedup, 3),
+            "tokens_per_s_pallas": round(toks / t_fast, 1),
+        }
 
-        srv = rt.reshape(shape_kind="decode", capacity=S + 8)
-        params = srv.params
-        prefill = jax.jit(srv.make_prefill_step())
-        nxt, caches = prefill(params, {"tokens": batch["tokens"]})
-        decode = jax.jit(srv.make_decode_step())
-        tok = jnp.asarray(np.full((B, 1), 3, np.int32))
-        pos = jnp.full((B,), S, jnp.int32)
-        t = time_fn(lambda p, tk, c, po: decode(p, tk, c, po)[0],
-                    params, tok, caches, pos)
-        emit(f"decode_step_{arch}_b{B}", t * 1e6,
-             f"tok_per_s={B / t:.0f}")
+    print(f"# train fast path ({backend}): " + "  ".join(
+        f"{a}={r['speedup']:.2f}x" for a, r in archs_record.items()),
+        flush=True)
+    if backend != "tpu":
+        print("# note: non-TPU backend runs Pallas in interpret mode — "
+              "numerics validation, not a speed measurement", flush=True)
+
+    record = {
+        "smoke": smoke, "backend": backend, "batch": B, "seq_len": S,
+        "pallas_interpret": backend != "tpu",
+        "archs": archs_record,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"# wrote {os.path.normpath(BENCH_JSON)}", flush=True)
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

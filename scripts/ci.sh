@@ -10,7 +10,10 @@
 # fast-path smoke benchmark so data-path regressions (admission batching,
 # donation, kernel fallback) are caught even when no unit test covers the
 # exact shape.  The serve smoke also refreshes BENCH_serve.json (tokens/s,
-# admissions/s) at the repo root for the perf trajectory.
+# admissions/s) at the repo root for the perf trajectory, and (d) the
+# train-step smoke benchmark, which exercises the Pallas flash-attention +
+# fused-FFN custom-VJP train path end to end and refreshes BENCH_step.json
+# (fast-vs-ref step time per arch) beside it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,5 +32,8 @@ python -m pytest -x -q --ignore=tests/test_registry.py
 
 echo "== serve fast-path smoke benchmark =="
 python -m benchmarks.bench_serve --smoke
+
+echo "== train-step fast-path smoke benchmark =="
+python -m benchmarks.bench_step --smoke
 
 echo "CI OK"

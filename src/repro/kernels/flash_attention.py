@@ -1,4 +1,4 @@
-"""Flash attention (training/prefill) as a Pallas TPU kernel.
+"""Flash attention (training/prefill) as a differentiable Pallas TPU kernel.
 
 TPU adaptation of the standard flash blocking: the [S,T] score matrix never
 leaves VMEM — the grid walks (batch, head, q-block) and an inner
@@ -9,6 +9,19 @@ exactly like the chunked-jnp reference (models/attention.py) does at the
 XLA level — but here the blocking is explicit VMEM tiling rather than a
 compiler hint.
 
+The op carries a ``jax.custom_vjp``: the forward additionally emits the
+per-row logsumexp (``lse = m + log(l)``) as a residual, and the backward
+recomputes the softmax probabilities from (q, k, lse) tile by tile — the
+flash-attention-2 recipe — in two Pallas kernels:
+
+* ``_bwd_dq_kernel``  — grid (b, h, q-block), streams KV blocks, accumulates
+  dQ in VMEM (same causal block skipping as the forward).
+* ``_bwd_dkv_kernel`` — grid (b, h, kv-block), streams Q blocks starting at
+  the causal diagonal, accumulates dK/dV in VMEM.
+
+Neither materializes the [S,T] probability matrix; the only O(S) residuals
+are ``o`` and ``lse``.  ``delta = rowsum(do * o)`` is precomputed in jnp.
+
 Block shapes: q rows BQ=256 (MXU-aligned: multiples of 128 for f32/bf16
 tiles), KV block BK=512.  VMEM claim per grid step ≈
 BQ·D + 2·T_BLOCK·D + BQ·BK (scores) floats — sized for D ≤ 256.
@@ -16,7 +29,6 @@ BQ·D + 2·T_BLOCK·D + BQ·BK (scores) floats — sized for D ≤ 256.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -28,10 +40,35 @@ DEFAULT_BQ = 256
 DEFAULT_BK = 512
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+def _block_mask(q_pos, kv_pos, causal: bool, window: int):
+    """[bq,bk] boolean; True = attend.  Mirrors models.attention._mask for
+    standard arange positions."""
+    if not causal:
+        return None
+    mask = kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    return mask
+
+
+def _first_kv_block(iq, bq: int, bk: int, causal: bool, window: int):
+    """First KV block not entirely below the sliding window of q block
+    ``iq`` (0 without SWA): block skipping for the fwd/dq loops."""
+    if not (causal and window > 0):
+        return 0
+    return jnp.maximum(0, (iq * bq - window + 1) // bk)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, bq: int, bk: int,
                  scale: float, causal: bool, window: int):
     """One (b, h, q-block) step.  q_ref [bq,d]; k_ref/v_ref [T,d] (HBM-to-
-    VMEM streamed in bk slices); o_ref [bq,d]."""
+    VMEM streamed in bk slices); o_ref [bq,d]; lse_ref [bq] (softmax stats
+    residual for the backward)."""
     iq = pl.program_id(2)
     T = k_ref.shape[0]
     d = q_ref.shape[-1]
@@ -50,12 +87,9 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
         vb = v_ref[pl.ds(j * bk, bk), :].astype(jnp.float32)
         s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())))  # [bq,bk]
         kv_pos = j * bk + jax.lax.iota(jnp.int32, bk)
-        mask = jnp.ones((bq, bk), jnp.bool_)
-        if causal:
-            mask = kv_pos[None, :] <= q_pos[:, None]
-            if window > 0:
-                mask &= kv_pos[None, :] > (q_pos[:, None] - window)
-        s = jnp.where(mask, s, NEG_INF)
+        mask = _block_mask(q_pos, kv_pos, causal, window)
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=1))
         p = jnp.exp(s - m_new[:, None])
         corr = jnp.exp(m - m_new)
@@ -67,28 +101,19 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
     m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((bq,), jnp.float32)
     a0 = jnp.zeros((bq, d), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, nkv, body, (m0, l0, a0))
+    j0 = _first_kv_block(iq, bq, bk, causal, window)
+    m, l, acc = jax.lax.fori_loop(j0, nkv, body, (m0, l0, a0))
     o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    # lse on the *scaled* scores; fully-masked rows (l == 0, never produced
+    # by the model paths) get 0.0 so the backward's exp(s - lse) stays 0
+    lse_ref[...] = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
-                                             "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0,
-                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                    interpret: bool = True) -> jax.Array:
-    """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D].
-
-    ``window > 0`` = sliding-window attention (mixtral).  On this container
-    ``interpret=True`` runs the kernel body on CPU; on TPU pass False.
-    """
+def _forward(q, k, v, causal, window, bq, bk, interpret):
+    """Returns (out, lse); lse [B,H,S] float32."""
     B, H, S, D = q.shape
     T = k.shape[2]
-    bq = min(bq, S)
-    bk = min(bk, T)
-    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
     scale = D ** -0.5
-
     grid = (B, H, S // bq)
     kernel = functools.partial(_attn_kernel, bq=bq, bk=bk, scale=scale,
                                causal=causal, window=window)
@@ -100,8 +125,194 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((None, None, T, D), lambda b, h, i: (b, h, 0, 0)),
             pl.BlockSpec((None, None, T, D), lambda b, h, i: (b, h, 0, 0)),
         ],
+        out_specs=[
+            pl.BlockSpec((None, None, bq, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, bq), lambda b, h, i: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+                   bq: int, bk: int, scale: float, causal: bool, window: int):
+    """dQ for one (b, h, q-block): stream KV blocks, recompute p from lse."""
+    iq = pl.program_id(2)
+    T = k_ref.shape[0]
+    d = q_ref.shape[-1]
+    q = q_ref[...].astype(jnp.float32) * scale
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...].astype(jnp.float32)
+    delta = delta_ref[...].astype(jnp.float32)
+    q_pos = iq * bq + jax.lax.iota(jnp.int32, bq)
+
+    nkv = T // bk
+    if causal:
+        last_q = (iq + 1) * bq - 1
+        nkv = jnp.minimum(nkv, (last_q // bk) + 1)
+
+    def body(j, acc):
+        kb = k_ref[pl.ds(j * bk, bk), :].astype(jnp.float32)
+        vb = v_ref[pl.ds(j * bk, bk), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())))  # [bq,bk]
+        kv_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+        mask = _block_mask(q_pos, kv_pos, causal, window)
+        p = jnp.exp(s - lse[:, None])
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+        dp = jax.lax.dot_general(do, vb, (((1,), (1,)), ((), ())))  # [bq,bk]
+        ds = p * (dp - delta[:, None])
+        return acc + jax.lax.dot_general(ds, kb, (((1,), (0,)), ((), ())))
+
+    j0 = _first_kv_block(iq, bq, bk, causal, window)
+    acc = jax.lax.fori_loop(j0, nkv, body, jnp.zeros((bq, d), jnp.float32))
+    dq_ref[...] = (acc * scale).astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, bq: int, bk: int, scale: float,
+                    causal: bool, window: int):
+    """dK/dV for one (b, h, kv-block): stream Q blocks from the causal
+    diagonal down, recompute p from lse."""
+    j = pl.program_id(2)
+    S = q_ref.shape[0]
+    d = k_ref.shape[-1]
+    kb = k_ref[...].astype(jnp.float32)
+    vb = v_ref[...].astype(jnp.float32)
+    kv_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+
+    nq = S // bq
+    i0 = (j * bk) // bq if causal else 0   # first q block on/after diagonal
+    if causal and window > 0:
+        # last q block still inside the window of this kv block: q rows with
+        # q_pos > max(kv_pos) + window - 1 are fully masked
+        nq = jnp.minimum(nq, ((j + 1) * bk + window - 2) // bq + 1)
+
+    def body(i, carry):
+        dk, dv = carry
+        qb = q_ref[pl.ds(i * bq, bq), :].astype(jnp.float32) * scale
+        dob = do_ref[pl.ds(i * bq, bq), :].astype(jnp.float32)
+        lseb = lse_ref[pl.ds(i * bq, bq)].astype(jnp.float32)
+        deltab = delta_ref[pl.ds(i * bq, bq)].astype(jnp.float32)
+        s = jax.lax.dot_general(qb, kb, (((1,), (1,)), ((), ())))  # [bq,bk]
+        q_pos = i * bq + jax.lax.iota(jnp.int32, bq)
+        mask = _block_mask(q_pos, kv_pos, causal, window)
+        p = jnp.exp(s - lseb[:, None])
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+        dv = dv + jax.lax.dot_general(p, dob, (((0,), (0,)), ((), ())))
+        dp = jax.lax.dot_general(dob, vb, (((1,), (1,)), ((), ())))
+        ds = p * (dp - deltab[:, None])
+        # s = (q*scale)·k, so ∂s/∂k is the *scaled* q rows (qb)
+        dk = dk + jax.lax.dot_general(ds, qb, (((0,), (0,)), ((), ())))
+        return dk, dv
+
+    z = jnp.zeros((bk, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(i0, nq, body, (z, z))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _backward(q, k, v, o, lse, g, causal, window, bq, bk, interpret):
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    scale = D ** -0.5
+    delta = jnp.sum(g.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    dq_kernel = functools.partial(_bwd_dq_kernel, bq=bq, bk=bk, scale=scale,
+                                  causal=causal, window=window)
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(B, H, S // bq),
+        in_specs=[
+            pl.BlockSpec((None, None, bq, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, bq, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, bq), lambda b, h, i: (b, h, i)),
+            pl.BlockSpec((None, None, bq), lambda b, h, i: (b, h, i)),
+        ],
         out_specs=pl.BlockSpec((None, None, bq, D),
                                lambda b, h, i: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, g, lse, delta)
+
+    dkv_kernel = functools.partial(_bwd_dkv_kernel, bq=bq, bk=bk, scale=scale,
+                                   causal=causal, window=window)
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(B, H, T // bk),
+        in_specs=[
+            pl.BlockSpec((None, None, S, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((None, None, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((None, None, S, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((None, None, S), lambda b, h, j: (b, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((None, None, bk, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, D), k.dtype),
+            jax.ShapeDtypeStruct((B, H, T, D), v.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, g, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, bq, bk, interpret):
+    out, _ = _forward(q, k, v, causal, window, bq, bk, interpret)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, bq, bk, interpret):
+    out, lse = _forward(q, k, v, causal, window, bq, bk, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, bq, bk, interpret, res, g):
+    q, k, v, out, lse = res
+    return _backward(q, k, v, out, lse, g, causal, window, bq, bk, interpret)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = True) -> jax.Array:
+    """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D].  Differentiable
+    (``jax.custom_vjp``: flash backward with recomputed softmax stats).
+
+    ``window > 0`` = sliding-window attention (mixtral); positions are the
+    standard arange (causal masking compares absolute row/col indices).  On
+    this container ``interpret=True`` runs the kernel body on CPU; on TPU
+    pass False.
+    """
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    return _flash(q, k, v, causal, window, bq, bk, interpret)

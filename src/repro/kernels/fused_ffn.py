@@ -1,4 +1,4 @@
-"""Fused SwiGLU FFN as a Pallas TPU kernel.
+"""Fused SwiGLU FFN as a differentiable Pallas TPU kernel.
 
 y = (silu(x @ Wg) * (x @ Wu)) @ Wd, fused so the [N, F] hidden activations
 never round-trip HBM: the grid walks (row-block, F-block) with the F-block
@@ -6,6 +6,18 @@ axis minor; each step computes a [br, bf] hidden tile and accumulates its
 contribution to the [br, D] output in VMEM scratch (emitted on the last
 F step).  VMEM per step ≈ br·D + 2·D·bf + bf·D + br·bf floats — sized so
 D ≤ 8k, bf = 512 fits comfortably in 128 MiB.
+
+The op carries a ``jax.custom_vjp`` whose backward *reuses the forward
+tiles*: nothing [N, F]-shaped is stashed as a residual — each backward
+kernel recomputes the (g, u, h) tile it needs from (x, Wg, Wu) and folds it
+straight into the gradient accumulators:
+
+* ``_bwd_dx_kernel`` — same grid order as the forward (rows outer, F minor);
+  accumulates dX = dG·Wgᵀ + dU·Wuᵀ in VMEM scratch, emitted on the last
+  F step.
+* ``_bwd_dw_kernel`` — transposed grid (F outer, rows minor) so each weight
+  tile's accumulator sees its row contributions consecutively; emits
+  dWg/dWu/dWd tiles on the last row step.
 """
 from __future__ import annotations
 
@@ -20,6 +32,21 @@ DEFAULT_BR = 256
 DEFAULT_BF = 512
 
 
+def _hidden_tile(x, wg_ref, wu_ref):
+    """Recompute one [br, bf] forward tile: returns (g, sg, u) f32 where
+    ``sg = logistic(g)`` so callers get silu(g) = g*sg and its derivative."""
+    g = jax.lax.dot_general(x, wg_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())))
+    u = jax.lax.dot_general(x, wu_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())))
+    return g, jax.lax.logistic(g), u
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
 def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, y_ref, acc_ref):
     """Grid (n_rows//br, F//bf).  x_ref [br,D]; wg/wu_ref [D,bf];
     wd_ref [bf,D]; y_ref [br,D]; scratch acc [br,D] f32."""
@@ -31,11 +58,8 @@ def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, y_ref, acc_ref):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...].astype(jnp.float32)
-    g = jax.lax.dot_general(x, wg_ref[...].astype(jnp.float32),
-                            (((1,), (0,)), ((), ())))
-    u = jax.lax.dot_general(x, wu_ref[...].astype(jnp.float32),
-                            (((1,), (0,)), ((), ())))
-    h = (g * jax.lax.logistic(g)) * u                    # silu(g) * u
+    g, sg, u = _hidden_tile(x, wg_ref, wu_ref)
+    h = (g * sg) * u                                     # silu(g) * u
     acc_ref[...] += jax.lax.dot_general(
         h, wd_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())))
 
@@ -44,17 +68,9 @@ def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, y_ref, acc_ref):
         y_ref[...] = acc_ref[...].astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("br", "bf", "interpret"))
-def swiglu_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
-               w_down: jax.Array, *, br: int = DEFAULT_BR,
-               bf: int = DEFAULT_BF, interpret: bool = True) -> jax.Array:
-    """x [N,D]; w_gate/w_up [D,F]; w_down [F,D] -> [N,D]."""
+def _forward(x, w_gate, w_up, w_down, br, bf, interpret):
     N, D = x.shape
     F = w_gate.shape[1]
-    br = min(br, N)
-    bf = min(bf, F)
-    assert N % br == 0 and F % bf == 0, (N, br, F, bf)
-
     return pl.pallas_call(
         _ffn_kernel,
         grid=(N // br, F // bf),
@@ -69,3 +85,157 @@ def swiglu_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
         scratch_shapes=[pltpu.VMEM((br, D), jnp.float32)],
         interpret=interpret,
     )(x, w_gate, w_up, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+
+def _bwd_hidden_grads(x, dy, wg_ref, wu_ref, wd_ref):
+    """Shared backward tile math: recompute (g, u), push dy through Wd and
+    the SwiGLU gate.  Returns (h, dg, du) f32 tiles [br, bf]."""
+    g, sg, u = _hidden_tile(x, wg_ref, wu_ref)
+    silu = g * sg
+    h = silu * u
+    dh = jax.lax.dot_general(dy, wd_ref[...].astype(jnp.float32),
+                             (((1,), (1,)), ((), ())))    # [br,bf]
+    du = dh * silu
+    dg = dh * u * (sg + g * sg * (1.0 - sg))              # d silu / dg
+    return h, dg, du
+
+
+def _bwd_dx_kernel(x_ref, wg_ref, wu_ref, wd_ref, dy_ref, dx_ref, acc_ref):
+    """Grid (n_rows//br, F//bf), F minor: dX accumulated over F tiles."""
+    j = pl.program_id(1)
+    nf = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    _, dg, du = _bwd_hidden_grads(x, dy, wg_ref, wu_ref, wd_ref)
+    acc_ref[...] += (
+        jax.lax.dot_general(dg, wg_ref[...].astype(jnp.float32),
+                            (((1,), (1,)), ((), ())))
+        + jax.lax.dot_general(du, wu_ref[...].astype(jnp.float32),
+                              (((1,), (1,)), ((), ()))))
+
+    @pl.when(j == nf - 1)
+    def _emit():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def _bwd_dw_kernel(x_ref, wg_ref, wu_ref, wd_ref, dy_ref,
+                   dwg_ref, dwu_ref, dwd_ref,
+                   dwg_acc, dwu_acc, dwd_acc):
+    """Grid (F//bf, n_rows//br), rows minor: weight-tile grads accumulated
+    over row blocks (each output tile sees its revisits consecutively)."""
+    i = pl.program_id(1)
+    nr = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        dwg_acc[...] = jnp.zeros_like(dwg_acc)
+        dwu_acc[...] = jnp.zeros_like(dwu_acc)
+        dwd_acc[...] = jnp.zeros_like(dwd_acc)
+
+    x = x_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    h, dg, du = _bwd_hidden_grads(x, dy, wg_ref, wu_ref, wd_ref)
+    dwg_acc[...] += jax.lax.dot_general(x, dg, (((0,), (0,)), ((), ())))
+    dwu_acc[...] += jax.lax.dot_general(x, du, (((0,), (0,)), ((), ())))
+    dwd_acc[...] += jax.lax.dot_general(h, dy, (((0,), (0,)), ((), ())))
+
+    @pl.when(i == nr - 1)
+    def _emit():
+        dwg_ref[...] = dwg_acc[...].astype(dwg_ref.dtype)
+        dwu_ref[...] = dwu_acc[...].astype(dwu_ref.dtype)
+        dwd_ref[...] = dwd_acc[...].astype(dwd_ref.dtype)
+
+
+def _backward(x, w_gate, w_up, w_down, dy, br, bf, interpret):
+    N, D = x.shape
+    F = w_gate.shape[1]
+
+    dx = pl.pallas_call(
+        _bwd_dx_kernel,
+        grid=(N // br, F // bf),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((D, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((D, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((br, D), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((br, D), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down, dy)
+
+    dwg, dwu, dwd = pl.pallas_call(
+        _bwd_dw_kernel,
+        grid=(F // bf, N // br),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda j, i: (i, 0)),
+            pl.BlockSpec((D, bf), lambda j, i: (0, j)),
+            pl.BlockSpec((D, bf), lambda j, i: (0, j)),
+            pl.BlockSpec((bf, D), lambda j, i: (j, 0)),
+            pl.BlockSpec((br, D), lambda j, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((D, bf), lambda j, i: (0, j)),
+            pl.BlockSpec((D, bf), lambda j, i: (0, j)),
+            pl.BlockSpec((bf, D), lambda j, i: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((D, F), w_gate.dtype),
+            jax.ShapeDtypeStruct((D, F), w_up.dtype),
+            jax.ShapeDtypeStruct((F, D), w_down.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, bf), jnp.float32),
+                        pltpu.VMEM((D, bf), jnp.float32),
+                        pltpu.VMEM((bf, D), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down, dy)
+    return dx, dwg, dwu, dwd
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _swiglu(x, w_gate, w_up, w_down, br, bf, interpret):
+    return _forward(x, w_gate, w_up, w_down, br, bf, interpret)
+
+
+def _swiglu_fwd(x, w_gate, w_up, w_down, br, bf, interpret):
+    y = _forward(x, w_gate, w_up, w_down, br, bf, interpret)
+    return y, (x, w_gate, w_up, w_down)
+
+
+def _swiglu_bwd(br, bf, interpret, res, dy):
+    x, w_gate, w_up, w_down = res
+    return _backward(x, w_gate, w_up, w_down, dy, br, bf, interpret)
+
+
+_swiglu.defvjp(_swiglu_fwd, _swiglu_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bf", "interpret"))
+def swiglu_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array, *, br: int = DEFAULT_BR,
+               bf: int = DEFAULT_BF, interpret: bool = True) -> jax.Array:
+    """x [N,D]; w_gate/w_up [D,F]; w_down [F,D] -> [N,D].  Differentiable
+    (``jax.custom_vjp``: backward recomputes the forward tiles)."""
+    N, D = x.shape
+    F = w_gate.shape[1]
+    br = min(br, N)
+    bf = min(bf, F)
+    assert N % br == 0 and F % bf == 0, (N, br, F, bf)
+    return _swiglu(x, w_gate, w_up, w_down, br, bf, interpret)

@@ -1,12 +1,30 @@
-"""jit'd public wrappers over the Pallas kernels.
+"""jit'd public wrappers over the Pallas kernels + the one impl-selection
+policy for the training/prefill hot path.
 
 ``interpret`` resolves per-backend: compiled on TPU, interpreter everywhere
 else (this container is CPU-only — the brief's validation mode).  Nothing
 has to remember to flip it for production; ``set_interpret_mode`` remains
 as an explicit override for experiments.  Every op has a pure-jnp oracle in
 ref.py and a sweep test in tests/test_kernels.py.
+
+Impl selection (one policy, three knobs):
+
+* ``resolve_train_attn_impl`` / ``resolve_ffn_impl`` — "auto" picks Pallas
+  on TPU backends and the jnp reference elsewhere; explicit "pallas"/"ref"
+  are honored as-is (CPU "pallas" runs interpret mode — numerics, not
+  speed).  ``REPRO_ATTN_IMPL`` / ``REPRO_FFN_IMPL`` override everything and
+  fail fast on unknown values, mirroring serve's ``REPRO_DECODE_ATTN``.
+* Capability fallback (softcap, GeGLU, unsupported shapes) lives with the
+  model code (models.attention.flash_train_supported,
+  models.mlp.fused_ffn_supported) and the registry ``Capabilities`` flags —
+  this module stays model-agnostic.
+* ``log_impl_selection`` reports each (op, impl) choice exactly once per
+  process — ``Runtime.describe()`` calls it so the selection lands in logs.
 """
 from __future__ import annotations
+
+import logging
+import os
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +36,57 @@ from repro.kernels import mlstm_scan as _ml
 from repro.kernels import quant as _q
 from repro.kernels import ssm_scan as _ssm
 
+logger = logging.getLogger("repro.kernels")
+
 _INTERPRET: bool | None = None   # None = auto (backend-resolved per call)
+
+TRAIN_ATTN_CHOICES = ("auto", "pallas", "ref")
+FFN_CHOICES = ("auto", "pallas", "ref")
+
+
+def _resolve_impl(impl: str, env_var: str, choices: tuple, kind: str) -> str:
+    """Env override -> validate -> backend-auto.  Unknown values fail fast
+    with the valid choices listed (same contract as REPRO_DECODE_ATTN)."""
+    env = os.environ.get(env_var, "").strip().lower()
+    if env:
+        if env not in choices:
+            raise ValueError(
+                f"{env_var}={env!r} is not a valid {kind} impl; "
+                f"valid choices: {', '.join(choices)}")
+        impl = env
+    if impl not in choices:
+        raise ValueError(
+            f"unknown {kind} impl {impl!r}; valid choices: "
+            f"{', '.join(choices)}")
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def resolve_train_attn_impl(impl: str = "auto") -> str:
+    """Training/prefill attention backend: pallas flash-attention vs the
+    jnp reference (full/chunked softmax in models.attention)."""
+    return _resolve_impl(impl, "REPRO_ATTN_IMPL", TRAIN_ATTN_CHOICES,
+                         "train-attention")
+
+
+def resolve_ffn_impl(impl: str = "auto") -> str:
+    """Dense-FFN backend: fused Pallas SwiGLU vs the jnp reference."""
+    return _resolve_impl(impl, "REPRO_FFN_IMPL", FFN_CHOICES, "ffn")
+
+
+_LOGGED_IMPLS: set = set()
+
+
+def log_impl_selection(op: str, impl: str, detail: str = "") -> None:
+    """Log one (op, impl) choice exactly once per process (Runtime.describe
+    funnels its resolved kernel selection through here)."""
+    key = (op, impl, detail)
+    if key in _LOGGED_IMPLS:
+        return
+    _LOGGED_IMPLS.add(key)
+    logger.info("kernel selection: %s -> %s%s", op, impl,
+                f" ({detail})" if detail else "")
 
 
 def set_interpret_mode(on: bool | None):

@@ -15,7 +15,13 @@ Sharding modes (picked by ``core.topology`` per arch × mesh):
 KV-chunked online softmax (``attn_chunk_kv`` rule) bounds the score
 materialization to [B,H,S,chunk] — the jnp analog of flash attention's
 blocking, used for the 32k prefill cells; the Pallas kernel
-(kernels/flash_attention.py) is the TPU-native version of the same blocking.
+(kernels/flash_attention.py) is the TPU-native version of the same blocking
+and is wired into this module's train/prefill forward: the
+``train_attn_impl`` activation rule (resolved through
+``kernels.ops.resolve_train_attn_impl`` — "auto" = Pallas on TPU, ref
+elsewhere; ``REPRO_ATTN_IMPL`` override) routes eligible layers through the
+differentiable flash kernel, with ``flash_train_supported`` gating on
+softcap/head-dim/block-divisibility and standard (arange) positions.
 
 Decode is context-parallel: the KV cache is sharded along T (flash-decode
 style); softmax over the sharded axis lowers to small all-reduces.
@@ -96,15 +102,21 @@ def _chunked_attend(q, k, v, q_pos, kv_pos, causal, window, softcap, scale,
     vs = v.reshape(B, nk, chunk, H, Dh).swapaxes(0, 1)
     ps = kv_pos.reshape(B, nk, chunk).swapaxes(0, 1)
 
+    # kv-position mask constants hoisted out of the scan body: the [B,S,1]
+    # q-position bounds are chunk-invariant, so each iteration only does the
+    # [B,S,chunk] compares against them
+    q_hi = q_pos[:, :, None]                              # [B,S,1]
+    q_lo = q_hi - window if (causal and window is not None) else None
+
     def body(carry, inp):
         m, l, acc = carry
         kc, vc, pc = inp
         s = jnp.einsum("bshd,bchd->bhsc", q, kc).astype(jnp.float32) * scale
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
-        valid = pc[:, None, :] <= q_pos[:, :, None] if causal else pc[:, None, :] < 2**30
-        if causal and window is not None:
-            valid &= pc[:, None, :] > (q_pos[:, :, None] - window)
+        valid = pc[:, None, :] <= q_hi if causal else pc[:, None, :] < 2**30
+        if q_lo is not None:
+            valid &= pc[:, None, :] > q_lo
         s = jnp.where(valid[:, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -127,6 +139,32 @@ def _chunked_attend(q, k, v, q_pos, kv_pos, causal, window, softcap, scale,
 # ---------------------------------------------------------------------------
 
 
+def flash_train_supported(cfg: ModelConfig, S: int, T: int, Dh: int) -> bool:
+    """Whether the Pallas flash-attention kernel can express this
+    train/prefill attention shape.
+
+    The kernel has no logit-softcap variant, its VMEM claim is sized for
+    head dims <= 256, and its grid needs both sequence axes to split into
+    equal blocks (len <= block or len % block == 0).  Positional
+    eligibility (standard arange positions for causal masking) is checked
+    by the caller, which knows whether positions were auto-generated."""
+    from repro.kernels.flash_attention import DEFAULT_BK, DEFAULT_BQ
+    return (cfg.attn_logit_softcap is None
+            and Dh <= 256
+            and (S <= DEFAULT_BQ or S % DEFAULT_BQ == 0)
+            and (T <= DEFAULT_BK or T % DEFAULT_BK == 0))
+
+
+def _flash_attend(q, k, v, causal: bool, window: Optional[int]):
+    """Route [B,S,H,dh]-layout q/k/v through the differentiable Pallas flash
+    kernel ([B,H,S,dh] layout) and back."""
+    from repro.kernels import ops as kernel_ops
+    out = kernel_ops.flash_attention(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, window=(window or 0) if causal else 0)
+    return out.swapaxes(1, 2)
+
+
 def attention(x: jax.Array, params: dict, cfg: ModelConfig, *,
               positions: Optional[jax.Array] = None,
               causal: bool = True,
@@ -135,11 +173,14 @@ def attention(x: jax.Array, params: dict, cfg: ModelConfig, *,
               return_kv: bool = False):
     """x [B,S,D] -> [B,S,D].  ``kv_x`` switches to cross-attention (no rope,
     no causal mask).  ``return_kv`` also returns grouped (k, v) for prefill
-    caching."""
+    caching.  ``positions=None`` means the standard arange — the only
+    positional layout the Pallas flash kernel can express for causal
+    masking, so it doubles as the flash-eligibility signal."""
     B, S, D = x.shape
     H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     src = x if kv_x is None else kv_x
     T = src.shape[1]
+    std_positions = positions is None
 
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
     k = jnp.einsum("btd,dhk->bthk", src, params["wk"].astype(x.dtype))
@@ -175,8 +216,16 @@ def attention(x: jax.Array, params: dict, cfg: ModelConfig, *,
     is_causal = causal and kv_x is None
     scale = Dh ** -0.5
     rules = current_rules() or {}
+    from repro.kernels import ops as kernel_ops
+    impl = kernel_ops.resolve_train_attn_impl(
+        rules.get("train_attn_impl", "auto"))
+    use_flash = (impl == "pallas"
+                 and flash_train_supported(cfg, S, T, Dh)
+                 and (std_positions or not is_causal))
     chunk = rules.get("attn_chunk_kv", 0)
-    if chunk and T > chunk:
+    if use_flash:
+        out = _flash_attend(q, k, v, is_causal, cfg.sliding_window)
+    elif chunk and T > chunk:
         out = _chunked_attend(q, k, v, positions, kv_pos, is_causal,
                               cfg.sliding_window, cfg.attn_logit_softcap,
                               scale, chunk)

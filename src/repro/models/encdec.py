@@ -59,8 +59,8 @@ def encode(params, audio_embeds, cfg: ModelConfig, *, attn_mode="heads"):
     """audio_embeds [B,T,D] -> encoder memory [B,T,D]."""
     enc_cfg = _enc_cfg(cfg)
     x = shard(audio_embeds.astype(cfg.dtype), "batch", "seq_act", "embed_act")
-    pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
-    x, _, _ = run_groups(x, params["enc_groups"], enc_cfg, positions=pos,
+    # positions=None = standard arange (flash-kernel eligible)
+    x, _, _ = run_groups(x, params["enc_groups"], enc_cfg, positions=None,
                          attn_mode=attn_mode, causal=False)
     return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
 
@@ -71,8 +71,7 @@ def encdec_forward(params, tokens, audio_embeds, cfg: ModelConfig, *,
     dec_cfg = _dec_groups(cfg)
     memory = encode(params, audio_embeds, cfg, attn_mode=attn_mode)
     x = _embed(params, tokens, dec_cfg)
-    pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
-    x, aux, caches = run_groups(x, params["groups"], dec_cfg, positions=pos,
+    x, aux, caches = run_groups(x, params["groups"], dec_cfg, positions=None,
                                 attn_mode=attn_mode, memory=memory,
                                 collect_cache=collect_cache)
     if last_index is not None:

@@ -65,9 +65,12 @@ def lm_forward(params, tokens, cfg: ModelConfig, *,
     x = _embed(params, tokens, cfg, positions)
     if extra_embeds is not None:
         x = jnp.concatenate([extra_embeds.astype(cfg.dtype), x], axis=1)
+        # positions cover the concatenated sequence: the standard arange
+        positions = None
     B, S, _ = x.shape
-    if positions is None or extra_embeds is not None:
-        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    # positions=None propagates "standard arange" down to attention, which
+    # generates it — and may route through the Pallas flash kernel (whose
+    # causal mask bakes arange positions in)
     x, aux, caches = run_groups(
         x, params["groups"], cfg, positions=positions, attn_mode=attn_mode,
         collect_cache=collect_cache)
@@ -100,8 +103,9 @@ def lm_loss(params, batch: dict, cfg: ModelConfig, *,
         if extra is not None:
             x = jnp.concatenate([extra.astype(cfg.dtype), x], axis=1)
         S = x.shape[1]
-        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
-        x, aux, _ = run_groups(x, params["groups"], cfg, positions=positions,
+        # positions=None = standard arange (keeps the flash fast path
+        # eligible on the large-vocab ce_chunk train cells)
+        x, aux, _ = run_groups(x, params["groups"], cfg, positions=None,
                                attn_mode=attn_mode)
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         if S != labels.shape[1]:

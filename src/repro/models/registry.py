@@ -50,6 +50,11 @@ class Capabilities:
     entries).  ``supports_flash_decode`` -> the Pallas flash-decode kernel
     can express the arch (no logit softcap; per-layer shape eligibility is
     still re-checked at trace time by models.attention).
+    ``supports_flash_train`` / ``supports_fused_ffn`` are the train/prefill
+    analogs: the differentiable flash-attention kernel (no softcap variant)
+    and the fused SwiGLU kernel (silu gating only — GeGLU archs keep the
+    jnp path); per-call shape eligibility is re-checked at trace time
+    (models.attention.flash_train_supported, models.mlp.fused_ffn_supported).
     """
 
     has_encoder: bool            # enc-dec: cross-attn memory, stub frontend
@@ -58,11 +63,14 @@ class Capabilities:
     softcap: bool                # attention logit softcap present
     subquadratic: bool           # long_500k-feasible context handling
     supports_flash_decode: bool  # Pallas flash-decode kernel expressible
+    supports_flash_train: bool   # Pallas train/prefill flash-attn expressible
+    supports_fused_ffn: bool     # Pallas fused SwiGLU (dense FFN) expressible
 
     @property
     def summary(self) -> str:
         on = [n for n in ("has_encoder", "has_frontend", "swa", "softcap",
-                          "subquadratic", "supports_flash_decode")
+                          "subquadratic", "supports_flash_decode",
+                          "supports_flash_train", "supports_fused_ffn")
               if getattr(self, n)]
         return ",".join(on) or "-"
 
@@ -102,6 +110,9 @@ class ModelFamily:
             softcap=cfg.attn_logit_softcap is not None,
             subquadratic=cfg.subquadratic,
             supports_flash_decode=cfg.attn_logit_softcap is None,
+            supports_flash_train=(cfg.attn_logit_softcap is None
+                                  and cfg.head_dim <= 256),
+            supports_fused_ffn=cfg.mlp_act == "silu",
         )
 
 

@@ -52,7 +52,9 @@ class Runtime:
     def __init__(self, *, arch: str, cfg: ModelConfig,
                  family: registry.ModelFamily, mesh, plan: Plan, specs,
                  seq_len: int, capacity: int, attn_impl: str,
-                 param_dtype, seed: int, params=None, plan_kw=None):
+                 ffn_impl: str = "auto",
+                 param_dtype=jnp.float32, seed: int = 0, params=None,
+                 plan_kw=None):
         self.arch = arch
         self.cfg = cfg
         self.family = family
@@ -63,6 +65,7 @@ class Runtime:
         self.seq_len = seq_len
         self.capacity = capacity
         self.attn_impl = attn_impl          # requested; resolution is lazy
+        self.ffn_impl = ffn_impl            # requested; resolution is lazy
         self.param_dtype = param_dtype
         self.seed = seed
         self.plan_kw = dict(plan_kw or {})
@@ -76,6 +79,7 @@ class Runtime:
                shape_kind: str = "decode", smoke: bool = False,
                seq_len: Optional[int] = None, capacity: Optional[int] = None,
                grad_sync: str = "hierarchical", attn_impl: str = "auto",
+               ffn_impl: str = "auto",
                param_dtype=jnp.float32, seed: int = 0, params=None,
                plan_kw: Optional[dict] = None) -> "Runtime":
         """Build the full chain for one cell.
@@ -116,12 +120,14 @@ class Runtime:
         return cls(arch=name, cfg=cfg, family=family, mesh=mesh, plan=plan,
                    specs=family.specs(cfg), seq_len=seq_len,
                    capacity=capacity, attn_impl=attn_impl,
+                   ffn_impl=ffn_impl,
                    param_dtype=param_dtype, seed=seed, params=params,
                    plan_kw=plan_kw)
 
     def reshape(self, *, shape_kind: str, seq_len: Optional[int] = None,
                 capacity: Optional[int] = None, grad_sync: Optional[str] = None,
                 attn_impl: Optional[str] = None,
+                ffn_impl: Optional[str] = None,
                 plan_kw: Optional[dict] = None) -> "Runtime":
         """A new Runtime over the same cfg/params with a re-planned fabric
         mapping (e.g. train -> decode); materialized params and the original
@@ -131,6 +137,7 @@ class Runtime:
             seq_len=seq_len, capacity=capacity,
             grad_sync=grad_sync if grad_sync is not None else self.plan.grad_sync,
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
+            ffn_impl=ffn_impl if ffn_impl is not None else self.ffn_impl,
             param_dtype=self.param_dtype, seed=self.seed,
             params=self._params, plan_kw={**self.plan_kw, **(plan_kw or {})})
 
@@ -179,12 +186,14 @@ class Runtime:
                         microbatches: int = 1) -> Callable:
         return train_steps.make_train_step(
             self.cfg, self.plan, self.specs, self.mesh, schedule=schedule,
-            opt_cfg=opt_cfg, microbatches=microbatches)
+            opt_cfg=opt_cfg, microbatches=microbatches,
+            attn_impl=self.attn_impl, ffn_impl=self.ffn_impl)
 
     def make_prefill_step(self, *, capacity: Optional[int] = None) -> Callable:
         return serve_steps.make_prefill_step(
             self.cfg, self.plan, self.mesh,
-            capacity=capacity if capacity is not None else self.capacity)
+            capacity=capacity if capacity is not None else self.capacity,
+            attn_impl=self.attn_impl, ffn_impl=self.ffn_impl)
 
     def make_decode_step(self, *, attn_impl: Optional[str] = None,
                          advance_pos: bool = False) -> Callable:
@@ -219,11 +228,19 @@ class Runtime:
     def _with_rules(self, fn):
         """Run ``fn`` under the plan's activation rules when a mesh exists;
         without one the model-level path is left bare so it is bit-for-bit
-        the legacy ``models/api`` path (the registry parity contract)."""
+        the legacy ``models/api`` path (the registry parity contract) —
+        unless a non-default kernel impl was requested, in which case only
+        the impl-selection rules are installed (models resolve "auto" to
+        the same backend either way, so parity is preserved)."""
+        impls = {"train_attn_impl": self.attn_impl, "ffn_impl": self.ffn_impl}
         if self.mesh is None:
-            return fn()
+            if self.attn_impl == "auto" and self.ffn_impl == "auto":
+                return fn()
+            with activation_sharding(impls):
+                return fn()
         rules = dict(self.plan.act_rules)
         rules["mesh"] = self.mesh
+        rules.update(impls)
         with activation_sharding(rules):
             return fn()
 
@@ -300,21 +317,51 @@ class Runtime:
         (env override + capability fallback applied now)."""
         return serve_steps.resolve_decode_attn_impl(self.attn_impl, self.cfg)
 
+    @property
+    def train_attn_impl(self) -> str:
+        """The train/prefill attention backend this Runtime will actually
+        use (env override + capability fallback applied now; per-call shape
+        eligibility is still re-checked at trace time)."""
+        from repro.kernels import ops as kernel_ops
+        impl = kernel_ops.resolve_train_attn_impl(self.attn_impl)
+        if impl == "pallas" and not self.caps.supports_flash_train:
+            impl = "ref"
+        return impl
+
+    @property
+    def fused_ffn_impl(self) -> str:
+        """The dense-FFN backend this Runtime will actually use (env
+        override + capability fallback applied now)."""
+        from repro.kernels import ops as kernel_ops
+        impl = kernel_ops.resolve_ffn_impl(self.ffn_impl)
+        if impl == "pallas" and not self.caps.supports_fused_ffn:
+            impl = "ref"
+        return impl
+
     def describe(self) -> str:
         """Plan + tier placement + kernel selection in one report."""
+        from repro.kernels import ops as kernel_ops
         plan = self.plan
         tiers = ", ".join(
             f"{ax}({sz})->{plan.fabric.axis_tier.get(ax, 'local')}"
             for ax, sz in plan.mesh_axes.items()) or "single-device"
+        train_attn, ffn = self.train_attn_impl, self.fused_ffn_impl
+        decode_attn = self.decode_attn_impl
+        for op, impl in (("train_attn", train_attn), ("ffn", ffn),
+                         ("decode_attn", decode_attn)):
+            kernel_ops.log_impl_selection(op, impl, detail=self.cfg.name)
         lines = [
             f"runtime[{self.cfg.name}] family={self.family.name} "
             f"params={self.num_params:,}",
             f"  caps      : {self.caps.summary}",
             f"  tiers     : {tiers} (fabric {plan.fabric.name})",
             topology.describe(plan),
-            f"  kernels   : decode_attn={self.decode_attn_impl} "
-            f"(requested {self.attn_impl}); flash_decode_ok="
-            f"{self.caps.supports_flash_decode}",
+            f"  kernels   : train_attn={train_attn} ffn={ffn} "
+            f"decode_attn={decode_attn} "
+            f"(requested attn={self.attn_impl} ffn={self.ffn_impl}); "
+            f"flash_train_ok={self.caps.supports_flash_train} "
+            f"fused_ffn_ok={self.caps.supports_fused_ffn} "
+            f"flash_decode_ok={self.caps.supports_flash_decode}",
             f"  serve     : capacity={self.capacity} "
             f"swa_bucketing={'exact' if self.caps.swa else 'pow2'}",
         ]

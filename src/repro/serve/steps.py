@@ -26,7 +26,6 @@ contracts):
 """
 from __future__ import annotations
 
-import os
 from typing import Callable
 
 import jax
@@ -62,40 +61,36 @@ def resolve_decode_attn_impl(impl: str, cfg: ModelConfig) -> str:
     "pallas"/"ref" are honored as-is (CPU "pallas" runs the kernel in
     interpret mode — the numerics-validation path).  ``REPRO_DECODE_ATTN``
     overrides everything; unknown values fail fast instead of silently
-    selecting a fallback.  Archs whose registry capabilities rule the kernel
-    out (``supports_flash_decode`` is False, e.g. logit softcap) resolve to
-    "ref"; per-layer shape eligibility is still re-checked at trace time
+    selecting a fallback (the shared ``kernels.ops`` policy).  Archs whose
+    registry capabilities rule the kernel out (``supports_flash_decode`` is
+    False, e.g. logit softcap) resolve to "ref"; per-layer shape eligibility
+    is still re-checked at trace time
     (models.attention.pallas_decode_supported)."""
-    env = os.environ.get("REPRO_DECODE_ATTN", "").strip().lower()
-    if env:
-        if env not in DECODE_ATTN_CHOICES:
-            raise ValueError(
-                f"REPRO_DECODE_ATTN={env!r} is not a valid decode-attention "
-                f"impl; valid choices: {', '.join(DECODE_ATTN_CHOICES)}")
-        impl = env
-    if impl not in DECODE_ATTN_CHOICES:
-        raise ValueError(
-            f"unknown decode attn impl {impl!r}; valid choices: "
-            f"{', '.join(DECODE_ATTN_CHOICES)}")
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    from repro.kernels.ops import _resolve_impl
+    impl = _resolve_impl(impl, "REPRO_DECODE_ATTN", DECODE_ATTN_CHOICES,
+                         "decode-attention")
     if impl == "pallas" and not capabilities(cfg).supports_flash_decode:
         impl = "ref"
     return impl
 
 
 def make_prefill_step(cfg: ModelConfig, plan: Plan, mesh, *,
-                      capacity: int) -> Callable:
+                      capacity: int, attn_impl: str = "auto",
+                      ffn_impl: str = "auto") -> Callable:
     """(params, batch) -> (next_token [B], caches).
 
     ``capacity`` is the decode-cache length the caches are padded to
     (ring-buffer size for SWA archs).  ``batch["lengths"]`` [B] int32, when
     present, marks rows as right-padded to a common bucket length: the
     next token comes from each row's true last position and pad cache
-    entries are invalidated.
+    entries are invalidated.  ``attn_impl`` / ``ffn_impl`` select the
+    prefill-forward kernels (flash attention / fused SwiGLU; resolution +
+    env overrides live in kernels.ops).
     """
     rules = dict(plan.act_rules)
     rules["mesh"] = mesh
+    rules["train_attn_impl"] = attn_impl
+    rules["ffn_impl"] = ffn_impl
     caps = capabilities(cfg)
 
     def prefill(params, batch):

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.test_util import check_grads
 
 from repro.kernels import ops, ref
 
@@ -109,3 +110,69 @@ def test_swiglu_ffn(N, D, F, dtype):
     tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(y.astype(jnp.float32),
                                want.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+# -- custom-VJP gradient parity (the training fast path's contract) ---------
+
+
+@pytest.mark.parametrize("B,H,S,D", [(2, 2, 128, 32), (1, 2, 256, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 64)])
+def test_flash_attention_grads_match_ref(B, H, S, D, causal, window):
+    """vjp through the Pallas flash kernel == vjp through the jnp oracle
+    for the same cotangent (causal / non-causal / sliding-window)."""
+    q, k, v = (_rand((B, H, S, D), i=i) for i in range(3))
+    g = _rand((B, H, S, D), i=11)
+
+    def fast(q, k, v):
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   bq=64, bk=64)
+
+    def oracle(q, k, v):
+        return ref.ref_attention(q, k, v, causal=causal, window=window)
+
+    out, vjp = jax.vjp(fast, q, k, v)
+    out_r, vjp_r = jax.vjp(oracle, q, k, v)
+    np.testing.assert_allclose(out, out_r, atol=2e-5, rtol=2e-5)
+    for got, want, name in zip(vjp(g), vjp_r(g), ("dq", "dk", "dv")):
+        np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4,
+                                   err_msg=name)
+
+
+def test_flash_attention_check_grads():
+    q, k, v = (_rand((1, 2, 64, 16), i=i, scale=0.5) for i in range(3))
+    check_grads(
+        lambda q, k, v: ops.flash_attention(q, k, v, causal=True, window=0,
+                                            bq=32, bk=32),
+        (q, k, v), order=1, modes=["rev"], atol=5e-2, rtol=5e-2)
+
+
+@pytest.mark.parametrize("N,D,F,br,bf", [(128, 64, 256, 64, 128),
+                                         (256, 32, 128, 128, 64)])
+def test_swiglu_ffn_grads_match_ref(N, D, F, br, bf):
+    """vjp through the fused Pallas FFN == vjp through the jnp oracle for
+    every operand (x, w_gate, w_up, w_down)."""
+    x = _rand((N, D), i=7)
+    wg = _rand((D, F), i=8, scale=0.05)
+    wu = _rand((D, F), i=9, scale=0.05)
+    wd = _rand((F, D), i=10, scale=0.05)
+    dy = _rand((N, D), i=12)
+
+    y, vjp = jax.vjp(lambda *a: ops.swiglu_ffn(*a, br=br, bf=bf),
+                     x, wg, wu, wd)
+    y_r, vjp_r = jax.vjp(ref.ref_swiglu_ffn, x, wg, wu, wd)
+    np.testing.assert_allclose(y, y_r, atol=1e-5, rtol=1e-5)
+    for got, want, name in zip(vjp(dy), vjp_r(dy),
+                               ("dx", "dw_gate", "dw_up", "dw_down")):
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4,
+                                   err_msg=name)
+
+
+def test_swiglu_ffn_check_grads():
+    x = _rand((64, 16), i=7, scale=0.5)
+    wg = _rand((16, 64), i=8, scale=0.1)
+    wu = _rand((16, 64), i=9, scale=0.1)
+    wd = _rand((64, 16), i=10, scale=0.1)
+    check_grads(
+        lambda *a: ops.swiglu_ffn(*a, br=32, bf=32),
+        (x, wg, wu, wd), order=1, modes=["rev"], atol=5e-2, rtol=5e-2)

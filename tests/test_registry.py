@@ -55,8 +55,12 @@ def test_capability_flags():
     capped = registry.capabilities(
         get_smoke_config("llama3.2-3b").scaled(attn_logit_softcap=30.0))
     assert capped.softcap and not capped.supports_flash_decode
+    assert not capped.supports_flash_train
     plain = registry.capabilities(get_smoke_config("llama3.2-3b"))
     assert plain.supports_flash_decode and not plain.softcap
+    assert plain.supports_flash_train and plain.supports_fused_ffn
+    geglu = registry.capabilities(get_smoke_config("gemma-2b"))
+    assert not geglu.supports_fused_ffn      # GeGLU: fused kernel is silu-only
 
 
 def test_register_family_rejects_duplicates():
@@ -121,6 +125,37 @@ def test_runtime_reshape_shares_params():
     assert a is b                      # same materialized tree, no re-init
 
 
+# -- all-arch train-kernel selection validity -------------------------------
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_every_arch_picks_a_valid_train_impl(arch):
+    """Every arch resolves to a *valid* train-attention / FFN impl, and no
+    arch whose shapes the kernels support silently falls through to ref
+    when Pallas is requested (what "auto" resolves to on TPU)."""
+    from repro.models.attention import flash_train_supported
+    from repro.models.mlp import fused_ffn_supported
+    rt = Runtime.create(arch, smoke=True, shape_kind="train", seq_len=16)
+    assert rt.train_attn_impl in ("pallas", "ref")
+    assert rt.fused_ffn_impl in ("pallas", "ref")
+
+    forced = rt.reshape(shape_kind="train", attn_impl="pallas",
+                        ffn_impl="pallas")
+    cfg = rt.cfg
+    if rt.caps.supports_flash_train:
+        # capability says yes -> forcing pallas must stay pallas and the
+        # smoke shapes must pass the per-call trace-time gate too
+        assert forced.train_attn_impl == "pallas"
+        assert flash_train_supported(cfg, 16, 16, cfg.head_dim)
+    else:
+        assert forced.train_attn_impl == "ref"
+    if rt.caps.supports_fused_ffn:
+        assert forced.fused_ffn_impl == "pallas"
+        assert fused_ffn_supported(cfg, 2 * 16, cfg.d_ff)
+    else:
+        assert forced.fused_ffn_impl == "ref"
+
+
 # -- satellite: mesh_from_spec is the one axis-naming table -----------------
 
 
@@ -134,7 +169,7 @@ def test_mesh_from_spec_axis_table():
         mesh_from_spec("1x1x1x1")
 
 
-# -- satellite: REPRO_DECODE_ATTN fails fast --------------------------------
+# -- satellite: REPRO_DECODE_ATTN / REPRO_ATTN_IMPL / REPRO_FFN_IMPL fail fast
 
 
 def test_bad_decode_attn_env_fails_fast(monkeypatch):
@@ -144,3 +179,14 @@ def test_bad_decode_attn_env_fails_fast(monkeypatch):
         resolve_decode_attn_impl("auto", cfg)
     monkeypatch.setenv("REPRO_DECODE_ATTN", "auto")
     assert resolve_decode_attn_impl("ref", cfg) in ("pallas", "ref")
+
+
+def test_bad_train_impl_envs_fail_fast(monkeypatch):
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "bogus")
+    with pytest.raises(ValueError, match="valid choices.*pallas"):
+        ops.resolve_train_attn_impl("auto")
+    monkeypatch.delenv("REPRO_ATTN_IMPL")
+    monkeypatch.setenv("REPRO_FFN_IMPL", "bogus")
+    with pytest.raises(ValueError, match="valid choices.*pallas"):
+        ops.resolve_ffn_impl("auto")

@@ -1,0 +1,271 @@
+"""Training/prefill fast-path tests: Pallas flash-attention + fused SwiGLU
+wired through the model forward.
+
+Model-level parity (f32 smoke configs so 1e-4 logit / 1e-3 grad tolerances
+are meaningful) between ``train_attn_impl/ffn_impl = "pallas"`` and
+``"ref"`` across the arch families the kernels support, capability-driven
+fallback (softcap -> ref attention, GeGLU -> ref FFN), the fail-fast
+``REPRO_ATTN_IMPL`` / ``REPRO_FFN_IMPL`` validation, and the hoisted
+chunked-attend mask path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.kernels import ops
+from repro.models import registry
+from repro.models.attention import (_chunked_attend, _full_attend, _mask,
+                                    flash_train_supported)
+from repro.models.common import init_params
+from repro.models.mlp import fused_ffn_supported
+from repro.models.sharding import activation_sharding
+from repro.runtime import Runtime
+
+# dense+GQA, SWA+MoE, qk-norm, enc-dec, vlm frontend — one per wiring shape
+PARITY_ARCHS = ("exanode-100m", "mixtral-8x7b", "qwen3-4b", "whisper-tiny",
+                "internvl2-26b")
+
+
+def _f32_cfg(arch):
+    return get_smoke_config(arch).scaled(dtype=jnp.float32)
+
+
+def _batch(cfg, B=2, S=16):
+    k = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.fold_in(k, 1), (B, S),
+                                          0, cfg.vocab_size)}
+    if registry.capabilities(cfg).has_encoder:
+        batch["audio_embeds"] = jax.random.normal(
+            jax.random.fold_in(k, 2), (B, 16, cfg.d_model), jnp.float32)
+    elif cfg.frontend:
+        batch["extra_embeds"] = jax.random.normal(
+            jax.random.fold_in(k, 3), (B, 4, cfg.d_model), jnp.float32)
+    return batch
+
+
+def _loss_and_grads(cfg, impl, params, batch):
+    fam = registry.resolve(cfg)
+    with activation_sharding({"train_attn_impl": impl, "ffn_impl": impl}):
+        (loss, _), grads = jax.jit(jax.value_and_grad(
+            lambda p: fam.loss(p, batch, cfg), has_aux=True))(params)
+    return loss, grads
+
+
+# -- model-level forward + backward parity ----------------------------------
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_train_step_pallas_matches_ref(arch):
+    """loss AND grads of the full family loss (scan + remat + CE) match
+    between the Pallas fast path and the jnp reference."""
+    cfg = _f32_cfg(arch)
+    fam = registry.resolve(cfg)
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    batch = _batch(cfg)
+
+    loss_ref, grads_ref = _loss_and_grads(cfg, "ref", params, batch)
+    loss_fast, grads_fast = _loss_and_grads(cfg, "pallas", params, batch)
+
+    np.testing.assert_allclose(loss_fast, loss_ref, atol=1e-4, rtol=1e-4)
+    flat_fast = jax.tree_util.tree_flatten_with_path(grads_fast)[0]
+    flat_ref = jax.tree_util.tree_flatten_with_path(grads_ref)[0]
+    for (path, a), (_, b) in zip(flat_fast, flat_ref):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3,
+            err_msg=jax.tree_util.keystr(path))
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_forward_logits_pallas_match_ref(arch):
+    """Full-sequence forward logits <= 1e-4 from the reference (the
+    acceptance tolerance) for every supported arch."""
+    cfg = _f32_cfg(arch)
+    fam = registry.resolve(cfg)
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    batch = _batch(cfg)
+    outs = {}
+    for impl in ("ref", "pallas"):
+        with activation_sharding({"train_attn_impl": impl,
+                                  "ffn_impl": impl}):
+            logits, _ = jax.jit(
+                lambda p, b: fam.forward(p, b, cfg))(params, batch)
+        outs[impl] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["pallas"], outs["ref"],
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_prefill_pallas_matches_ref():
+    """Serve prefill (the other consumer of the train forward) agrees
+    between impls and produces identical next tokens."""
+    cfg = _f32_cfg("llama3.2-3b")
+    rt_ref = Runtime.create(cfg, shape_kind="decode", capacity=24,
+                            attn_impl="ref", ffn_impl="ref")
+    rt_fast = Runtime.create(cfg, shape_kind="decode", capacity=24,
+                             attn_impl="pallas", ffn_impl="pallas")
+    rt_fast.params = rt_ref.params
+    batch = {"tokens": _batch(cfg)["tokens"]}
+    logits_ref, caches_ref = rt_ref.prefill(batch, last_only=True)
+    logits_fast, caches_fast = rt_fast.prefill(batch, last_only=True)
+    np.testing.assert_allclose(np.asarray(logits_fast),
+                               np.asarray(logits_ref), atol=1e-4, rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(caches_fast), jax.tree.leaves(caches_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# -- capability-driven fallback ---------------------------------------------
+
+
+def test_softcap_grads_match_ref():
+    """Softcap config under forced pallas: the fallback path must keep
+    gradient parity with ref (the custom-VJP wiring may not leak into the
+    unsupported case)."""
+    cfg = _f32_cfg("exanode-100m").scaled(attn_logit_softcap=20.0)
+    fam = registry.resolve(cfg)
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    batch = _batch(cfg)
+    loss_ref, grads_ref = _loss_and_grads(cfg, "ref", params, batch)
+    loss_fast, grads_fast = _loss_and_grads(cfg, "pallas", params, batch)
+    np.testing.assert_allclose(loss_fast, loss_ref, atol=1e-4, rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(grads_fast), jax.tree.leaves(grads_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_softcap_falls_back_to_ref_bitwise():
+    """Softcap rules the flash kernel out: forcing pallas must produce the
+    *identical* (ref) computation, not a silently-wrong kernel call."""
+    cfg = _f32_cfg("llama3.2-3b").scaled(attn_logit_softcap=30.0)
+    fam = registry.resolve(cfg)
+    assert not registry.capabilities(cfg).supports_flash_train
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    batch = _batch(cfg)
+    outs = {}
+    for impl in ("ref", "pallas"):
+        with activation_sharding({"train_attn_impl": impl,
+                                  "ffn_impl": "ref"}):
+            logits, _ = jax.jit(
+                lambda p, b: fam.forward(p, b, cfg))(params, batch)
+        outs[impl] = np.asarray(logits)
+    np.testing.assert_array_equal(outs["pallas"], outs["ref"])
+
+
+def test_geglu_ffn_falls_back_to_ref_bitwise():
+    """gelu-gated archs (gemma/granite) keep the jnp FFN even when pallas
+    is forced — the fused kernel is SwiGLU-only."""
+    cfg = _f32_cfg("gemma-2b")
+    assert cfg.mlp_act == "gelu"
+    assert not registry.capabilities(cfg).supports_fused_ffn
+    assert not fused_ffn_supported(cfg, 32, cfg.d_ff)
+    fam = registry.resolve(cfg)
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    batch = _batch(cfg)
+    outs = {}
+    for impl in ("ref", "pallas"):
+        with activation_sharding({"train_attn_impl": "ref",
+                                  "ffn_impl": impl}):
+            logits, _ = jax.jit(
+                lambda p, b: fam.forward(p, b, cfg))(params, batch)
+        outs[impl] = np.asarray(logits)
+    np.testing.assert_array_equal(outs["pallas"], outs["ref"])
+
+
+def test_flash_train_supported_shape_gate():
+    cfg = _f32_cfg("exanode-100m")
+    assert flash_train_supported(cfg, 16, 16, cfg.head_dim)
+    assert flash_train_supported(cfg, 512, 512, cfg.head_dim)
+    assert not flash_train_supported(cfg, 384, 384, cfg.head_dim)  # 384%256
+    assert not flash_train_supported(cfg, 16, 16, 512)             # head dim
+    capped = cfg.scaled(attn_logit_softcap=30.0)
+    assert not flash_train_supported(capped, 16, 16, cfg.head_dim)
+
+
+def test_nonstandard_positions_fall_back():
+    """Explicit (non-arange) positions cannot use the flash kernel's baked
+    arange mask — attention must keep the jnp path."""
+    from repro.models.attention import attention
+    cfg = _f32_cfg("exanode-100m")
+    fam = registry.resolve(cfg)
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    layer = jax.tree.map(lambda p: p[0], params["groups"][0]["sub0"]["attn"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    shifted = jnp.arange(5, 21, dtype=jnp.int32)[None, :]
+    with activation_sharding({"train_attn_impl": "pallas"}):
+        got = attention(x, layer, cfg, positions=shifted)
+    want = attention(x, layer, cfg, positions=shifted)   # bare = ref on CPU
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- env-override fail-fast --------------------------------------------------
+
+
+@pytest.mark.parametrize("env,resolve", [
+    ("REPRO_ATTN_IMPL", ops.resolve_train_attn_impl),
+    ("REPRO_FFN_IMPL", ops.resolve_ffn_impl),
+])
+def test_bad_impl_env_fails_fast(monkeypatch, env, resolve):
+    monkeypatch.setenv(env, "bogus")
+    with pytest.raises(ValueError, match="valid choices.*pallas"):
+        resolve("auto")
+    monkeypatch.setenv(env, "pallas")
+    assert resolve("ref") == "pallas"          # env wins over the request
+    monkeypatch.delenv(env)
+    with pytest.raises(ValueError, match="valid choices"):
+        resolve("bogus")
+    assert resolve("auto") in ("pallas", "ref")
+
+
+def test_env_override_reaches_the_model(monkeypatch):
+    """REPRO_ATTN_IMPL/REPRO_FFN_IMPL=pallas routes a bare (rule-less)
+    forward through the kernels — the jaxpr grows pallas_call ops."""
+    cfg = _f32_cfg("exanode-100m")
+    fam = registry.resolve(cfg)
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    batch = _batch(cfg)
+
+    def trace():
+        # fresh function object per trace: make_jaxpr rides the jit cache,
+        # which would otherwise hand back the pre-override jaxpr
+        return str(jax.make_jaxpr(
+            lambda p: fam.loss(p, batch, cfg)[0])(params))
+
+    assert "pallas_call" not in trace()
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "pallas")
+    monkeypatch.setenv("REPRO_FFN_IMPL", "pallas")
+    assert trace().count("pallas_call") == 2
+
+
+# -- chunked-attend (hoisted mask constants) --------------------------------
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_chunked_attend_matches_full(window):
+    B, S, H, Dh = 2, 64, 2, 16
+    cfg_like_scale = Dh ** -0.5
+    k = jax.random.PRNGKey(3)
+    q, kk, v = (jax.random.normal(jax.random.fold_in(k, i), (B, S, H, Dh))
+                for i in range(3))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    out_c = _chunked_attend(q, kk, v, pos, pos, True, window, None,
+                            cfg_like_scale, chunk=16)
+    mask = _mask(pos, pos, True, window)
+    out_f = _full_attend(q, kk, v, mask, None, cfg_like_scale)
+    np.testing.assert_allclose(out_c, out_f, atol=2e-5, rtol=2e-5)
+
+
+# -- describe() reports the selection ---------------------------------------
+
+
+def test_describe_reports_train_kernels():
+    rt = Runtime.create("exanode-100m", smoke=True, shape_kind="train",
+                        seq_len=32)
+    rep = rt.describe()
+    for needle in ("train_attn=", "ffn=", "decode_attn=", "flash_train_ok=",
+                   "fused_ffn_ok="):
+        assert needle in rep, (needle, rep)
+    assert rt.train_attn_impl in ("pallas", "ref")
+    assert rt.fused_ffn_impl in ("pallas", "ref")
