@@ -1,6 +1,8 @@
-"""Serve-engine throughput: fast path vs the pre-PR legacy engine.
+"""Serve-engine throughput: fast path vs the pre-PR legacy engine, and the
+paged KV layout vs the dense one.
 
     PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+                                                    [--kv-layout dense|paged]
 
 Measures decode tokens/s and admissions/s for the same mixed-length request
 flood on (a) ``_LegacyEngine`` — a faithful replica of the pre-fast-path
@@ -9,17 +11,24 @@ host-blocking token collection every tick, int64 host positions) — and
 (b) the current ``ServeEngine`` (donated in-place caches, batched bucketed
 admission, double-buffered async collection).  Both run the reference
 decode-attention path so the comparison isolates the data-path changes.
+Per-request TTFT and inter-token latency are reported as p50/p95 alongside
+tokens/s.
+
+``--kv-layout paged`` adds a dense-vs-paged section at a realistic context
+budget (``capacity=128``): the dense engine must provision every slot for
+the full capacity, while the paged engine's block pool is sized to the
+workload's actual peak usage — the K/V footprint ratio that comparison
+yields is the subsystem's reason to exist and is asserted <= 0.5.
 
 ``--smoke`` shrinks the flood for CI; the speedup line is emitted either
-way (benchmarks/common.py CSV convention), and the fast-path tokens/s and
-admissions/s land in ``BENCH_serve.json`` at the repo root so the perf
-trajectory is machine-readable across PRs.
+way (benchmarks/common.py CSV convention), and the results land in
+``BENCH_serve.json`` at the repo root so the perf trajectory is
+machine-readable across PRs.
 """
 from __future__ import annotations
 
 import json
 import os
-import sys
 import time
 
 import jax
@@ -130,10 +139,24 @@ def _run(make_engine, cfg, n_requests) -> dict:
     toks = getattr(eng, "stats", eng).tokens_out
     admitted = getattr(eng, "stats", eng).admitted
     assert len(eng.finished) == n_requests, len(eng.finished)
-    return {"wall": wall, "tok_s": toks / wall, "adm_s": admitted / wall}
+    out = {"wall": wall, "tok_s": toks / wall, "adm_s": admitted / wall}
+    if hasattr(eng, "latency_summary"):
+        out["latency"] = eng.latency_summary()
+        out["kv_bytes"] = eng.kv_cache_bytes()
+        if getattr(eng, "pool", None) is not None:
+            out["prefix_hits"] = eng.pool.prefix_hits
+            out["block_high_water"] = eng.pool.high_water
+    return out
 
 
-def main(smoke: bool = False):
+def _lat_fields(res: dict, prefix: str = "") -> dict:
+    lat = res.get("latency", {})
+    return {f"{prefix}{k}_ms": round(lat[k] * 1e3, 3)
+            for k in ("ttft_p50", "ttft_p95", "itl_p50", "itl_p95")
+            if k in lat}
+
+
+def main(smoke: bool = False, kv_layout: str = "dense"):
     n_requests = 8 if smoke else 24
     num_slots, capacity = 4, 64
     rt = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
@@ -168,7 +191,49 @@ def main(smoke: bool = False):
         "legacy_admissions_per_s": round(legacy["adm_s"], 3),
         "speedup_tokens": round(speed, 3),
         "speedup_admissions": round(adm, 3),
+        **_lat_fields(fast),
     }
+
+    if kv_layout == "paged":
+        # Dense vs paged at a realistic context budget: dense slabs must
+        # provision every slot for the full capacity; the paged pool is
+        # sized to the workload (prompts <= 16 + <= 12 new tokens -> 4
+        # blocks of 8 per slot, + the 2 reserved blocks).
+        cap128 = 128
+        bs, nblocks = 8, num_slots * 4 + 2
+        rt_d = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
+                              capacity=cap128)
+        dense = _run(lambda: rt_d.engine(num_slots=num_slots,
+                                         attn_impl="ref"),
+                     cfg, n_requests)
+        rt_p = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
+                              capacity=cap128, kv_layout="paged")
+        paged = _run(lambda: rt_p.engine(num_slots=num_slots,
+                                        attn_impl="ref", block_size=bs,
+                                        num_blocks=nblocks),
+                     cfg, n_requests)
+        ratio = paged["kv_bytes"] / dense["kv_bytes"]
+        emit("serve_paged_us_per_req", paged["wall"] * 1e6 / n_requests,
+             f"tok_s={paged['tok_s']:.1f} kv_ratio={ratio:.3f}")
+        print(f"# paged KV: {paged['tok_s']:.1f} tok/s vs dense "
+              f"{dense['tok_s']:.1f} tok/s at capacity={cap128}; "
+              f"KV footprint {paged['kv_bytes']} / {dense['kv_bytes']} B "
+              f"= {ratio:.1%} of dense "
+              f"(prefix_hits={paged['prefix_hits']})", flush=True)
+        record["paged"] = {
+            "capacity": cap128, "block_size": bs, "num_blocks": nblocks,
+            "tokens_per_s": round(paged["tok_s"], 2),
+            "dense_tokens_per_s": round(dense["tok_s"], 2),
+            "kv_bytes": paged["kv_bytes"],
+            "dense_kv_bytes": dense["kv_bytes"],
+            "kv_footprint_ratio": round(ratio, 4),
+            "prefix_hits": paged["prefix_hits"],
+            "block_high_water": paged["block_high_water"],
+            **_lat_fields(paged),
+        }
+        assert ratio <= 0.5, \
+            f"paged KV footprint {ratio:.2%} of dense exceeds the 50% bound"
+
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=1)
     print(f"# wrote {os.path.normpath(BENCH_JSON)}", flush=True)
@@ -178,4 +243,10 @@ def main(smoke: bool = False):
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv[1:])
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense")
+    ns = ap.parse_args()
+    main(smoke=ns.smoke, kv_layout=ns.kv_layout)

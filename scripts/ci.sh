@@ -25,13 +25,22 @@ python -m compileall -q src
 echo "== all-arch registry smoke =="
 python -m pytest -q tests/test_registry.py
 
-echo "== tier-1 pytest =="
-# registry smoke already ran above — skip the re-run (ROADMAP's tier-1
-# command without --ignore covers it when run standalone)
-python -m pytest -x -q --ignore=tests/test_registry.py
+echo "== paged==dense token-parity subset =="
+# the paged KV subsystem's acceptance gate: every paged-capable arch must
+# produce token-identical streams under both layouts, and the allocator /
+# kernel invariants must hold
+python -m pytest -q tests/test_paged.py
 
-echo "== serve fast-path smoke benchmark =="
-python -m benchmarks.bench_serve --smoke
+echo "== tier-1 pytest =="
+# registry + paged suites already ran above — skip the re-runs (ROADMAP's
+# tier-1 command without --ignore covers them when run standalone)
+python -m pytest -x -q --ignore=tests/test_registry.py \
+    --ignore=tests/test_paged.py
+
+echo "== serve fast-path smoke benchmark (dense + paged engines) =="
+# --kv-layout paged adds the dense-vs-paged section and asserts the paged
+# KV footprint stays <= 50% of the dense slabs for the smoke workload
+python -m benchmarks.bench_serve --smoke --kv-layout paged
 
 echo "== train-step fast-path smoke benchmark =="
 python -m benchmarks.bench_step --smoke

@@ -33,6 +33,7 @@ from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fused_ffn as _ffn
 from repro.kernels import mlstm_scan as _ml
+from repro.kernels import paged_attention as _pa
 from repro.kernels import quant as _q
 from repro.kernels import ssm_scan as _ssm
 
@@ -110,6 +111,13 @@ def flash_attention(q, k, v, *, causal=True, window=0, **kw):
 def decode_attention(q, k, v, kv_pos, pos, *, window=0, **kw):
     kw.setdefault("interpret", _interpret())
     return _da.decode_attention(q, k, v, kv_pos, pos, window=window, **kw)
+
+
+def paged_decode_attention(q, k_pool, v_pool, pos_pool, block_table, pos,
+                           **kw):
+    kw.setdefault("interpret", _interpret())
+    return _pa.paged_decode_attention(q, k_pool, v_pool, pos_pool,
+                                      block_table, pos, **kw)
 
 
 def mlstm_scan(q, k, v, i_gate, f_log, *, chunk=256, **kw):

@@ -1,0 +1,121 @@
+"""Paged single-token decode attention as a Pallas TPU kernel.
+
+The dense flash-decode kernel (decode_attention.py) streams a contiguous
+[T]-long KV cache; this kernel streams a *paged* one: K/V live in a pooled
+``[num_blocks, block_size, KV, Dh]`` tensor shared by every sequence, and
+each query row follows its int32 block table ``[B, max_blocks]`` through the
+pool.  The grid is (batch, kv-head, table-column) with the table column as
+the *minor* axis, so TPU executes one pool block per step per (b, h) and the
+online-softmax state (m, l, acc) lives in VMEM scratch across those steps —
+exactly the dense kernel's structure, with the block index indirected
+through a scalar-prefetched table (``pltpu.PrefetchScalarGridSpec``: the
+table is resident before the kernel body runs, so the DMA for step j can be
+issued from ``table[b, j]``).
+
+Masking is purely positional, which subsumes every tail case: ``pos_pool``
+carries each pool entry's absolute position (-1 = never written), so the
+partially-filled tail block of a sequence, the permanently-empty null block
+that unused table entries point at, and entries past the query's position
+all mask out identically.  GQA blocks all G = H/KV q-heads of a kv-head
+into one [G, D] tile, as in the dense kernel.
+
+No sliding-window variant: SWA archs keep the dense ring buffer (the
+registry's ``supports_paged_decode`` excludes them).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float):
+    """Grid (B, KV, M).  q_ref [G,D]; k_ref/v_ref [bs,D] (the pool block the
+    table's (b, j) entry selects); kvp_ref [bs]; tbl_ref/pos_ref are
+    scalar-prefetched; scratch m/l [G], acc [G,D]."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale          # [G,D]
+    kb = k_ref[...].astype(jnp.float32)                 # [bs,D]
+    vb = v_ref[...].astype(jnp.float32)
+    kv_pos = kvp_ref[...]                               # [bs]
+    pos = pos_ref[b]
+
+    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())))  # [G,bs]
+    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())))
+
+    @pl.when(j == nb - 1)
+    def _emit():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, pos_pool: jax.Array,
+                           block_table: jax.Array, pos: jax.Array, *,
+                           interpret: bool = True) -> jax.Array:
+    """q [B,H,D]; k_pool/v_pool [N,bs,KV,D] (grouped heads);
+    pos_pool [N,bs] int32 (-1 = empty); block_table [B,M] int32;
+    pos [B] int32 -> [B,H,D]."""
+    B, H, D = q.shape
+    bs, KV = k_pool.shape[1], k_pool.shape[2]
+    M = block_table.shape[1]
+    G = H // KV
+    scale = D ** -0.5
+
+    qg = q.reshape(B, KV, G, D)
+    kernel = functools.partial(_paged_kernel, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # block_table, pos
+        grid=(B, KV, M),
+        in_specs=[
+            pl.BlockSpec((None, None, G, D),
+                         lambda b, h, j, tbl, pos: (b, h, 0, 0)),
+            pl.BlockSpec((None, bs, None, D),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((None, bs, None, D),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((None, bs),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, D),
+                               lambda b, h, j, tbl, pos: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_table, pos, qg, k_pool, v_pool, pos_pool)
+    return out.reshape(B, H, D)

@@ -47,6 +47,22 @@ def ref_decode_attention(q, k, v, kv_pos, pos, *, window=0):
         .astype(q.dtype)
 
 
+def ref_paged_decode_attention(q, k_pool, v_pool, pos_pool, block_table, pos):
+    """Paged decode attention by explicit gather: q [B,H,D];
+    k_pool/v_pool [N,bs,H,D]; pos_pool [N,bs] (-1 = empty);
+    block_table [B,M]; pos [B] -> [B,H,D].
+
+    Gathers each row's blocks into a contiguous [B, M*bs, H, D] cache and
+    runs the dense decode oracle over it — the reference the Pallas paged
+    kernel (which never materializes the gather) is tested against."""
+    B, M = block_table.shape
+    bs = k_pool.shape[1]
+    k = k_pool[block_table.reshape(-1)].reshape(B, M * bs, *k_pool.shape[2:])
+    v = v_pool[block_table.reshape(-1)].reshape(B, M * bs, *v_pool.shape[2:])
+    kv_pos = pos_pool[block_table.reshape(-1)].reshape(B, M * bs)
+    return ref_decode_attention(q, k, v, kv_pos, pos)
+
+
 def ref_swiglu_ffn(x, w_gate, w_up, w_down):
     """x [N,D]; w_gate/w_up [D,F]; w_down [F,D] -> [N,D]."""
     g = x.astype(jnp.float32) @ w_gate.astype(jnp.float32)

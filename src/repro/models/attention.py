@@ -260,6 +260,43 @@ def pallas_decode_supported(cfg: ModelConfig, cache_len: int,
             and (cache_len <= DEFAULT_BK or cache_len % DEFAULT_BK == 0))
 
 
+def paged_pallas_supported(cfg: ModelConfig) -> bool:
+    """Whether the Pallas paged-decode kernel can serve this arch: like the
+    dense flash-decode kernel it has no logit-softcap variant; block
+    divisibility is structural (the pool's block axis is the grid)."""
+    return cfg.attn_logit_softcap is None
+
+
+def _jnp_decode_attend(q, k_cache, v_cache, kv_positions, pos,
+                       cfg: ModelConfig, cross: bool = False):
+    """The reference decode-attention math shared by the dense and paged
+    layouts: q [B,1,H,Dh] against grouped caches [B,T,KV,Dh] with
+    positional masking (kv_positions [B,T]; -1 = empty) -> out [B,1,H,Dh].
+    """
+    B = q.shape[0]
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    q = q.reshape(B, 1, KV, G, Dh)
+    if cross:
+        mask = (kv_positions >= 0)[:, None, None, None, :]          # [B,1,1,1,T]
+    else:
+        valid = kv_positions >= 0
+        within = kv_positions <= pos[:, None]
+        mask = valid & within
+        if cfg.sliding_window is not None:
+            mask &= kv_positions > (pos[:, None] - cfg.sliding_window)
+        mask = mask[:, None, None, None, :]
+
+    scale = Dh ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", q, k_cache).astype(jnp.float32) * scale
+    if cfg.attn_logit_softcap is not None:
+        s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v_cache)
+    return out.reshape(B, 1, H, Dh)
+
+
 def attention_decode(x: jax.Array, params: dict, cfg: ModelConfig, *,
                      k_cache: jax.Array, v_cache: jax.Array,
                      kv_positions: jax.Array, pos: jax.Array,
@@ -316,24 +353,77 @@ def attention_decode(x: jax.Array, params: dict, cfg: ModelConfig, *,
                        params["wo"].astype(x.dtype))
         return y, k_cache, v_cache, kv_positions
 
-    q = q.reshape(B, 1, KV, G, Dh)
-    if cross:
-        mask = (kv_positions >= 0)[:, None, None, None, :]          # [B,1,1,1,T]
-    else:
-        valid = kv_positions >= 0
-        within = kv_positions <= pos[:, None]
-        mask = valid & within
-        if cfg.sliding_window is not None:
-            mask &= kv_positions > (pos[:, None] - cfg.sliding_window)
-        mask = mask[:, None, None, None, :]
-
-    scale = Dh ** -0.5
-    s = jnp.einsum("bskgd,btkd->bkgst", q, k_cache).astype(jnp.float32) * scale
-    if cfg.attn_logit_softcap is not None:
-        s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
-    s = jnp.where(mask, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgst,btkd->bskgd", p, v_cache)
-    out = out.reshape(B, 1, H, Dh)
+    out = _jnp_decode_attend(q, k_cache, v_cache, kv_positions, pos, cfg,
+                             cross=cross)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return y, k_cache, v_cache, kv_positions
+
+
+def attention_decode_paged(x: jax.Array, params: dict, cfg: ModelConfig, *,
+                           k_pool: jax.Array, v_pool: jax.Array,
+                           pos_pool: jax.Array, block_table: jax.Array,
+                           write_bids: jax.Array, pos: jax.Array):
+    """One-token decode against a *paged* KV pool.
+
+    x [B,1,D]; pools [N,bs,KV,Dh] / pos_pool [N,bs] shared by every row;
+    block_table [B,M] int32 names each row's blocks in order (NULL block 0
+    = unused entry, permanently masked); write_bids [B] the pool block this
+    token's K/V lands in (the engine's per-tick write plan — TRASH for
+    inactive rows); pos [B] the token's absolute position (write offset =
+    ``pos % bs``).  The new entry is inserted before attending so the token
+    sees itself.
+
+    Routing mirrors the dense path: the ``decode_attn_impl`` rule value
+    "paged" selects the Pallas paged kernel (block-table gather fused into
+    the grid); anything else takes the reference gather — materialize the
+    row's blocks contiguously and run the same jnp masked softmax as the
+    dense layout, which is what makes dense and paged engines
+    token-for-token comparable.
+
+    Returns (y [B,1,D], k_pool', v_pool', pos_pool').
+    """
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    B = x.shape[0]
+    bs = k_pool.shape[1]
+    M = block_table.shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if cfg.qk_norm and "q_norm" in params:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+
+    k_new = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
+    v_new = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm and "k_norm" in params:
+        k_new = rmsnorm(k_new, params["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    off = (pos % bs).astype(jnp.int32)
+    # An offset-0 write always lands in a *fresh* block (chains only grow
+    # at block boundaries, and copy-on-write duplicates full blocks), and a
+    # fresh block is recycled storage whose stale ``pos`` entries would
+    # otherwise pass the positional mask as phantoms — clear the block's
+    # position row before writing into it.
+    prow = pos_pool[write_bids]                             # [B, bs]
+    pos_pool = pos_pool.at[write_bids].set(
+        jnp.where((off == 0)[:, None], -1, prow))
+    k_pool = k_pool.at[write_bids, off].set(k_new[:, 0])
+    v_pool = v_pool.at[write_bids, off].set(v_new[:, 0])
+    pos_pool = pos_pool.at[write_bids, off].set(pos)
+
+    rules = current_rules() or {}
+    if (rules.get("decode_attn_impl") == "paged"
+            and paged_pallas_supported(cfg)):
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.paged_decode_attention(
+            q[:, 0], k_pool, v_pool, pos_pool, block_table, pos)[:, None]
+    else:
+        flat = block_table.reshape(-1)
+        k = k_pool[flat].reshape(B, M * bs, KV, Dh)
+        v = v_pool[flat].reshape(B, M * bs, KV, Dh)
+        kvp = pos_pool[flat].reshape(B, M * bs)
+        out = _jnp_decode_attend(q, k, v, kvp, pos, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, k_pool, v_pool, pos_pool

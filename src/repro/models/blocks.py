@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import ssm as ssm_mod
-from repro.models.attention import attention, attention_decode, attention_specs
+from repro.models.attention import (attention, attention_decode,
+                                    attention_decode_paged, attention_specs)
 from repro.models.common import LayerGroup, ModelConfig, PSpec, is_pspec
 from repro.models.layers import rmsnorm, rmsnorm_spec
 from repro.models.mlp import mlp, mlp_specs
@@ -200,13 +201,24 @@ def run_groups(x, group_params: list, cfg: ModelConfig, *, positions,
 
 
 def block_decode(kind: str, x, p, cfg: ModelConfig, cache: dict, *,
-                 pos, write_idx, memory=None):
-    """One block, one token. Returns (x, new_cache)."""
+                 pos, write_idx, memory=None, paged=None):
+    """One block, one token. Returns (x, new_cache).
+
+    ``paged`` = {"block_table": [B,M], "write_bids": [B]} switches the
+    attention cache to the pooled paged layout (cache leaves are then the
+    per-layer block pools); dense/ring layouts take the ``write_idx``
+    path."""
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     if kind.startswith("attn"):
-        a, kc, vc, kp = attention_decode(
-            h, p["attn"], cfg, k_cache=cache["k"], v_cache=cache["v"],
-            kv_positions=cache["pos"], pos=pos, write_idx=write_idx)
+        if paged is not None:
+            a, kc, vc, kp = attention_decode_paged(
+                h, p["attn"], cfg, k_pool=cache["k"], v_pool=cache["v"],
+                pos_pool=cache["pos"], block_table=paged["block_table"],
+                write_bids=paged["write_bids"], pos=pos)
+        else:
+            a, kc, vc, kp = attention_decode(
+                h, p["attn"], cfg, k_cache=cache["k"], v_cache=cache["v"],
+                kv_positions=cache["pos"], pos=pos, write_idx=write_idx)
         cache = dict(cache, k=kc, v=vc, pos=kp)
         x = x + a
         if kind == "attn_cross":
@@ -249,8 +261,12 @@ def block_decode(kind: str, x, p, cfg: ModelConfig, cache: dict, *,
 
 
 def run_groups_decode(x, group_params: list, caches: list, cfg: ModelConfig, *,
-                      pos, write_idx):
-    """One-token step through all groups; caches updated functionally."""
+                      pos, write_idx, paged=None):
+    """One-token step through all groups; caches updated functionally.
+
+    ``paged`` (block table + per-tick write plan) applies to every
+    attention layer — one table serves all layers, the pool-per-layer
+    paged-KV contract."""
     new_caches = []
     for group, gp, gc in zip(cfg.groups, group_params, caches):
 
@@ -260,7 +276,7 @@ def run_groups_decode(x, group_params: list, caches: list, cfg: ModelConfig, *,
                 wi = write_idx.get(kind_cache_key(kind)) if isinstance(write_idx, dict) else write_idx
                 xx, layer_c[f"sub{j}"] = block_decode(
                     kind, xx, layer_p[f"sub{j}"], cfg, layer_c[f"sub{j}"],
-                    pos=pos, write_idx=wi)
+                    pos=pos, write_idx=wi, paged=paged)
             return xx, layer_c
 
         x, nc = jax.lax.scan(body, x, (gp, gc))

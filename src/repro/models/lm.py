@@ -126,12 +126,15 @@ def lm_loss(params, batch: dict, cfg: ModelConfig, *,
 
 
 def lm_decode_step(params, token, caches, cfg: ModelConfig, *,
-                   pos, write_idx):
-    """token [B,1] -> (logits [B,1,V], new caches)."""
+                   pos, write_idx, paged=None):
+    """token [B,1] -> (logits [B,1,V], new caches).
+
+    ``paged`` = {"block_table", "write_bids"} switches the attention caches
+    to the pooled paged-KV layout (see serve/blockpool.py)."""
     x = _embed(params, token, cfg,
                positions=pos[:, None] if cfg.pos_emb == "learned" else None)
     x, caches = run_groups_decode(x, params["groups"], caches, cfg,
-                                  pos=pos, write_idx=write_idx)
+                                  pos=pos, write_idx=write_idx, paged=paged)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(x, _unembed_table(params, cfg), cfg)
     return logits, caches

@@ -65,12 +65,14 @@ class Capabilities:
     supports_flash_decode: bool  # Pallas flash-decode kernel expressible
     supports_flash_train: bool   # Pallas train/prefill flash-attn expressible
     supports_fused_ffn: bool     # Pallas fused SwiGLU (dense FFN) expressible
+    supports_paged_decode: bool  # pooled block-table KV layout expressible
 
     @property
     def summary(self) -> str:
         on = [n for n in ("has_encoder", "has_frontend", "swa", "softcap",
                           "subquadratic", "supports_flash_decode",
-                          "supports_flash_train", "supports_fused_ffn")
+                          "supports_flash_train", "supports_fused_ffn",
+                          "supports_paged_decode")
               if getattr(self, n)]
         return ",".join(on) or "-"
 
@@ -91,6 +93,10 @@ class ModelFamily:
       prefill(params, batch, cfg, capacity,
               last_only=False, last_index=None)           -> (logits, caches)
       decode_step(params, token, caches, cfg, *, pos)     -> (logits, caches)
+      paged_decode_step(params, token, caches, cfg, *,
+                        pos, block_table, write_bids)     -> (logits, caches)
+        (optional — families whose decode state can live in the pooled
+        paged-KV layout; caches are then serve/blockpool.py pools)
     """
 
     name: str
@@ -101,6 +107,7 @@ class ModelFamily:
     forward: Callable
     prefill: Callable
     decode_step: Callable
+    paged_decode_step: Optional[Callable] = None
 
     def capabilities(self, cfg: ModelConfig) -> Capabilities:
         return Capabilities(
@@ -113,6 +120,16 @@ class ModelFamily:
             supports_flash_train=(cfg.attn_logit_softcap is None
                                   and cfg.head_dim <= 256),
             supports_fused_ffn=cfg.mlp_act == "silu",
+            # Paged KV covers self-attention stacks only: SWA keeps the
+            # dense ring buffer (paging a ring would re-dense it), and
+            # SSM/mLSTM recurrent state is O(1) per slot already — there is
+            # nothing to page.  Softcap archs are fine (the ref gather path
+            # carries softcap; only the Pallas paged kernel rules it out).
+            supports_paged_decode=(
+                self.paged_decode_step is not None
+                and cfg.sliding_window is None
+                and all(k.startswith("attn") and k != "attn_cross"
+                        for g in cfg.groups for k in g.pattern)),
         )
 
 
@@ -209,11 +226,19 @@ def _lm_decode_step(params, token, caches, cfg: ModelConfig, *, pos):
                              pos=pos, write_idx=widx)
 
 
+def _lm_paged_decode_step(params, token, caches, cfg: ModelConfig, *,
+                          pos, block_table, write_bids):
+    return lm.lm_decode_step(
+        params, token, caches, cfg, pos=pos, write_idx=pos,
+        paged={"block_table": block_table, "write_bids": write_bids})
+
+
 LM_FAMILY = register_family(ModelFamily(
     name="lm", has_encoder=False,
     matches=lambda cfg: True,
     specs=lm.lm_specs, loss=_lm_loss, forward=_lm_forward,
     prefill=_lm_prefill, decode_step=_lm_decode_step,
+    paged_decode_step=_lm_paged_decode_step,
 ), fallback=True)
 
 
@@ -291,3 +316,18 @@ def model_prefill(params, batch, cfg: ModelConfig, capacity: int,
 def model_decode_step(params, token, caches, cfg: ModelConfig, *, pos):
     """token [B,1]; pos [B] absolute positions."""
     return resolve(cfg).decode_step(params, token, caches, cfg, pos=pos)
+
+
+def model_paged_decode_step(params, token, caches, cfg: ModelConfig, *,
+                            pos, block_table, write_bids):
+    """Paged-layout decode step: ``caches`` are blockpool pools,
+    ``block_table`` [B,M] int32, ``write_bids`` [B] this tick's write plan
+    (see serve/blockpool.py)."""
+    fam = resolve(cfg)
+    if fam.paged_decode_step is None:
+        raise ValueError(
+            f"family {fam.name!r} has no paged decode step "
+            f"(caps.supports_paged_decode is False for {cfg.name!r})")
+    return fam.paged_decode_step(params, token, caches, cfg, pos=pos,
+                                 block_table=block_table,
+                                 write_bids=write_bids)

@@ -52,7 +52,7 @@ class Runtime:
     def __init__(self, *, arch: str, cfg: ModelConfig,
                  family: registry.ModelFamily, mesh, plan: Plan, specs,
                  seq_len: int, capacity: int, attn_impl: str,
-                 ffn_impl: str = "auto",
+                 ffn_impl: str = "auto", kv_layout: str = "dense",
                  param_dtype=jnp.float32, seed: int = 0, params=None,
                  plan_kw=None):
         self.arch = arch
@@ -66,6 +66,7 @@ class Runtime:
         self.capacity = capacity
         self.attn_impl = attn_impl          # requested; resolution is lazy
         self.ffn_impl = ffn_impl            # requested; resolution is lazy
+        self.kv_layout = kv_layout          # serve KV layout: dense | paged
         self.param_dtype = param_dtype
         self.seed = seed
         self.plan_kw = dict(plan_kw or {})
@@ -79,7 +80,7 @@ class Runtime:
                shape_kind: str = "decode", smoke: bool = False,
                seq_len: Optional[int] = None, capacity: Optional[int] = None,
                grad_sync: str = "hierarchical", attn_impl: str = "auto",
-               ffn_impl: str = "auto",
+               ffn_impl: str = "auto", kv_layout: str = "dense",
                param_dtype=jnp.float32, seed: int = 0, params=None,
                plan_kw: Optional[dict] = None) -> "Runtime":
         """Build the full chain for one cell.
@@ -91,7 +92,9 @@ class Runtime:
         single-device/unsharded plan.  ``seq_len`` sizes the plan's
         activation decisions; ``capacity`` is the decode-cache length used
         by prefill/decode executables and the serve engine (they default to
-        each other, else 128).
+        each other, else 128).  ``kv_layout`` picks the serve-engine KV
+        layout: "dense" per-slot slabs, or "paged" pooled block caches
+        (arch-gated by ``caps.supports_paged_decode``; fails fast here).
         """
         if isinstance(arch, ModelConfig):
             if smoke:
@@ -117,10 +120,18 @@ class Runtime:
                          grad_sync=grad_sync, seq_len=seq_len,
                          **(plan_kw or {}))
         family = registry.resolve(cfg)
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                             f"valid choices: dense, paged")
+        if kv_layout == "paged" and \
+                not family.capabilities(cfg).supports_paged_decode:
+            raise ValueError(
+                f"arch {cfg.name!r} does not support the paged KV layout "
+                f"(caps: {family.capabilities(cfg).summary})")
         return cls(arch=name, cfg=cfg, family=family, mesh=mesh, plan=plan,
                    specs=family.specs(cfg), seq_len=seq_len,
                    capacity=capacity, attn_impl=attn_impl,
-                   ffn_impl=ffn_impl,
+                   ffn_impl=ffn_impl, kv_layout=kv_layout,
                    param_dtype=param_dtype, seed=seed, params=params,
                    plan_kw=plan_kw)
 
@@ -128,6 +139,7 @@ class Runtime:
                 capacity: Optional[int] = None, grad_sync: Optional[str] = None,
                 attn_impl: Optional[str] = None,
                 ffn_impl: Optional[str] = None,
+                kv_layout: Optional[str] = None,
                 plan_kw: Optional[dict] = None) -> "Runtime":
         """A new Runtime over the same cfg/params with a re-planned fabric
         mapping (e.g. train -> decode); materialized params and the original
@@ -138,6 +150,7 @@ class Runtime:
             grad_sync=grad_sync if grad_sync is not None else self.plan.grad_sync,
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
             ffn_impl=ffn_impl if ffn_impl is not None else self.ffn_impl,
+            kv_layout=kv_layout if kv_layout is not None else self.kv_layout,
             param_dtype=self.param_dtype, seed=self.seed,
             params=self._params, plan_kw={**self.plan_kw, **(plan_kw or {})})
 
@@ -201,6 +214,12 @@ class Runtime:
             self.cfg, self.plan, self.mesh,
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
             advance_pos=advance_pos)
+
+    def make_paged_decode_step(self, *,
+                               attn_impl: Optional[str] = None) -> Callable:
+        return serve_steps.make_paged_decode_step(
+            self.cfg, self.plan, self.mesh,
+            attn_impl=attn_impl if attn_impl is not None else self.attn_impl)
 
     # -- compiled executables ----------------------------------------------
 
@@ -302,20 +321,26 @@ class Runtime:
     def engine(self, *, num_slots: int = 4, capacity: Optional[int] = None,
                max_admit: Optional[int] = None,
                attn_impl: Optional[str] = None, donate: bool = True,
-               params=None):
-        """A continuous-batching ServeEngine over this Runtime."""
+               params=None, kv_layout: Optional[str] = None, **paged_kw):
+        """A continuous-batching ServeEngine over this Runtime.
+
+        ``kv_layout`` defaults to the Runtime's own knob; ``paged_kw``
+        forwards the paged-pool sizing (``block_size``, ``num_blocks``,
+        ``max_blocks_per_seq``, ``admit_window``)."""
         from repro.serve.engine import ServeEngine
         return ServeEngine(self, num_slots=num_slots, capacity=capacity,
                            max_admit=max_admit, attn_impl=attn_impl,
-                           donate=donate, params=params)
+                           donate=donate, params=params,
+                           kv_layout=kv_layout, **paged_kw)
 
     # -- report -------------------------------------------------------------
 
     @property
     def decode_attn_impl(self) -> str:
         """The decode-attention backend the serve path will actually use
-        (env override + capability fallback applied now)."""
-        return serve_steps.resolve_decode_attn_impl(self.attn_impl, self.cfg)
+        (env override + capability fallback + kv_layout applied now)."""
+        return serve_steps.resolve_decode_attn_impl(
+            self.attn_impl, self.cfg, kv_layout=self.kv_layout)
 
     @property
     def train_attn_impl(self) -> str:
@@ -361,8 +386,10 @@ class Runtime:
             f"(requested attn={self.attn_impl} ffn={self.ffn_impl}); "
             f"flash_train_ok={self.caps.supports_flash_train} "
             f"fused_ffn_ok={self.caps.supports_fused_ffn} "
-            f"flash_decode_ok={self.caps.supports_flash_decode}",
+            f"flash_decode_ok={self.caps.supports_flash_decode} "
+            f"paged_decode_ok={self.caps.supports_paged_decode}",
             f"  serve     : capacity={self.capacity} "
+            f"kv_layout={self.kv_layout} "
             f"swa_bucketing={'exact' if self.caps.swa else 'pow2'}",
         ]
         return "\n".join(lines)

@@ -1,0 +1,394 @@
+"""Paged KV-cache block pool: allocator, pooled device caches, splice.
+
+The dense serve cache (kvcache.init_cache) pre-allocates a full
+``capacity``-length KV slab per decode slot, so a 64-token chat request
+pins the same HBM as a 32k one and concurrency is bounded by worst-case
+context.  This module replaces that slab with a *pool*: per layer the K/V
+live in one ``[num_blocks, block_size, KV, Dh]`` tensor shared by every
+slot, and each slot owns an int32 block table ``[max_blocks_per_seq]``
+naming the pool blocks that hold its sequence, in order.  One table serves
+every layer — block i of a sequence is the *same* pool index in each
+layer's pool, so table bookkeeping is O(sequence), not O(layers).
+
+Split of responsibilities:
+
+* :class:`BlockPool` is the pure-host allocator — free list, per-block
+  refcounts, the content-hash prefix cache, copy-on-write bookkeeping.  It
+  never touches a device array, so its invariants are unit-testable without
+  tracing anything.
+* Module functions own the device side: :func:`init_paged_cache` builds the
+  pooled cache pytree (mirroring ``kvcache.init_cache``'s group/sub
+  structure so ``run_groups_decode`` threads it through the same scans),
+  :func:`paged_splice` scatters admitted prefill caches into their blocks
+  (O(blocks written), donation-friendly), :func:`copy_blocks` performs
+  copy-on-write block duplication.
+
+Two pool blocks are reserved:
+
+* ``NULL_BLOCK`` (0) is permanently empty (``pos`` = -1 everywhere) and is
+  what unused table entries point at — a gather through it contributes
+  nothing, so short sequences and freed slots mask out positionally with no
+  per-entry bookkeeping.
+* ``TRASH_BLOCK`` (1) is the write sink for junk: pad rows of an admission
+  batch, bucket columns past a row's allocation, and the per-tick decode
+  writes of inactive slots all land there.  No block table ever references
+  it, so its contents are unobservable.
+
+Prefix reuse: at admission every *full* block of prompt tokens is keyed by
+its content chain (block tokens + the whole prefix before it, as a nested
+tuple — exact equality, no hash-collision exposure) and registered in a
+cache map.  A later prompt whose chain matches shares the physical block:
+refcount += 1, no write.  Released blocks keep their registration while on
+the free list, so an identical prompt admitted *after* eviction still
+reuses them; recycling a block for fresh allocation deregisters it.  Only
+prompt-time full blocks are registered — decode writes only ever touch
+blocks the slot owns exclusively (partial tails and fresh growth blocks),
+which is what makes sharing safe without per-write checks.  Copy-on-write
+covers the remaining aliasing (``fork``: two slots sharing a tail block):
+``write_plan`` detects refcount > 1 at the write target, allocates a
+private copy and reports the (src, dst) pair for :func:`copy_blocks`.
+
+Note: content keys cover prompt *tokens* only.  Engine-admitted requests
+carry no frontend ``extra_embeds`` (the engine batch is tokens + lengths),
+so token identity implies KV identity; a future multimodal admission path
+must fold the embeds into the key.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+NULL_BLOCK = 0     # permanently empty; unused table entries point here
+TRASH_BLOCK = 1    # junk-write sink; never referenced by any table
+NUM_RESERVED = 2
+
+
+class PoolExhausted(RuntimeError):
+    """No free block: grow ``num_blocks`` (or wait for evictions)."""
+
+
+class BlockPool:
+    """Host-side block allocator for one engine's paged KV pool.
+
+    Parameters
+    ----------
+    num_blocks:         total pool blocks, including the two reserved ones.
+    block_size:         KV entries per block.
+    num_slots:          decode slots (rows of the block-table matrix).
+    max_blocks_per_seq: table width — the longest representable sequence is
+                        ``max_blocks_per_seq * block_size`` entries.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, num_slots: int,
+                 max_blocks_per_seq: int,
+                 max_entries: Optional[int] = None):
+        if num_blocks < NUM_RESERVED + 1:
+            raise ValueError(f"num_blocks={num_blocks} leaves no usable "
+                             f"blocks past the {NUM_RESERVED} reserved ones")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.num_slots = num_slots
+        self.max_blocks_per_seq = max_blocks_per_seq
+        # longest storable sequence; lets a capacity that is not a whole
+        # number of blocks junk writes at exactly the same position the
+        # dense layout's out-of-bounds scatter drop would
+        self.max_entries = (max_entries if max_entries is not None
+                            else max_blocks_per_seq * block_size)
+        # per-slot state
+        self.table = np.full((num_slots, max_blocks_per_seq), NULL_BLOCK,
+                             np.int32)
+        self.seq_blocks = np.zeros(num_slots, np.int32)   # allocated per slot
+        self.next_pos = np.zeros(num_slots, np.int64)     # next write position
+        self.reserved = np.zeros(num_slots, np.int32)     # worst-case blocks
+        # per-block state
+        self.refcount = np.zeros(num_blocks, np.int32)
+        self.refcount[:NUM_RESERVED] = 2**30              # never freed
+        self._free: deque[int] = deque(range(NUM_RESERVED, num_blocks))
+        # prefix cache: content chain -> block id (and the reverse, for
+        # deregistration when a cached-free block is recycled)
+        self._cached: dict = {}
+        self._key_of: dict[int, object] = {}
+        # stats
+        self.prefix_hits = 0
+        self.cow_copies = 0
+        self.high_water = 0
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        """Blocks currently referenced by at least one slot."""
+        return self.num_blocks - NUM_RESERVED - len(self._free)
+
+    @property
+    def available_blocks(self) -> int:
+        """Free blocks not already spoken for by admitted slots' pending
+        worst-case growth (``admit``'s ``reserve_blocks``).  Admission
+        gates on this, which is what keeps decode-time lazy growth from
+        ever exhausting the pool mid-tick."""
+        pending = int(np.maximum(self.reserved - self.seq_blocks, 0).sum())
+        return len(self._free) - pending
+
+    def blocks_needed(self, entries: int) -> int:
+        return -(-entries // self.block_size)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Conservative (ignores prefix sharing): a fresh allocation of
+        every prompt block must fit the unreserved free list."""
+        return self.blocks_needed(prompt_len) <= self.available_blocks
+
+    # -- allocation core ----------------------------------------------------
+
+    def _alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"KV block pool exhausted ({self.num_blocks} blocks of "
+                f"{self.block_size}); grow num_blocks or wait for evictions")
+        bid = self._free.popleft()
+        key = self._key_of.pop(bid, None)
+        if key is not None:               # recycled: drop stale registration
+            del self._cached[key]
+        self.refcount[bid] = 1
+        self.high_water = max(self.high_water, self.used_blocks)
+        return bid
+
+    def _share(self, bid: int):
+        if self.refcount[bid] == 0:       # cached-free: resurrect
+            self._free.remove(bid)
+            self.high_water = max(self.high_water, self.used_blocks)
+        self.refcount[bid] += 1
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self, slot: int, prompt: np.ndarray, bucket_blocks: int,
+              reserve_blocks: Optional[int] = None) -> np.ndarray:
+        """Allocate ``slot``'s block chain for ``prompt``, reusing cached
+        prefix blocks, and return the per-column splice destinations.
+
+        ``bucket_blocks`` is the admission bucket's column count
+        (ceil(bucket_len / block_size)); the returned [bucket_blocks] int32
+        vector names, per bucket column, the pool block the prefill splice
+        must write — ``TRASH_BLOCK`` for columns that are shared (already
+        written), beyond this prompt's length, or pad.
+
+        ``reserve_blocks`` is the request's worst-case chain length
+        (prompt + generation budget, e.g. ceil((L + max_new) / bs)); it is
+        deducted from ``available_blocks`` until released, so callers that
+        gate admission on ``available_blocks`` can never be crashed by
+        decode-time lazy growth.  Defaults to the prompt's own block count.
+        """
+        L = len(prompt)
+        nb = self.blocks_needed(L)
+        if nb > self.max_blocks_per_seq:
+            raise ValueError(
+                f"prompt of {L} tokens needs {nb} blocks > "
+                f"max_blocks_per_seq={self.max_blocks_per_seq}")
+        if self.seq_blocks[slot]:
+            raise RuntimeError(f"slot {slot} still holds blocks")
+        reserve = min(max(nb, reserve_blocks or nb), self.max_blocks_per_seq)
+
+        bs = self.block_size
+        dst = np.full(bucket_blocks, TRASH_BLOCK, np.int32)
+        key: object = None
+        acquired: list = []               # (bid, registered_key, shared)
+        try:
+            for col in range(L // bs):    # full blocks: shareable
+                key = (key,
+                       tuple(int(t) for t in prompt[col * bs:(col + 1) * bs]))
+                hit = self._cached.get(key)
+                if hit is not None:
+                    self._share(hit)
+                    self.table[slot, col] = hit
+                    self.prefix_hits += 1  # dst stays TRASH: no write
+                    acquired.append((hit, None, True))
+                else:
+                    bid = self._alloc()
+                    self.table[slot, col] = bid
+                    self._cached[key] = bid
+                    self._key_of[bid] = key
+                    dst[col] = bid
+                    acquired.append((bid, key, False))
+            col = L // bs
+            if col < nb:                  # partial tail: exclusive, unkeyed
+                bid = self._alloc()
+                self.table[slot, col] = bid
+                dst[col] = bid
+                acquired.append((bid, None, False))
+        except PoolExhausted:
+            # roll back so a recoverable exhaustion ("wait for evictions")
+            # leaks nothing: un-share / free every block acquired so far
+            # and drop registrations this call created (shared blocks keep
+            # theirs — they fall back to cached-free)
+            for bid, k, shared in reversed(acquired):
+                self.refcount[bid] -= 1
+                if self.refcount[bid] == 0:
+                    self._free.append(bid)
+                if k is not None:
+                    del self._cached[k]
+                    del self._key_of[bid]
+                if shared:
+                    self.prefix_hits -= 1
+            self.table[slot, :] = NULL_BLOCK
+            raise
+        self.seq_blocks[slot] = nb
+        self.next_pos[slot] = L
+        self.reserved[slot] = reserve
+        return dst
+
+    def release(self, slot: int):
+        """Drop ``slot``'s references.  Refcount-0 blocks return to the free
+        list but keep their prefix registration (an identical prompt admitted
+        after this eviction reuses them) until recycled by ``_alloc``."""
+        for col in range(int(self.seq_blocks[slot])):
+            bid = int(self.table[slot, col])
+            self.refcount[bid] -= 1
+            if self.refcount[bid] == 0:
+                self._free.append(bid)
+        self.table[slot, :] = NULL_BLOCK
+        self.seq_blocks[slot] = 0
+        self.next_pos[slot] = 0
+        self.reserved[slot] = 0
+
+    def fork(self, src: int, dst: int):
+        """Point ``dst`` at ``src``'s chain (shared, refcounted).  The next
+        write into the shared tail triggers copy-on-write via
+        ``write_plan``."""
+        if self.seq_blocks[dst]:
+            raise RuntimeError(f"slot {dst} still holds blocks")
+        nb = int(self.seq_blocks[src])
+        for col in range(nb):
+            self._share(int(self.table[src, col]))
+        self.table[dst, :] = self.table[src, :]
+        self.seq_blocks[dst] = nb
+        self.next_pos[dst] = self.next_pos[src]
+        self.reserved[dst] = self.reserved[src]
+
+    # -- per-tick decode write planning ------------------------------------
+
+    def write_plan(self, slot: int, active: bool):
+        """Plan this tick's KV write for ``slot``.
+
+        Returns ``(write_bid, copies)``: the pool block the decode step must
+        write (``TRASH_BLOCK`` for inactive or over-capacity slots) and a
+        list of (src, dst) copy-on-write block duplications the caller must
+        apply with :func:`copy_blocks` *before* dispatching the step.
+        Advances the slot's write cursor when active.
+        """
+        if not active:
+            return TRASH_BLOCK, []
+        p = int(self.next_pos[slot])
+        col = p // self.block_size
+        self.next_pos[slot] = p + 1
+        if col >= self.max_blocks_per_seq or p >= self.max_entries:
+            # past the storable capacity: junk the write at exactly the
+            # position the dense layout's out-of-bounds scatter drop would
+            # (max_entries matters when capacity % block_size != 0 — the
+            # last block's tail must not hold entries dense never stored)
+            return TRASH_BLOCK, []
+        copies = []
+        if col >= int(self.seq_blocks[slot]):      # lazy growth
+            bid = self._alloc()
+            self.table[slot, col] = bid
+            self.seq_blocks[slot] = col + 1
+        else:
+            bid = int(self.table[slot, col])
+            if self.refcount[bid] > 1:             # shared tail: COW
+                priv = self._alloc()
+                copies.append((bid, priv))
+                self.refcount[bid] -= 1
+                self.table[slot, col] = priv
+                self.cow_copies += 1
+                bid = priv
+        return bid, copies
+
+    def __repr__(self) -> str:
+        return (f"BlockPool(blocks={self.num_blocks}x{self.block_size}, "
+                f"free={self.free_blocks}, hits={self.prefix_hits}, "
+                f"cow={self.cow_copies}, hwm={self.high_water})")
+
+
+# ---------------------------------------------------------------------------
+# Device side: pooled caches, splice, copy
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> list:
+    """Pooled zero cache, one pytree per layer group (mirrors
+    ``kvcache.init_cache``'s structure so the decode scans thread it the
+    same way): every attention sub-layer holds
+    ``k``/``v`` [repeats, num_blocks, block_size, KV, Dh] and
+    ``pos`` [repeats, num_blocks, block_size] (-1 = empty).  Only
+    attention-family stacks are paged (``supports_paged_decode``)."""
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    caches = []
+    for g in cfg.groups:
+        per = {}
+        for j, kind in enumerate(g.pattern):
+            if not kind.startswith("attn") or kind == "attn_cross":
+                raise ValueError(
+                    f"paged KV cache only supports self-attention stacks; "
+                    f"got block kind {kind!r}")
+            per[f"sub{j}"] = {
+                "k": jnp.zeros((num_blocks, block_size, KV, Dh), cfg.dtype),
+                "v": jnp.zeros((num_blocks, block_size, KV, Dh), cfg.dtype),
+                "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+            }
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (g.repeats,) + a.shape), per))
+    return caches
+
+
+def paged_splice(caches: list, part: list, dst: jax.Array) -> list:
+    """Scatter admitted prefill caches into their pool blocks.
+
+    ``caches`` leaves are pooled [R, N, bs, ...]; ``part`` leaves
+    [R, Bp, T, ...] — the *same* capacity-padded prefill caches the dense
+    engine splices (sharing the jitted prefill program between layouts is
+    what keeps dense and paged engines token-for-token comparable); only
+    the first ``nb = dst.shape[1]`` block columns are read.  ``dst``
+    [Bp, nb] int32 names each (row, bucket column)'s destination block,
+    ``TRASH_BLOCK`` for columns that must not land anywhere (shared prefix
+    blocks, pad rows, columns past a row's allocation — trash writes are
+    unobservable because no table references the trash block).  One scatter
+    per bucket column keeps the cost O(blocks written), and every write is
+    an ``.at[].set`` XLA performs in place when the caller donates
+    ``caches`` — the paged analog of ``kvcache.splice_slots``'s donated
+    ``dynamic_update_slice`` pattern.  Real destinations are unique (the
+    allocator hands each block to one row), so duplicate indices only ever
+    collide on trash."""
+    nb = dst.shape[1]
+
+    def one(pool, p):
+        bs = pool.shape[2]
+        p = p.astype(pool.dtype)
+        short = nb * bs - p.shape[2]
+        if short > 0:          # capacity not block-aligned: pad the tail
+            fill = -1 if jnp.issubdtype(p.dtype, jnp.integer) else 0
+            pad = [(0, 0)] * p.ndim
+            pad[2] = (0, short)
+            p = jnp.pad(p, pad, constant_values=fill)
+        for j in range(nb):
+            col = jax.lax.dynamic_slice_in_dim(p, j * bs, bs, axis=2)
+            pool = pool.at[:, dst[:, j]].set(col)    # [R, Bp, bs, ...]
+        return pool
+
+    return jax.tree.map(one, caches, part)
+
+
+def copy_blocks(caches: list, src: jax.Array, dst: jax.Array) -> list:
+    """Copy-on-write block duplication: pool[:, dst[i]] = pool[:, src[i]]
+    for every pair, across all layers/leaves.  O(pairs), in place under
+    donation."""
+    return jax.tree.map(lambda pool: pool.at[:, dst].set(pool[:, src]),
+                        caches)

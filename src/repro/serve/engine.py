@@ -49,7 +49,33 @@ and the host off the critical path:
   ``steps.resolve_decode_attn_impl``: the Pallas flash-decode kernel on
   TPU-capable backends, the reference jnp softmax elsewhere (or when the
   arch needs logit softcap / the cache length doesn't block evenly);
-  ``REPRO_DECODE_ATTN=pallas|ref`` overrides.
+  ``REPRO_DECODE_ATTN=pallas|ref|paged`` overrides.
+
+Paged KV layout
+---------------
+
+``kv_layout="paged"`` (arch-gated by ``caps.supports_paged_decode``)
+replaces the per-slot dense slabs with a pooled block cache
+(serve/blockpool.py): K/V live in ``[num_blocks, block_size, KV, Dh]``
+tensors shared by every slot, each slot follows an int32 block table, and
+HBM scales with *actual* sequence lengths instead of ``num_slots x
+capacity``.  The engine mechanics are unchanged — same ``tick()`` loop,
+same donated in-place updates, same bucketed admission — with three paged
+twists:
+
+* **Admission** allocates each request's block chain (full prompt blocks
+  are content-hashed, so identical prefixes share physical blocks — also
+  across an eviction, since freed blocks keep their registration until
+  recycled) and splices the prefill caches in with one scatter per bucket
+  column (``blockpool.paged_splice``; shared blocks skip their write).
+* **Decode** carries a per-tick write plan: the host walks the active
+  slots, lazily growing each chain at block boundaries and resolving
+  copy-on-write for shared tails (``BlockPool.write_plan``), then passes
+  the table + per-slot write blocks to the jitted step.  Inactive slots
+  write to the reserved trash block and gather the permanently-empty null
+  block — their junk stays unobservable.
+* **Eviction** just drops refcounts; blocks return to the free list when
+  the last owner leaves.
 """
 from __future__ import annotations
 
@@ -62,7 +88,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve import kvcache
+from repro.serve import blockpool, kvcache
 
 
 @dataclass
@@ -76,6 +102,7 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: float = 0.0
     finished_at: float = 0.0
+    token_times: list = field(default_factory=list)   # decode-token arrivals
     done: bool = False
 
 
@@ -94,6 +121,19 @@ class EngineStats:
                 f"prefills={self.prefill_calls}")
 
 
+def _seed_hot_loop(slots, tok, pos, next_tok, lengths):
+    """Seed the device-resident token/position arrays for admitted slots.
+    Every write is a dynamic_update_slice so XLA aliases in place; reverse
+    order makes duplicate slot ids (trailing pad rows) resolve to the
+    authentic row."""
+    for i in reversed(range(slots.shape[0])):
+        tok = jax.lax.dynamic_update_slice(
+            tok, next_tok[i:i + 1][:, None], (slots[i], 0))
+        pos = jax.lax.dynamic_update_slice(
+            pos, lengths[i:i + 1].astype(pos.dtype), (slots[i],))
+    return tok, pos
+
+
 def _install_admitted(caches, part, slots, tok, pos, next_tok, lengths):
     """Jitted admission install: splice prefill caches into their slots and
     seed the device-resident token/position arrays.  ``caches`` is donated
@@ -101,11 +141,18 @@ def _install_admitted(caches, part, slots, tok, pos, next_tok, lengths):
     XLA aliases in place.  Reverse order mirrors kvcache.splice_slots
     (trailing rows are pad duplicates)."""
     caches = kvcache.splice_slots(caches, part, slots)
-    for i in reversed(range(slots.shape[0])):
-        tok = jax.lax.dynamic_update_slice(
-            tok, next_tok[i:i + 1][:, None], (slots[i], 0))
-        pos = jax.lax.dynamic_update_slice(
-            pos, lengths[i:i + 1].astype(pos.dtype), (slots[i],))
+    tok, pos = _seed_hot_loop(slots, tok, pos, next_tok, lengths)
+    return caches, tok, pos
+
+
+def _install_admitted_paged(caches, part, dst, slots, tok, pos, next_tok,
+                            lengths):
+    """Paged admission install: scatter the prefill caches into their pool
+    blocks (``dst`` [Bp, nb] per-column destinations; shared/pad columns
+    point at the trash block) and seed the hot-loop arrays.  ``caches`` is
+    donated by the caller's jit wrapper."""
+    caches = blockpool.paged_splice(caches, part, dst)
+    tok, pos = _seed_hot_loop(slots, tok, pos, next_tok, lengths)
     return caches, tok, pos
 
 
@@ -121,7 +168,11 @@ class ServeEngine:
                  capacity: Optional[int] = None,
                  max_admit: Optional[int] = None,
                  attn_impl: Optional[str] = None, donate: bool = True,
-                 params=None):
+                 params=None, kv_layout: Optional[str] = None,
+                 block_size: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
+                 max_blocks_per_seq: Optional[int] = None,
+                 admit_window: Optional[int] = None):
         rt = runtime
         self.rt = rt
         self.cfg, self.plan, self.mesh = rt.cfg, rt.plan, rt.mesh
@@ -130,12 +181,58 @@ class ServeEngine:
         capacity = capacity if capacity is not None else rt.capacity
         self.num_slots, self.capacity = num_slots, capacity
         self.max_admit = max_admit if max_admit is not None else num_slots
-        self._prefill = jax.jit(rt.make_prefill_step(capacity=capacity))
-        decode = rt.make_decode_step(attn_impl=attn_impl, advance_pos=True)
+        # bounded queue-scan window for admission grouping (see _admit_batch)
+        self.admit_window = (admit_window if admit_window is not None
+                             else 4 * self.max_admit)
+        kv_layout = (kv_layout if kv_layout is not None
+                     else getattr(rt, "kv_layout", "dense"))
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                             f"valid choices: dense, paged")
+        if kv_layout == "paged" and not self.caps.supports_paged_decode:
+            raise ValueError(
+                f"arch {self.cfg.name!r} does not support the paged KV "
+                f"layout (caps: {self.caps.summary}); use kv_layout='dense'")
+        if kv_layout == "dense" and any(
+                v is not None for v in (block_size, num_blocks,
+                                        max_blocks_per_seq)):
+            raise ValueError(
+                "block_size/num_blocks/max_blocks_per_seq size the paged "
+                "block pool; pass kv_layout='paged' (a dense engine would "
+                "silently ignore them)")
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
         donate_kw = dict(donate_argnums=(2,)) if donate else {}
-        self._decode = jax.jit(decode, **donate_kw)
         splice_kw = dict(donate_argnums=(0,)) if donate else {}
-        self._splice = jax.jit(_install_admitted, **splice_kw)
+        # One capacity-padded prefill for both layouts: the paged splice
+        # reads block columns out of the same program's caches, so dense
+        # and paged engines see bitwise-identical prefill K/V (the
+        # token-parity contract tests/test_paged.py pins down).
+        self._prefill = jax.jit(rt.make_prefill_step(capacity=capacity))
+        if self.paged:
+            # block pool sized for the worst case (every slot at capacity)
+            # unless told tighter; +reserved null/trash blocks.
+            # max_entries=capacity keeps the storable length identical to
+            # the dense slabs even when capacity % block_size != 0.
+            bs = block_size if block_size is not None else 16
+            M = (max_blocks_per_seq if max_blocks_per_seq is not None
+                 else -(-capacity // bs))
+            nblocks = (num_blocks if num_blocks is not None
+                       else num_slots * M + blockpool.NUM_RESERVED)
+            self.pool = blockpool.BlockPool(nblocks, bs, num_slots, M,
+                                            max_entries=capacity)
+            self.caches = blockpool.init_paged_cache(self.cfg, nblocks, bs)
+            decode = rt.make_paged_decode_step(attn_impl=attn_impl)
+            self._decode = jax.jit(decode, **donate_kw)
+            self._splice = jax.jit(_install_admitted_paged, **splice_kw)
+            self._copy = jax.jit(blockpool.copy_blocks, **splice_kw)
+        else:
+            self.pool = None
+            self.caches = kvcache.init_cache(self.cfg, num_slots, capacity)
+            decode = rt.make_decode_step(attn_impl=attn_impl,
+                                         advance_pos=True)
+            self._decode = jax.jit(decode, **donate_kw)
+            self._splice = jax.jit(_install_admitted, **splice_kw)
         # slot state: host-side bookkeeping + device-resident hot-loop state
         self.slot_req: list[Optional[Request]] = [None] * num_slots
         # Diagnostic host mirror of per-request progress (next absolute pos,
@@ -143,7 +240,6 @@ class ServeEngine:
         # position array is the device-resident ``_pos``, which also keeps
         # advancing on inactive slots (harmless junk, reset at re-admission).
         self.slot_pos = np.zeros(num_slots, np.int32)
-        self.caches = kvcache.init_cache(self.cfg, num_slots, capacity)
         self._tok = jnp.zeros((num_slots, 1), jnp.int32)  # last emitted
         self._pos = jnp.zeros((num_slots,), jnp.int32)
         self._inflight = None   # (device tokens of step t-1, slot->req snap)
@@ -153,7 +249,29 @@ class ServeEngine:
 
     # -- admission ----------------------------------------------------------
 
+    def _paged_reserve(self, req: Request) -> int:
+        """Worst-case block-chain length for ``req``: prompt + generation
+        budget (capped at the table width — writes past it junk to trash,
+        matching the dense engine's out-of-bounds scatter drop)."""
+        return min(self.pool.blocks_needed(len(req.prompt)
+                                           + req.max_new_tokens),
+                   self.pool.max_blocks_per_seq)
+
     def submit(self, req: Request):
+        if self.paged:
+            # fail fast on requests the pool can never hold — otherwise
+            # admission would hold them back forever, waiting for an
+            # eviction that cannot free enough
+            nbp = self.pool.blocks_needed(len(req.prompt))
+            usable = self.pool.num_blocks - blockpool.NUM_RESERVED
+            if (nbp > self.pool.max_blocks_per_seq
+                    or self._paged_reserve(req) > usable):
+                raise ValueError(
+                    f"request rid={req.rid} needs {self._paged_reserve(req)} "
+                    f"KV blocks worst-case (prompt alone {nbp}) but the "
+                    f"pool has {usable} usable blocks and tables hold "
+                    f"{self.pool.max_blocks_per_seq}; grow num_blocks / "
+                    f"max_blocks_per_seq or shrink the request")
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
 
@@ -172,18 +290,45 @@ class ServeEngine:
         return min(b, self.capacity)
 
     def _admit_batch(self) -> int:
-        """Admit consecutive same-bucket queued requests through one padded
-        batched prefill call per group.  Returns number admitted."""
+        """Admit same-bucket queued requests through one padded batched
+        prefill call per group.  The group is gathered from a *bounded
+        window* at the head of the queue (``admit_window`` entries), so one
+        odd-length prompt in the stream no longer splits an otherwise
+        batchable admission into multiple prefill calls; the head request
+        always leads its group, and the window bound keeps it from being
+        starved by later look-alikes.  Paged engines additionally trim the
+        group to what the block pool can hold right now (conservative: the
+        check ignores prefix sharing).  Returns number admitted."""
         admitted = 0
         free = [s for s in range(self.num_slots)
                 if self.slot_req[s] is None]
         while free and self.queue:
             k = min(len(free), self.max_admit)
-            group = [self.queue.popleft()]
-            blen = self._bucket_len(len(group[0].prompt))
-            while (len(group) < k and self.queue and
-                   self._bucket_len(len(self.queue[0].prompt)) == blen):
-                group.append(self.queue.popleft())
+            blen = self._bucket_len(len(self.queue[0].prompt))
+            idxs = [0]
+            for i in range(1, min(len(self.queue), self.admit_window)):
+                if len(idxs) >= k:
+                    break
+                if self._bucket_len(len(self.queue[i].prompt)) == blen:
+                    idxs.append(i)
+            if self.paged:
+                # gate on worst-case chains (prompt + generation budget)
+                # against the unreserved pool, so decode-time lazy growth
+                # can never exhaust it mid-tick
+                fit, need = [], 0
+                avail = self.pool.available_blocks
+                for i in idxs:
+                    nb = self._paged_reserve(self.queue[i])
+                    if need + nb > avail:
+                        break
+                    need += nb
+                    fit.append(i)
+                idxs = fit
+                if not idxs:        # head doesn't fit: wait for evictions
+                    break
+            group = [self.queue[i] for i in idxs]
+            for i in reversed(idxs):
+                del self.queue[i]
             slots, free = free[:len(group)], free[len(group):]
             self._admit_group(slots, group, blen)
             admitted += len(group)
@@ -209,9 +354,23 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lens)}
         next_tok, pc = self._prefill(self.params, batch)
         self.stats.prefill_calls += 1
-        self.caches, self._tok, self._pos = self._splice(
-            self.caches, pc, jnp.asarray(slot_ids), self._tok, self._pos,
-            next_tok, jnp.asarray(lens))
+        if self.paged:
+            # allocate each row's block chain (full prompt blocks are
+            # content-hashed -> shared rows splice to TRASH, skipping the
+            # write) and scatter the capacity-padded prefill caches into
+            # the first ceil(blen / bs) block columns
+            nb = -(-blen // self.pool.block_size)
+            dst = np.full((Bp, nb), blockpool.TRASH_BLOCK, np.int32)
+            for i, (s, r) in enumerate(zip(slots, group)):
+                dst[i] = self.pool.admit(s, r.prompt, nb,
+                                         reserve_blocks=self._paged_reserve(r))
+            self.caches, self._tok, self._pos = self._splice(
+                self.caches, pc, jnp.asarray(dst), jnp.asarray(slot_ids),
+                self._tok, self._pos, next_tok, jnp.asarray(lens))
+        else:
+            self.caches, self._tok, self._pos = self._splice(
+                self.caches, pc, jnp.asarray(slot_ids), self._tok, self._pos,
+                next_tok, jnp.asarray(lens))
         first = np.asarray(jax.device_get(next_tok)).reshape(-1)
         now = time.perf_counter()
         for i, (s, r) in enumerate(zip(slots, group)):
@@ -232,6 +391,8 @@ class ServeEngine:
         self.slot_req[slot] = None
         self.slot_pos[slot] = 0
         self.stats.finished += 1
+        if self.paged:
+            self.pool.release(slot)
 
     # -- main loop ----------------------------------------------------------
 
@@ -243,11 +404,13 @@ class ServeEngine:
         finished (freed last tick, step was speculative) are discarded."""
         tok_dev, reqs = inflight
         vals = np.asarray(jax.device_get(tok_dev)).reshape(-1)
+        now = time.perf_counter()
         for slot, req in enumerate(reqs):
             if req is None or req.done:
                 continue
             tok = int(vals[slot])
             req.generated.append(tok)
+            req.token_times.append(now)
             self.slot_pos[slot] += 1
             self.stats.tokens_out += 1
             if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
@@ -262,8 +425,33 @@ class ServeEngine:
         queued behind the step via its data dependency on the caches)."""
         dispatched = None
         if any(r is not None for r in self.slot_req):
-            tok, caches, pos = self._decode(self.params, self._tok,
-                                            self.caches, self._pos)
+            if self.paged:
+                # per-tick write plan: lazy chain growth at block
+                # boundaries, copy-on-write for shared tails, trash for
+                # inactive slots (their junk writes stay unobservable)
+                bids = np.empty(self.num_slots, np.int32)
+                copies = []
+                for s in range(self.num_slots):
+                    bids[s], cp = self.pool.write_plan(
+                        s, self.slot_req[s] is not None)
+                    copies.extend(cp)
+                if copies:
+                    # pad to a fixed width (<= 1 COW per slot per tick)
+                    # with trash self-copies so the jitted copy compiles
+                    # exactly once
+                    copies += [(blockpool.TRASH_BLOCK,
+                                blockpool.TRASH_BLOCK)] * \
+                        (self.num_slots - len(copies))
+                    self.caches = self._copy(
+                        self.caches,
+                        jnp.asarray([c[0] for c in copies], jnp.int32),
+                        jnp.asarray([c[1] for c in copies], jnp.int32))
+                tok, caches, pos = self._decode(
+                    self.params, self._tok, self.caches, self._pos,
+                    jnp.asarray(self.pool.table), jnp.asarray(bids))
+            else:
+                tok, caches, pos = self._decode(self.params, self._tok,
+                                                self.caches, self._pos)
             # the old cache buffer was donated — replace references now
             self.caches, self._tok, self._pos = caches, tok, pos
             dispatched = (tok, list(self.slot_req))
@@ -283,3 +471,38 @@ class ServeEngine:
             if not busy and not self.queue:
                 break
         return self.stats
+
+    # -- reporting -----------------------------------------------------------
+
+    def latency_summary(self) -> dict:
+        """p50/p95 time-to-first-token and inter-token latency (seconds)
+        over finished requests.  TTFT = submit -> prefill token; ITL =
+        consecutive decode-token arrivals at collection (one tick behind
+        dispatch — the double-buffering contract — which is what a client
+        observes)."""
+        ttfts, itls = [], []
+        for r in self.finished:
+            if r.first_token_at:
+                ttfts.append(r.first_token_at - r.submitted_at)
+            times = [r.first_token_at] + list(r.token_times)
+            itls.extend(b - a for a, b in zip(times, times[1:]))
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
+        return {"requests": len(ttfts),
+                "ttft_p50": pct(ttfts, 50), "ttft_p95": pct(ttfts, 95),
+                "itl_p50": pct(itls, 50), "itl_p95": pct(itls, 95)}
+
+    def kv_cache_bytes(self) -> int:
+        """Bytes of attention K/V storage (dense per-slot slabs or the
+        paged pool) — the footprint BENCH_serve.json tracks for the
+        dense-vs-paged comparison."""
+        total = 0
+        for gc in self.caches:
+            for sub in gc.values():
+                for name in ("k", "v", "xk", "xv"):
+                    if name in sub:
+                        a = sub[name]
+                        total += a.size * a.dtype.itemsize
+        return total

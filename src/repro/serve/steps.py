@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.topology import Plan
 from repro.models.registry import (capabilities, model_decode_step,
-                                   model_prefill)
+                                   model_paged_decode_step, model_prefill)
 from repro.models.common import ModelConfig
 from repro.models.sharding import activation_sharding
 from repro.serve import kvcache
@@ -51,26 +51,43 @@ def temperature_sample(logits: jax.Array, key: jax.Array,
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
-DECODE_ATTN_CHOICES = ("auto", "pallas", "ref")
+DECODE_ATTN_CHOICES = ("auto", "pallas", "ref", "paged")
 
 
-def resolve_decode_attn_impl(impl: str, cfg: ModelConfig) -> str:
+def resolve_decode_attn_impl(impl: str, cfg: ModelConfig,
+                             kv_layout: str = "dense") -> str:
     """Serve decode-attention backend policy.
 
-    "auto" -> "pallas" on TPU-capable backends, "ref" elsewhere.  Explicit
-    "pallas"/"ref" are honored as-is (CPU "pallas" runs the kernel in
-    interpret mode — the numerics-validation path).  ``REPRO_DECODE_ATTN``
-    overrides everything; unknown values fail fast instead of silently
-    selecting a fallback (the shared ``kernels.ops`` policy).  Archs whose
-    registry capabilities rule the kernel out (``supports_flash_decode`` is
-    False, e.g. logit softcap) resolve to "ref"; per-layer shape eligibility
-    is still re-checked at trace time
-    (models.attention.pallas_decode_supported)."""
+    "auto" -> the layout's Pallas kernel on TPU-capable backends ("pallas"
+    for the dense cache, "paged" for the pooled block-table layout), "ref"
+    elsewhere.  Explicit choices are honored as-is (CPU Pallas runs in
+    interpret mode — the numerics-validation path); "pallas" under
+    ``kv_layout="paged"`` means the layout's native kernel, i.e. "paged".
+    ``REPRO_DECODE_ATTN`` overrides everything; unknown values fail fast
+    instead of silently selecting a fallback (the shared ``kernels.ops``
+    policy), and "paged" with a dense layout is a contradiction that also
+    fails fast.  Archs whose registry capabilities rule the kernel out
+    (``supports_flash_decode`` is False, e.g. logit softcap — neither
+    Pallas decode kernel has a softcap variant) resolve to "ref"; per-layer
+    shape eligibility is still re-checked at trace time
+    (models.attention.pallas_decode_supported /
+    models.attention.paged_pallas_supported)."""
     from repro.kernels.ops import _resolve_impl
     impl = _resolve_impl(impl, "REPRO_DECODE_ATTN", DECODE_ATTN_CHOICES,
                          "decode-attention")
-    if impl == "pallas" and not capabilities(cfg).supports_flash_decode:
-        impl = "ref"
+    caps = capabilities(cfg)
+    if kv_layout == "paged":
+        if impl == "pallas":
+            impl = "paged"
+        if impl == "paged" and not caps.supports_flash_decode:
+            impl = "ref"         # ref gather carries softcap; kernel doesn't
+    else:
+        if impl == "paged":
+            raise ValueError(
+                "decode-attention impl 'paged' requires kv_layout='paged' "
+                "(dense-cache engines choose between 'pallas' and 'ref')")
+        if impl == "pallas" and not caps.supports_flash_decode:
+            impl = "ref"
     return impl
 
 
@@ -138,5 +155,33 @@ def make_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
             if advance_pos:
                 return nxt[:, None], caches, pos + 1
             return nxt, caches
+
+    return decode
+
+
+def make_paged_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
+                           attn_impl: str = "auto") -> Callable:
+    """(params, token [B,1], caches, pos [B], block_table [B,M],
+    write_bids [B]) -> (next [B,1], caches, pos+1).
+
+    The paged-layout analog of ``make_decode_step(advance_pos=True)``:
+    ``caches`` are the pooled block caches (serve/blockpool.py),
+    ``block_table`` names each slot's pool blocks and ``write_bids`` is the
+    engine's per-tick write plan (the pool block this token's K/V lands in;
+    TRASH for inactive slots).  Always advances positions — the engine's
+    device-resident hot loop is the only consumer.
+    """
+    rules = dict(plan.act_rules)
+    rules["mesh"] = mesh
+    rules["decode_attn_impl"] = resolve_decode_attn_impl(attn_impl, cfg,
+                                                         kv_layout="paged")
+
+    def decode(params, token, caches, pos, block_table, write_bids):
+        with activation_sharding(rules):
+            logits, caches = model_paged_decode_step(
+                params, token, caches, cfg, pos=pos,
+                block_table=block_table, write_bids=write_bids)
+            nxt = greedy_sample(logits)
+            return nxt[:, None], caches, pos + 1
 
     return decode

@@ -1,0 +1,526 @@
+"""Paged KV-cache subsystem tests: block-pool allocator invariants, the
+Pallas paged-decode kernel vs its gather reference, registry capability
+gating, and the headline contract — a paged engine is token-for-token
+identical to the dense engine on mixed-length request streams (admission
+after eviction and shared-prefix block reuse included).
+
+Parity runs in f32 (``cfg.scaled(dtype=jnp.float32)``): the two layouts
+execute different XLA programs over identical values, so bf16 would expose
+argmax decisions to sub-ulp reassociation noise that has nothing to do with
+the paging logic under test.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models.common import init_params
+from repro.models.registry import (capabilities, model_paged_decode_step,
+                                   model_prefill, model_specs)
+from repro.models.sharding import activation_sharding
+from repro.runtime import Runtime
+from repro.serve import blockpool
+from repro.serve.blockpool import (NULL_BLOCK, TRASH_BLOCK, BlockPool,
+                                   PoolExhausted)
+from repro.serve.engine import Request
+from repro.serve.steps import resolve_decode_attn_impl
+
+PAGED_ARCHS = [a for a in list_archs()
+               if capabilities(get_smoke_config(a)).supports_paged_decode]
+
+
+# -- allocator invariants ----------------------------------------------------
+
+
+def test_blockpool_admit_release_refcounts():
+    pool = BlockPool(num_blocks=10, block_size=4, num_slots=2,
+                     max_blocks_per_seq=4)
+    assert pool.free_blocks == 8
+    prompt = np.arange(10, dtype=np.int32)        # 2 full blocks + tail
+    dst = pool.admit(0, prompt, bucket_blocks=4)
+    assert pool.seq_blocks[0] == 3 and pool.next_pos[0] == 10
+    # three fresh blocks written, fourth bucket column is trash
+    assert (dst[:3] >= blockpool.NUM_RESERVED).all()
+    assert dst[3] == TRASH_BLOCK
+    assert len(set(dst[:3])) == 3
+    assert pool.free_blocks == 5
+    assert all(pool.refcount[b] == 1 for b in dst[:3])
+    # unused table entries point at the null block
+    assert (pool.table[0, 3:] == NULL_BLOCK).all()
+    pool.release(0)
+    assert pool.free_blocks == 8
+    assert (pool.table[0] == NULL_BLOCK).all()
+    assert pool.seq_blocks[0] == 0 and pool.next_pos[0] == 0
+
+
+def test_blockpool_prefix_reuse_same_group_and_after_eviction():
+    pool = BlockPool(num_blocks=12, block_size=4, num_slots=3,
+                     max_blocks_per_seq=4)
+    shared = np.arange(8, dtype=np.int32)
+    a = np.concatenate([shared, [90, 91]]).astype(np.int32)
+    b = np.concatenate([shared, [92]]).astype(np.int32)
+    da = pool.admit(0, a, 3)
+    db = pool.admit(1, b, 3)
+    # slot 1 shares slot 0's two full prefix blocks: no write (TRASH), same
+    # physical ids, refcount 2
+    assert pool.prefix_hits == 2
+    assert (db[:2] == TRASH_BLOCK).all() and db[2] != TRASH_BLOCK
+    assert (pool.table[1, :2] == pool.table[0, :2]).all()
+    assert all(pool.refcount[pool.table[0, j]] == 2 for j in range(2))
+    # tails are private
+    assert pool.table[0, 2] != pool.table[1, 2]
+    used = pool.used_blocks
+    pool.release(0)
+    assert pool.used_blocks == used - 1           # shared blocks stay live
+    pool.release(1)
+    # after both evictions an identical prompt still reuses the cached
+    # blocks (registration survives the free list)
+    dc = pool.admit(2, a, 3)
+    assert pool.prefix_hits == 4
+    assert (dc[:2] == TRASH_BLOCK).all()
+    assert (da[:2] == pool.table[2, :2]).all()    # same physical blocks
+
+
+def test_blockpool_recycling_deregisters_cached_blocks():
+    pool = BlockPool(num_blocks=5, block_size=2, num_slots=2,
+                     max_blocks_per_seq=3)          # 3 usable blocks
+    a = np.array([1, 2, 3, 4], np.int32)            # 2 full blocks
+    pool.admit(0, a, 2)
+    pool.release(0)
+    # a different prompt churns through all free blocks, recycling a's
+    b = np.array([5, 6, 7, 8, 9], np.int32)         # 3 blocks
+    pool.admit(1, b, 3)
+    pool.release(1)
+    # a's registration must be gone: re-admitting it allocates fresh
+    pool.admit(0, a, 2)
+    assert pool.prefix_hits == 0
+
+
+def test_blockpool_cow_on_fork():
+    pool = BlockPool(num_blocks=8, block_size=4, num_slots=2,
+                     max_blocks_per_seq=3)
+    prompt = np.arange(6, dtype=np.int32)           # 1 full + partial tail
+    pool.admit(0, prompt, 2)
+    pool.fork(0, 1)
+    tail = int(pool.table[0, 1])
+    assert pool.refcount[tail] == 2
+    # slot 1's next write hits the shared tail -> private copy scheduled
+    bid, copies = pool.write_plan(1, active=True)
+    assert copies == [(tail, bid)] and bid != tail
+    assert pool.cow_copies == 1
+    assert pool.table[1, 1] == bid and pool.table[0, 1] == tail
+    assert pool.refcount[tail] == 1 and pool.refcount[bid] == 1
+    # slot 0 keeps writing its original tail, no further copies
+    bid0, copies0 = pool.write_plan(0, active=True)
+    assert bid0 == tail and copies0 == []
+
+
+def test_blockpool_write_plan_growth_and_inactive():
+    pool = BlockPool(num_blocks=8, block_size=2, num_slots=1,
+                     max_blocks_per_seq=3)
+    pool.admit(0, np.array([7, 8], np.int32), 1)    # exactly 1 full block
+    # inactive slots write to trash and never allocate
+    assert pool.write_plan(0, active=False) == (TRASH_BLOCK, [])
+    # first decode write crosses the block boundary: lazy growth
+    bid, copies = pool.write_plan(0, active=True)
+    assert copies == [] and bid not in (NULL_BLOCK, TRASH_BLOCK)
+    assert pool.seq_blocks[0] == 2 and pool.table[0, 1] == bid
+    # same block while filling it
+    assert pool.write_plan(0, active=True)[0] == bid
+    # past max_blocks_per_seq the write degrades to trash (dense engines
+    # drop out-of-bounds scatter writes the same way)
+    for _ in range(3):
+        last = pool.write_plan(0, active=True)
+    assert last == (TRASH_BLOCK, [])
+
+
+def test_blockpool_exhaustion():
+    pool = BlockPool(num_blocks=4, block_size=2, num_slots=2,
+                     max_blocks_per_seq=2)           # 2 usable blocks
+    assert pool.can_admit(4) and not pool.can_admit(5)
+    pool.admit(0, np.arange(4, dtype=np.int32), 2)
+    with pytest.raises(PoolExhausted):
+        pool.admit(1, np.array([9, 9], np.int32), 1)
+
+
+def test_blockpool_admit_rolls_back_on_exhaustion():
+    """A PoolExhausted mid-chain must leak nothing: blocks acquired so far
+    (fresh and shared) are returned, registrations this call created are
+    dropped, and the pool is immediately reusable."""
+    pool = BlockPool(num_blocks=4, block_size=2, num_slots=2,
+                     max_blocks_per_seq=3)           # 2 usable blocks
+    a = np.array([1, 2, 3, 4], np.int32)             # 2 full blocks
+    pool.admit(0, a, 2)
+    a_blocks = list(pool.table[0, :2])
+    pool.release(0)                                  # both cached-free
+    # shares a's first block, allocates the second (recycling a's other
+    # block), then the tail _alloc finds the free list empty
+    with pytest.raises(PoolExhausted):
+        pool.admit(1, np.array([1, 2, 9, 9, 9], np.int32), 3)
+    assert pool.free_blocks == 2                     # nothing leaked
+    assert (pool.refcount[blockpool.NUM_RESERVED:] == 0).all()
+    assert (pool.table[1] == NULL_BLOCK).all()
+    assert pool.prefix_hits == 0                     # hit was rolled back
+    # a's first block is cached-free again: re-admitting a reuses it
+    pool.admit(0, a[:2], 1)
+    assert pool.prefix_hits == 1
+    assert pool.table[0, 0] == a_blocks[0]
+
+
+def test_paged_parity_with_unaligned_capacity():
+    """capacity % block_size != 0: the paged layout must junk writes at
+    exactly the dense layout's out-of-bounds drop position (capacity), not
+    at the block-aligned table limit — otherwise paged attention sees KV
+    entries dense never stored."""
+    cfg = get_smoke_config("llama3.2-3b").scaled(dtype=jnp.float32)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=26, dtype=np.int32)
+    out = {}
+    for layout in ("dense", "paged"):
+        rt = Runtime.create(cfg, shape_kind="decode", capacity=30,
+                            kv_layout=layout)
+        kw = dict(block_size=8) if layout == "paged" else {}
+        eng = rt.engine(num_slots=1, **kw)
+        eng.submit(Request(rid=0, prompt=prompt.copy(), max_new_tokens=8))
+        eng.run_to_completion()
+        out[layout] = list(eng.finished[0].generated)
+    assert out["dense"] == out["paged"]
+
+
+def test_dense_engine_rejects_paged_sizing_kwargs():
+    rt = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
+                        capacity=32)
+    with pytest.raises(ValueError, match="paged"):
+        rt.engine(num_slots=2, block_size=8)
+
+
+def test_blockpool_reservation_accounting():
+    """``reserve_blocks`` holds back worst-case growth from admission: the
+    pending growth is deducted from ``available_blocks`` and returned on
+    release."""
+    pool = BlockPool(num_blocks=8, block_size=2, num_slots=2,
+                     max_blocks_per_seq=4)            # 6 usable
+    pool.admit(0, np.arange(2, dtype=np.int32), 1, reserve_blocks=4)
+    assert pool.free_blocks == 5                      # 1 allocated
+    assert pool.available_blocks == 2                 # 3 growth pending
+    # growth consumes the reservation, not extra availability
+    pool.write_plan(0, active=True)                   # fills block 0
+    pool.write_plan(0, active=True)                   # grows block 1
+    assert pool.available_blocks == 2
+    pool.release(0)
+    assert pool.available_blocks == 6
+
+
+def test_paged_engine_tight_pool_defers_admission_without_crashing():
+    """A pool sized for one request at a time must serialize admissions
+    (the second request waits for the first's eviction) and decode-time
+    lazy growth must never raise PoolExhausted mid-tick."""
+    cfg = get_smoke_config("llama3.2-3b").scaled(dtype=jnp.float32)
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32,
+                        kv_layout="paged")
+    # 3 usable blocks; each request reserves 2 (4-token prompt + up to 4
+    # new tokens at block_size 4) -> only one fits at a time
+    eng = rt.engine(num_slots=2, block_size=4, num_blocks=5)
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=4, dtype=np.int32), max_new_tokens=4))
+    stats = eng.run_to_completion()
+    assert stats.finished == 2
+    assert stats.prefill_calls == 2          # serialized, not batched
+    assert all(len(r.generated) == 4 for r in eng.finished)
+    assert eng.pool.used_blocks == 0
+
+
+def test_paged_engine_rejects_unservable_request():
+    """A request the pool can never hold fails fast at submit instead of
+    being held back forever by the admission gate."""
+    cfg = get_smoke_config("llama3.2-3b").scaled(dtype=jnp.float32)
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32,
+                        kv_layout="paged")
+    eng = rt.engine(num_slots=2, block_size=4, num_blocks=5)  # 3 usable
+    with pytest.raises(ValueError, match="usable blocks"):
+        eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                           max_new_tokens=16))
+
+
+# -- device helpers ----------------------------------------------------------
+
+
+def test_copy_blocks_duplicates_content():
+    cfg = get_smoke_config("llama3.2-3b")
+    caches = blockpool.init_paged_cache(cfg, num_blocks=4, block_size=2)
+    poked = jax.tree.map(
+        lambda a: a.at[:, 2].set(jnp.ones_like(a[:, 2])), caches)
+    out = blockpool.copy_blocks(poked, jnp.asarray([2], jnp.int32),
+                                jnp.asarray([3], jnp.int32))
+    for gc in out:
+        for sub in gc.values():
+            for leaf in sub.values():
+                np.testing.assert_array_equal(np.asarray(leaf[:, 3]),
+                                              np.asarray(leaf[:, 2]))
+
+
+# -- Pallas paged kernel vs gather reference ---------------------------------
+
+
+@pytest.mark.parametrize("H,KV", [(8, 2), (6, 1), (4, 4)])
+def test_paged_kernel_matches_ref(H, KV):
+    from repro.kernels.paged_attention import paged_decode_attention
+    from repro.kernels.ref import ref_paged_decode_attention
+    rng = np.random.default_rng(0)
+    B, D, N, bs, M = 3, 16, 11, 4, 4
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(N, bs, KV, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(N, bs, KV, D)), jnp.float32)
+    pos_pool = np.full((N, bs), -1, np.int32)
+    table = np.zeros((B, M), np.int32)
+    free = list(range(blockpool.NUM_RESERVED, N))
+    seq_lens = [9, 4, 14]
+    for b, L in enumerate(seq_lens):
+        for j in range(-(-L // bs)):
+            bid = free.pop()                    # arbitrary physical order
+            table[b, j] = bid
+            for o in range(bs):
+                p = j * bs + o
+                pos_pool[bid, o] = p if p < L else -1
+    pos = jnp.asarray([L - 1 for L in seq_lens], jnp.int32)
+    pos_pool, table = jnp.asarray(pos_pool), jnp.asarray(table)
+    out = paged_decode_attention(q, kp, vp, pos_pool, table, pos,
+                                 interpret=True)
+    kpf = jnp.repeat(kp, H // KV, axis=2)
+    vpf = jnp.repeat(vp, H // KV, axis=2)
+    ref = ref_paged_decode_attention(q, kpf, vpf, pos_pool, table, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_model_decode_pallas_matches_ref_logits():
+    """Full paged decode step, kernel (interpret) vs ref gather, through a
+    real model: same logits to f32 tolerance."""
+    cfg = get_smoke_config("llama3.2-3b").scaled(dtype=jnp.float32)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    bs, M, N = 4, 4, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                              cfg.vocab_size)
+    _, dense = model_prefill(params, {"tokens": toks}, cfg, capacity=16)
+    caches = blockpool.init_paged_cache(cfg, N, bs)
+    table = np.zeros((2, M), np.int32)
+    for b in range(2):
+        table[b, :2] = [2 + 2 * b, 3 + 2 * b]
+
+    def fill(pool, d):
+        arr = np.asarray(pool).copy()
+        dd = np.asarray(d)
+        for b in range(2):
+            for j in range(2):
+                arr[:, table[b, j]] = dd[:, b, j * bs:(j + 1) * bs]
+        return jnp.asarray(arr)
+
+    caches = jax.tree.map(fill, caches, dense)
+    tok = jax.random.randint(jax.random.PRNGKey(2), (2, 1), 0,
+                             cfg.vocab_size)
+    pos = jnp.full((2,), 6, jnp.int32)
+    wb = jnp.asarray([table[b, 1] for b in range(2)], jnp.int32)
+    outs = {}
+    for impl in ("ref", "paged"):
+        with activation_sharding({"decode_attn_impl": impl}):
+            logits, _ = model_paged_decode_step(
+                params, tok, caches, cfg, pos=pos,
+                block_table=jnp.asarray(table), write_bids=wb)
+        outs[impl] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["paged"], outs["ref"],
+                               atol=2e-4, rtol=2e-4)
+
+
+# -- capability gating and impl policy ---------------------------------------
+
+
+def test_supports_paged_decode_flags():
+    expected = {"gemma-2b", "granite-20b", "llama3.2-3b", "qwen3-4b",
+                "qwen3-moe-30b-a3b", "internvl2-26b"}
+    assert set(PAGED_ARCHS) == expected
+    # SWA keeps the ring buffer; enc-dec and recurrent state stay dense
+    for arch in ("mixtral-8x7b", "whisper-tiny", "jamba-v0.1-52b",
+                 "xlstm-125m"):
+        assert not capabilities(get_smoke_config(arch)).supports_paged_decode
+
+
+def test_resolve_decode_attn_impl_paged(monkeypatch):
+    monkeypatch.delenv("REPRO_DECODE_ATTN", raising=False)
+    cfg = get_smoke_config("llama3.2-3b")
+    # paged layout: explicit pallas means the layout's native kernel
+    assert resolve_decode_attn_impl("pallas", cfg, "paged") == "paged"
+    assert resolve_decode_attn_impl("paged", cfg, "paged") == "paged"
+    assert resolve_decode_attn_impl("ref", cfg, "paged") == "ref"
+    if jax.default_backend() == "cpu":
+        assert resolve_decode_attn_impl("auto", cfg, "paged") == "ref"
+    # softcap: the paged kernel has no variant, ref gather carries it
+    capped = cfg.scaled(attn_logit_softcap=30.0)
+    assert capabilities(capped).supports_paged_decode
+    assert resolve_decode_attn_impl("paged", capped, "paged") == "ref"
+    # dense layout: "paged" is a contradiction, fail fast
+    with pytest.raises(ValueError):
+        resolve_decode_attn_impl("paged", cfg)
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "paged")
+    assert resolve_decode_attn_impl("ref", cfg, "paged") == "paged"
+    with pytest.raises(ValueError):
+        resolve_decode_attn_impl("auto", cfg)
+
+
+def test_runtime_rejects_paged_on_unsupported_arch():
+    with pytest.raises(ValueError, match="paged"):
+        Runtime.create("mixtral-8x7b", smoke=True, shape_kind="decode",
+                       kv_layout="paged")
+    with pytest.raises(ValueError, match="kv_layout"):
+        Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
+                       kv_layout="bogus")
+
+
+# -- engine parity -----------------------------------------------------------
+
+
+def _mixed_stream(cfg, n=6, seed=3):
+    """Mixed-length requests (several admission/eviction rounds on 2
+    slots) plus a shared-prefix pair whose prefix fills two whole blocks."""
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(3, 14)),
+                                        dtype=np.int32),
+                    max_new_tokens=int(rng.integers(3, 8)))
+            for i in range(n)]
+    shared = rng.integers(0, cfg.vocab_size, size=16, dtype=np.int32)
+    for rid, tail in ((100, [5, 6]), (101, [7, 8])):
+        reqs.append(Request(
+            rid=rid,
+            prompt=np.concatenate([shared, tail]).astype(np.int32),
+            max_new_tokens=4))
+    return reqs
+
+
+def _run_stream(cfg, kv_layout, **kw):
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32,
+                        kv_layout=kv_layout)
+    eng = rt.engine(num_slots=2, **kw)
+    for r in _mixed_stream(cfg):
+        eng.submit(r)
+    eng.run_to_completion()
+    return eng
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_engine_token_parity(arch):
+    """The acceptance contract: for every paged-capable arch, the paged
+    engine's token streams equal the dense engine's on a mixed-length
+    stream with slot churn (admissions after evictions) and a
+    shared-prefix pair, and the drained pool ends clean."""
+    cfg = get_smoke_config(arch).scaled(dtype=jnp.float32)
+    dense = _run_stream(cfg, "dense")
+    paged = _run_stream(cfg, "paged", block_size=8)
+    out_d = {r.rid: list(r.generated) for r in dense.finished}
+    out_p = {r.rid: list(r.generated) for r in paged.finished}
+    assert out_d == out_p
+    assert paged.stats.finished == dense.stats.finished == 8
+    assert paged.pool.prefix_hits >= 2      # the shared 2-block prefix
+    # drained: every block back on the free list, tables nulled
+    assert paged.pool.used_blocks == 0
+    assert (paged.pool.table == NULL_BLOCK).all()
+
+
+def test_paged_engine_parity_with_softcap():
+    """Softcap archs page too — the ref gather carries the softcap (the
+    Pallas kernels just stay out of the way)."""
+    cfg = get_smoke_config("llama3.2-3b").scaled(dtype=jnp.float32,
+                                                 attn_logit_softcap=20.0)
+    dense = _run_stream(cfg, "dense")
+    paged = _run_stream(cfg, "paged", block_size=8)
+    assert {r.rid: list(r.generated) for r in dense.finished} == \
+           {r.rid: list(r.generated) for r in paged.finished}
+
+
+def test_paged_engine_shares_prefix_blocks_live():
+    """Two concurrently-admitted same-prefix requests verifiably share
+    physical blocks while decoding."""
+    cfg = get_smoke_config("llama3.2-3b").scaled(dtype=jnp.float32)
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32,
+                        kv_layout="paged")
+    eng = rt.engine(num_slots=2, block_size=8)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, size=16, dtype=np.int32)
+    for rid, tail in ((0, [1, 2]), (1, [3, 4])):
+        eng.submit(Request(rid=rid,
+                           prompt=np.concatenate([shared, tail]).astype(
+                               np.int32),
+                           max_new_tokens=8))
+    eng.tick()                               # admission tick
+    assert eng.pool.prefix_hits == 2
+    t = eng.pool.table
+    assert (t[0, :2] == t[1, :2]).all()      # 16-token prefix: 2 blocks
+    assert (t[0, :2] != NULL_BLOCK).all()
+    assert t[0, 2] != t[1, 2]                # private tails
+    shared_ids = [int(t[0, 0]), int(t[0, 1])]
+    assert all(eng.pool.refcount[b] == 2 for b in shared_ids)
+    stats = eng.run_to_completion()
+    assert stats.finished == 2
+    assert all(len(r.generated) == 8 for r in eng.finished)
+
+
+def test_paged_engine_reuses_blocks_after_eviction():
+    """An identical prompt admitted after its twin finished reuses the
+    evicted (cached-free) blocks — same physical ids, no new writes."""
+    cfg = get_smoke_config("llama3.2-3b").scaled(dtype=jnp.float32)
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32,
+                        kv_layout="paged")
+    eng = rt.engine(num_slots=1, block_size=8)
+    prompt = np.arange(1, 17, dtype=np.int32)        # 2 full blocks
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=3))
+    eng.run_to_completion()
+    assert eng.pool.used_blocks == 0                 # evicted
+    eng.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=3))
+    eng.tick()
+    assert eng.pool.prefix_hits == 2                 # cached-free blocks hit
+    eng.run_to_completion()
+    a, b = eng.finished
+    assert a.generated == b.generated        # same prompt, same stream
+
+
+def test_paged_decode_compiles_once():
+    """Slot churn, lazy block growth and admissions must never retrace the
+    paged decode step (block table and write plan are data, not shapes)."""
+    cfg = get_smoke_config("llama3.2-3b").scaled(dtype=jnp.float32)
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32,
+                        kv_layout="paged")
+    eng = rt.engine(num_slots=2, block_size=4)       # frequent growth
+    rng = np.random.default_rng(5)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=int(rng.integers(2, 11)),
+            dtype=np.int32), max_new_tokens=int(rng.integers(2, 8))))
+    stats = eng.run_to_completion()
+    assert stats.finished == 6
+    assert eng._decode._cache_size() == 1
+
+
+def test_paged_pool_memory_below_dense():
+    """The point of the subsystem: for a short-request workload the paged
+    pool holds well under the dense engines' worst-case K/V footprint."""
+    cfg = get_smoke_config("llama3.2-3b").scaled(dtype=jnp.float32)
+    rt_d = Runtime.create(cfg, shape_kind="decode", capacity=64)
+    dense = rt_d.engine(num_slots=4)
+    rt_p = Runtime.create(cfg, shape_kind="decode", capacity=64,
+                          kv_layout="paged")
+    # pool sized to the workload: 12-token prompts + 8 new tokens -> 3
+    # blocks of 8 per slot (+ the two reserved blocks)
+    paged = rt_p.engine(num_slots=4, block_size=8, num_blocks=14)
+    assert paged.kv_cache_bytes() <= 0.5 * dense.kv_cache_bytes()
+    prompts = [np.random.default_rng(2).integers(
+        0, cfg.vocab_size, size=(6, 12), dtype=np.int32)] * 2
+    out = []
+    for eng, toks in zip((dense, paged), prompts):
+        for i in range(6):
+            eng.submit(Request(rid=i, prompt=toks[i], max_new_tokens=8))
+        eng.run_to_completion()
+        out.append({r.rid: list(r.generated) for r in eng.finished})
+    assert out[0] == out[1]

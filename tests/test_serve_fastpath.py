@@ -64,6 +64,49 @@ def test_engine_decodes_through_ring_wraparound():
     assert all(len(g) == 24 for g in a.values())
 
 
+def test_pad_prefill_cache_swa_ring_roll():
+    """The SWA ring-roll path of ``pad_prefill_cache`` (S >= T with nonzero
+    p0 % T): every kept entry must land at its ``pos % T`` ring slot, so
+    the first decode write (at ``write_index``) overwrites exactly the
+    oldest entry."""
+    cfg = get_smoke_config("mixtral-8x7b").scaled(sliding_window=8)
+    R, B, KV, Dh = cfg.groups[0].repeats, 2, cfg.num_kv_heads, cfg.head_dim
+    T = kvcache.attn_cache_len(cfg, 8)
+    assert T == 8
+    rng = np.random.default_rng(0)
+
+    def collected(S):
+        return [{f"sub{j}": {
+            "k": jnp.asarray(rng.normal(size=(R, B, S, KV, Dh)),
+                             jnp.float32),
+            "v": jnp.asarray(rng.normal(size=(R, B, S, KV, Dh)),
+                             jnp.float32)}
+            for j, k in enumerate(g.pattern)} for g in cfg.groups]
+
+    # case 1: untrimmed S=10 > T=8, prefill_len=10 -> start=2, shift=2
+    # case 2: upstream-trimmed S=8 == T, prefill_len=12 -> p0=4, shift=4
+    for S, prefill_len in ((10, 10), (8, 12)):
+        caches = collected(S)
+        out = kvcache.pad_prefill_cache(cfg, caches, prefill_len, capacity=8)
+        p0 = prefill_len - T                   # oldest kept position
+        assert p0 % T != 0                     # the roll path, not a no-op
+        for gc, oc in zip(caches, out):
+            for sub in gc:
+                kin = np.asarray(gc[sub]["k"])[:, :, S - T:]
+                kout = np.asarray(oc[sub]["k"])
+                pos = np.asarray(oc[sub]["pos"])
+                for i in range(T):
+                    p = p0 + i                 # entry holding position p...
+                    slot = p % T               # ...must sit at its ring slot
+                    np.testing.assert_array_equal(pos[:, :, slot], p)
+                    np.testing.assert_array_equal(kout[:, :, slot],
+                                                  kin[:, :, i])
+        # decode continuity: the next token (pos = prefill_len) writes over
+        # the slot that holds the oldest entry, exactly as the ring expects
+        widx = int(kvcache.write_index(cfg, jnp.asarray(prefill_len), T))
+        assert widx == p0 % T
+
+
 # -- batched admission ------------------------------------------------------
 
 
@@ -129,6 +172,23 @@ def test_admission_batches_prefill_calls():
     assert stats.finished == 8
     assert stats.admitted == 8
     assert stats.prefill_calls <= 4     # 8 same-length reqs over 4 slots
+
+
+def test_admission_window_scans_past_odd_prompt():
+    """One odd-length prompt in the queue must not split an otherwise
+    batchable admission: the scheduler scans a bounded window, so the
+    [8, 8, 32, 8]-bucket stream admits as two prefill calls ([8,8,8] +
+    [32]), not three."""
+    cfg, eng = _engine(num_slots=4, capacity=32)
+    rng = np.random.default_rng(0)
+    for i, n in enumerate((6, 6, 20, 6)):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=n, dtype=np.int32), max_new_tokens=4))
+    stats = eng.run_to_completion()
+    assert stats.finished == 4
+    assert stats.prefill_calls == 2
+    assert all(len(r.generated) == 4 for r in eng.finished)
+    assert sorted(r.rid for r in eng.finished) == [0, 1, 2, 3]
 
 
 # -- engine invariants ------------------------------------------------------
