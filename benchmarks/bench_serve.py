@@ -24,10 +24,15 @@ yields is the subsystem's reason to exist and is asserted <= 0.5.
 way (benchmarks/common.py CSV convention), and the results land in
 ``BENCH_serve.json`` at the repo root so the perf trajectory is
 machine-readable across PRs.
+
+``--mesh SPEC`` (e.g. ``2x2``; needs enough devices — CI forces 8 CPU
+devices via XLA_FLAGS) runs the fast engine with the Pallas decode kernel
+under the shard_map kernel dispatch on vs off (``partition="auto"`` vs
+``"off"``) and *merges* a ``mesh`` section into the existing
+BENCH_serve.json, so the plain-run numbers survive.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -35,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, merge_bench_json
 from repro.runtime import Runtime
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.steps import make_decode_step, make_prefill_step
@@ -234,12 +239,56 @@ def main(smoke: bool = False, kv_layout: str = "dense"):
         assert ratio <= 0.5, \
             f"paged KV footprint {ratio:.2%} of dense exceeds the 50% bound"
 
-    with open(BENCH_JSON, "w") as f:
-        json.dump(record, f, indent=1)
-    print(f"# wrote {os.path.normpath(BENCH_JSON)}", flush=True)
+    merge_bench_json(BENCH_JSON, record)
 
     if not smoke:
         assert speed >= 1.3, f"fast path regressed: {speed:.2f}x < 1.3x"
+
+
+
+def main_mesh(mesh_spec: str, smoke: bool = False):
+    """Sharded-vs-replicated serve decode on ``mesh_spec`` (qwen3-4b:
+    heads-mode GQA whose KV heads divide a 2-way model axis, so the decode
+    kernels partition rows *and* KV heads)."""
+    from repro.launch.mesh import mesh_from_spec
+    mesh = mesh_from_spec(mesh_spec)
+    n_requests = 6 if smoke else 16
+    num_slots, capacity = 4, 64
+    arch = "qwen3-4b"
+
+    def build(partition):
+        rt = Runtime.create(arch, mesh, smoke=True, shape_kind="decode",
+                            capacity=capacity, partition=partition)
+        return rt, (lambda: rt.engine(num_slots=num_slots,
+                                      attn_impl="pallas"))
+
+    rt_rep, make_rep = build("off")
+    rep = _run(make_rep, rt_rep.cfg, n_requests)
+    rt_shard, make_shard = build("auto")
+    shard = _run(make_shard, rt_shard.cfg, n_requests)
+    ratio = shard["tok_s"] / rep["tok_s"]
+    emit(f"serve_sharded_{arch}_{mesh_spec}",
+         shard["wall"] * 1e6 / n_requests,
+         f"tok_s={shard['tok_s']:.1f} replicated_tok_s={rep['tok_s']:.1f} "
+         f"speedup={ratio:.2f}x")
+    backend = jax.default_backend()
+    print(f"# sharded serve dispatch ({backend}, mesh {mesh_spec}): "
+          f"{ratio:.2f}x tokens/s (replicated {rep['tok_s']:.1f} -> "
+          f"sharded {shard['tok_s']:.1f})", flush=True)
+    if backend != "tpu":
+        print("# note: non-TPU backend runs Pallas in interpret mode — "
+              "numerics/wiring validation, not a speed measurement",
+              flush=True)
+    merge_bench_json(BENCH_JSON, {"mesh": {
+        "spec": mesh_spec, "smoke": smoke, "backend": backend,
+        "arch": arch, "n_requests": n_requests, "num_slots": num_slots,
+        "capacity": capacity, "attn_impl": "pallas",
+        "pallas_interpret": backend != "tpu",
+        "tokens_per_s_sharded": round(shard["tok_s"], 2),
+        "tokens_per_s_replicated": round(rep["tok_s"], 2),
+        "speedup": round(ratio, 3),
+        **_lat_fields(shard, "sharded_"),
+    }})
 
 
 if __name__ == "__main__":
@@ -248,5 +297,12 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--kv-layout", choices=("dense", "paged"),
                     default="dense")
+    ap.add_argument("--mesh", default="",
+                    help="mesh spec (e.g. 2x2): run sharded-vs-replicated "
+                         "decode and merge a 'mesh' section into "
+                         "BENCH_serve.json (skips the plain sections)")
     ns = ap.parse_args()
-    main(smoke=ns.smoke, kv_layout=ns.kv_layout)
+    if ns.mesh:
+        main_mesh(ns.mesh, smoke=ns.smoke)
+    else:
+        main(smoke=ns.smoke, kv_layout=ns.kv_layout)

@@ -1,6 +1,8 @@
-"""Shared benchmark harness: timing, CSV emission."""
+"""Shared benchmark harness: timing, CSV emission, BENCH-json merging."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -22,3 +24,17 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def merge_bench_json(path: str, update: dict):
+    """Merge ``update``'s top-level keys into the BENCH json at ``path``
+    (sections from other runs survive — e.g. a ``--mesh`` run extends the
+    plain smoke's record instead of clobbering it)."""
+    record = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    record.update(update)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"# wrote {os.path.normpath(path)}", flush=True)

@@ -6,14 +6,17 @@
 # Mirrors ROADMAP.md's tier-1 verify command and adds (a) a compileall pass
 # so syntax errors anywhere in src/ fail fast, (b) the all-arch registry
 # smoke (every configs.ARCHS entry builds a Runtime whose prefill/decode
-# match the legacy models/api path bit-for-bit), and (c) the serve
+# match the raw model-family surface bit-for-bit), and (c) the serve
 # fast-path smoke benchmark so data-path regressions (admission batching,
 # donation, kernel fallback) are caught even when no unit test covers the
 # exact shape.  The serve smoke also refreshes BENCH_serve.json (tokens/s,
 # admissions/s) at the repo root for the perf trajectory, and (d) the
 # train-step smoke benchmark, which exercises the Pallas flash-attention +
 # fused-FFN custom-VJP train path end to end and refreshes BENCH_step.json
-# (fast-vs-ref step time per arch) beside it.
+# (fast-vs-ref step time per arch) beside it, and (e) the 8-device sharded
+# kernel-dispatch gate: tests/test_partition.py (sharded-vs-replicated
+# parity for every arch) plus the --mesh variants of both benchmarks,
+# which merge sharded-vs-replicated numbers into the BENCH jsons.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -32,10 +35,11 @@ echo "== paged==dense token-parity subset =="
 python -m pytest -q tests/test_paged.py
 
 echo "== tier-1 pytest =="
-# registry + paged suites already ran above — skip the re-runs (ROADMAP's
-# tier-1 command without --ignore covers them when run standalone)
+# registry + paged suites already ran above and the partition suite runs
+# in its own 8-device gate below — skip the re-runs (ROADMAP's tier-1
+# command without --ignore covers them when run standalone)
 python -m pytest -x -q --ignore=tests/test_registry.py \
-    --ignore=tests/test_paged.py
+    --ignore=tests/test_paged.py --ignore=tests/test_partition.py
 
 echo "== serve fast-path smoke benchmark (dense + paged engines) =="
 # --kv-layout paged adds the dense-vs-paged section and asserts the paged
@@ -44,5 +48,20 @@ python -m benchmarks.bench_serve --smoke --kv-layout paged
 
 echo "== train-step fast-path smoke benchmark =="
 python -m benchmarks.bench_step --smoke
+
+echo "== 8-device sharded kernel-dispatch gate =="
+# the shard_map partition layer's acceptance gate: every arch's
+# sharded-vs-replicated parity (loss/grads 1e-4, logits 1e-3, identical
+# decode streams) on a forced 8-device CPU mesh, then the bench --mesh
+# variants, which merge sharded-vs-replicated numbers into the BENCH jsons
+# written by the plain smokes above.  The XLA_FLAGS override is scoped to
+# these commands only: everything above must keep seeing the real single
+# CPU device (tests/conftest.py documents the same rule for the suite).
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_partition.py
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.bench_step --smoke --mesh 2x4
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.bench_serve --smoke --mesh 2x2
 
 echo "CI OK"

@@ -2,11 +2,13 @@
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
 #
-# Public surface: ``repro.kernels.ops`` (interpret-mode aware jit wrappers)
-# and ``repro.kernels.ref`` (pure-jnp oracles).  The serve engine's decode
-# hot loop pulls ``ops.decode_attention`` (flash-decode) through
+# Public surface: ``repro.kernels.ops`` (interpret-mode aware jit wrappers),
+# ``repro.kernels.partition`` (shard_map dispatch mapping each kernel's
+# logical axes onto the model mesh — the layer every model-side call site
+# routes through) and ``repro.kernels.ref`` (pure-jnp oracles).  The serve
+# engine's decode hot loop pulls flash-decode through
 # ``models.attention.attention_decode`` when the active sharding rules set
 # ``decode_attn_impl = "pallas"`` (see serve/steps.py for the backend
 # selection policy).
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "partition", "ref"]

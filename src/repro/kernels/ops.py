@@ -1,6 +1,13 @@
 """jit'd public wrappers over the Pallas kernels + the one impl-selection
 policy for the training/prefill hot path.
 
+These wrappers are the *replicated* dispatch: on a multi-device mesh the
+auto-partitioner treats each ``pallas_call`` as opaque and replicates its
+operands.  Model call sites route through ``kernels.partition`` instead,
+which shard_maps the kernels over the mesh when the activation rules and
+divisibility allow and falls back to these entry points (bitwise) when
+they don't.
+
 ``interpret`` resolves per-backend: compiled on TPU, interpreter everywhere
 else (this container is CPU-only — the brief's validation mode).  Nothing
 has to remember to flip it for production; ``set_interpret_mode`` remains

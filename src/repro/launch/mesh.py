@@ -22,12 +22,19 @@ def mesh_from_spec(spec: str):
     1 dim  -> ("model",);  2 dims -> ("data", "model");
     3 dims -> ("pod", "data", "model") with the leading axis on the slow
     (DCN) tier."""
-    dims = tuple(int(x) for x in spec.split("x"))
+    try:
+        dims = tuple(int(x) for x in spec.split("x"))
+    except ValueError:
+        raise ValueError(
+            f"mesh spec {spec!r}: want 1-3 'x'-separated integer dims "
+            "(e.g. '8', '2x4', '2x2x2')") from None
     names = {1: ("model",), 2: ("data", "model"),
              3: ("pod", "data", "model")}
     if len(dims) not in names:
         raise ValueError(f"mesh spec {spec!r}: want 1-3 'x'-separated dims "
                          "(e.g. '8', '2x4', '2x2x2')")
+    if any(d <= 0 for d in dims):
+        raise ValueError(f"mesh spec {spec!r}: every dim must be positive")
     return jax.make_mesh(dims, names[len(dims)])
 
 

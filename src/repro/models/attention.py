@@ -22,6 +22,10 @@ and is wired into this module's train/prefill forward: the
 elsewhere; ``REPRO_ATTN_IMPL`` override) routes eligible layers through the
 differentiable flash kernel, with ``flash_train_supported`` gating on
 softcap/head-dim/block-divisibility and standard (arange) positions.
+Every Pallas call here dispatches through ``kernels.partition``, which
+shard_maps the kernel over the mesh (heads/'model' for the train kernel,
+cache rows/DP + KV heads/'model' for the decode kernels) when the
+activation rules and divisibility allow.
 
 Decode is context-parallel: the KV cache is sharded along T (flash-decode
 style); softmax over the sharded axis lowers to small all-reduces.
@@ -157,9 +161,11 @@ def flash_train_supported(cfg: ModelConfig, S: int, T: int, Dh: int) -> bool:
 
 def _flash_attend(q, k, v, causal: bool, window: Optional[int]):
     """Route [B,S,H,dh]-layout q/k/v through the differentiable Pallas flash
-    kernel ([B,H,S,dh] layout) and back."""
-    from repro.kernels import ops as kernel_ops
-    out = kernel_ops.flash_attention(
+    kernel ([B,H,S,dh] layout) and back.  Dispatch goes through
+    ``kernels.partition``: head-sharded shard_map when the mesh and head
+    count allow, today's replicated call otherwise."""
+    from repro.kernels import partition as kernel_partition
+    out = kernel_partition.flash_attention(
         q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
         causal=causal, window=(window or 0) if causal else 0)
     return out.swapaxes(1, 2)
@@ -344,9 +350,11 @@ def attention_decode(x: jax.Array, params: dict, cfg: ModelConfig, *,
             and pallas_decode_supported(cfg, k_cache.shape[1], cross=cross)):
         # Flash-decode Pallas kernel: online softmax over kv blocks, never
         # materializes the [T] score vector in HBM.  Positional masking
-        # (incl. the SWA ring buffer) matches the jnp path below.
-        from repro.kernels import ops as kernel_ops
-        out = kernel_ops.decode_attention(
+        # (incl. the SWA ring buffer) matches the jnp path below.  The
+        # partition layer shards cache rows over the DP axes and KV heads
+        # over 'model' when they divide (replicated dispatch otherwise).
+        from repro.kernels import partition as kernel_partition
+        out = kernel_partition.decode_attention(
             q[:, 0], k_cache, v_cache, kv_positions, pos,
             window=cfg.sliding_window or 0)
         y = jnp.einsum("bshk,hkd->bsd", out[:, None],
@@ -416,8 +424,8 @@ def attention_decode_paged(x: jax.Array, params: dict, cfg: ModelConfig, *,
     rules = current_rules() or {}
     if (rules.get("decode_attn_impl") == "paged"
             and paged_pallas_supported(cfg)):
-        from repro.kernels import ops as kernel_ops
-        out = kernel_ops.paged_decode_attention(
+        from repro.kernels import partition as kernel_partition
+        out = kernel_partition.paged_decode_attention(
             q[:, 0], k_pool, v_pool, pos_pool, block_table, pos)[:, None]
     else:
         flat = block_table.reshape(-1)

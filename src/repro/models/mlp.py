@@ -48,7 +48,8 @@ def mlp(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
     from repro.kernels import ops as kernel_ops
     impl = kernel_ops.resolve_ffn_impl(rules.get("ffn_impl", "auto"))
     if impl == "pallas" and fused_ffn_supported(cfg, B * S, F):
-        y = kernel_ops.swiglu_ffn(
+        from repro.kernels import partition as kernel_partition
+        y = kernel_partition.swiglu_ffn(
             x.reshape(B * S, D), w["wi_gate"].astype(x.dtype),
             w["wi_up"].astype(x.dtype), w["wo"].astype(x.dtype))
         return shard(y.reshape(B, S, D), "batch", "seq_act", "embed_act")

@@ -14,8 +14,9 @@ memory -> workload); the software analog is one dispatch layer between a
 so adding an arch family (SSM/xLSTM already exist as configs; a dedicated
 state-space family is the expected next registrant) means registering one
 object here instead of editing ~10 ``cfg.encoder`` if/else branches.  The
-old ``models/api.py`` facade is now a thin deprecated shim over this module;
-the public entry point is ``repro.runtime.Runtime``.
+old ``models/api.py`` facade (itself a shim over this module since PR 2)
+is gone; the functional surface lives at the bottom of this file and the
+public entry point is ``repro.runtime.Runtime``.
 """
 from __future__ import annotations
 
@@ -55,6 +56,12 @@ class Capabilities:
     and the fused SwiGLU kernel (silu gating only — GeGLU archs keep the
     jnp path); per-call shape eligibility is re-checked at trace time
     (models.attention.flash_train_supported, models.mlp.fused_ffn_supported).
+
+    The ``*_shardable(tp)`` predicates are the divisibility law for the
+    shard_map kernel dispatch (kernels/partition.py): a kernel runs on
+    partitioned operands only when its sharded logical axis divides the
+    'model' axis; otherwise the dispatch falls back to today's replicated
+    path.
     """
 
     has_encoder: bool            # enc-dec: cross-attn memory, stub frontend
@@ -66,6 +73,28 @@ class Capabilities:
     supports_flash_train: bool   # Pallas train/prefill flash-attn expressible
     supports_fused_ffn: bool     # Pallas fused SwiGLU (dense FFN) expressible
     supports_paged_decode: bool  # pooled block-table KV layout expressible
+    num_heads: int = 0           # q heads (post-GQA-repeat kernel head count)
+    num_kv_heads: int = 0        # grouped KV heads (decode-cache head axis)
+    ffn_columns: int = 0         # dense d_ff (fused-FFN column axis)
+
+    def heads_shardable(self, tp: int) -> bool:
+        """Flash train/prefill attention partitions over Q heads iff they
+        divide the model axis (kernels.partition.axis_shardable — the one
+        divisibility law the dispatch gate itself uses)."""
+        from repro.kernels.partition import axis_shardable
+        return axis_shardable(self.num_heads, tp)
+
+    def kv_heads_shardable(self, tp: int) -> bool:
+        """Decode kernels partition the KV-cache/pool head axis iff the
+        grouped heads divide the model axis."""
+        from repro.kernels.partition import axis_shardable
+        return axis_shardable(self.num_kv_heads, tp)
+
+    def ffn_shardable(self, tp: int) -> bool:
+        """Fused SwiGLU partitions d_ff columns iff they divide the model
+        axis (per-shard block divisibility is re-checked at trace time)."""
+        from repro.kernels.partition import axis_shardable
+        return axis_shardable(self.ffn_columns, tp)
 
     @property
     def summary(self) -> str:
@@ -86,7 +115,7 @@ class Capabilities:
 class ModelFamily:
     """One arch family's functional surface + capability law.
 
-    Signatures (mirroring the old models/api.py facade):
+    Signatures (the registry's functional surface re-exports these 1:1):
       specs(cfg)                                          -> PSpec tree
       loss(params, batch, cfg)                            -> (loss, metrics)
       forward(params, batch, cfg)                         -> (logits, aux)
@@ -130,6 +159,9 @@ class ModelFamily:
                 and cfg.sliding_window is None
                 and all(k.startswith("attn") and k != "attn_cross"
                         for g in cfg.groups for k in g.pattern)),
+            num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads,
+            ffn_columns=cfg.d_ff or 0,
         )
 
 
@@ -286,7 +318,7 @@ ENCDEC_FAMILY = register_family(ModelFamily(
 
 
 # ---------------------------------------------------------------------------
-# Functional convenience surface (what the deprecated models/api.py re-exports)
+# Functional convenience surface (module-level wrappers over resolve())
 # ---------------------------------------------------------------------------
 
 

@@ -34,10 +34,27 @@ def current_rules() -> Optional[dict]:
 
 
 def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
-    """Annotate ``x`` with logical activation axes (one per dim; None = any)."""
+    """Annotate ``x`` with logical activation axes (one per dim; None = any).
+
+    A mesh axis may appear at most once in a PartitionSpec, so when two
+    logical axes map to the same mesh axis the collision is resolved
+    deterministically in favor of the *earlier* logical axis (argument
+    order): the later dim drops exactly the colliding mesh-axis
+    components and keeps any non-colliding remainder of a tuple mapping.
+    """
     rules = _ACT_RULES.get()
     if rules is None:
         return x
+    mesh_axes = resolve_mesh_axes(rules, axes)
+    if all(m is None for m in mesh_axes):
+        return x              # no-op (single-device / fully-unsharded rules)
+    return jax.lax.with_sharding_constraint(x, P(*mesh_axes))
+
+
+def resolve_mesh_axes(rules: dict, axes) -> list:
+    """Logical axes -> per-dim mesh axes under ``rules``, with the
+    deterministic duplicate-drop ``shard`` documents (exposed for direct
+    testing of the collision path)."""
     mesh_axes = []
     used: set = set()
     for ax in axes:
@@ -45,12 +62,13 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
         if m is None:
             mesh_axes.append(None)
             continue
-        key = tuple(m) if not isinstance(m, str) else (m,)
-        if any(k in used for k in key):
+        key = (m,) if isinstance(m, str) else tuple(m)
+        keep = tuple(k for k in key if k not in used)
+        used.update(keep)
+        if not keep:
             mesh_axes.append(None)
-        else:
-            used.update(key)
+        elif isinstance(m, str):
             mesh_axes.append(m)
-    if all(m is None for m in mesh_axes):
-        return x              # no-op (single-device / fully-unsharded rules)
-    return jax.lax.with_sharding_constraint(x, P(*mesh_axes))
+        else:
+            mesh_axes.append(keep[0] if len(keep) == 1 else keep)
+    return mesh_axes

@@ -22,6 +22,7 @@ assembles the stack through one entry point instead of re-wiring
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Callable, Optional, Union
 
 import jax
@@ -53,6 +54,7 @@ class Runtime:
                  family: registry.ModelFamily, mesh, plan: Plan, specs,
                  seq_len: int, capacity: int, attn_impl: str,
                  ffn_impl: str = "auto", kv_layout: str = "dense",
+                 partition: str = "auto",
                  param_dtype=jnp.float32, seed: int = 0, params=None,
                  plan_kw=None):
         self.arch = arch
@@ -67,6 +69,7 @@ class Runtime:
         self.attn_impl = attn_impl          # requested; resolution is lazy
         self.ffn_impl = ffn_impl            # requested; resolution is lazy
         self.kv_layout = kv_layout          # serve KV layout: dense | paged
+        self.partition = partition          # shard_map kernel dispatch knob
         self.param_dtype = param_dtype
         self.seed = seed
         self.plan_kw = dict(plan_kw or {})
@@ -81,6 +84,7 @@ class Runtime:
                seq_len: Optional[int] = None, capacity: Optional[int] = None,
                grad_sync: str = "hierarchical", attn_impl: str = "auto",
                ffn_impl: str = "auto", kv_layout: str = "dense",
+               partition: str = "auto",
                param_dtype=jnp.float32, seed: int = 0, params=None,
                plan_kw: Optional[dict] = None) -> "Runtime":
         """Build the full chain for one cell.
@@ -95,6 +99,10 @@ class Runtime:
         each other, else 128).  ``kv_layout`` picks the serve-engine KV
         layout: "dense" per-slot slabs, or "paged" pooled block caches
         (arch-gated by ``caps.supports_paged_decode``; fails fast here).
+        ``partition`` ("auto" | "off") controls the shard_map kernel
+        dispatch (kernels.partition): "auto" runs each Pallas kernel on
+        head-/column-/row-sharded operands when the mesh axes divide,
+        "off" keeps today's replicated dispatch everywhere.
         """
         if isinstance(arch, ModelConfig):
             if smoke:
@@ -128,10 +136,13 @@ class Runtime:
             raise ValueError(
                 f"arch {cfg.name!r} does not support the paged KV layout "
                 f"(caps: {family.capabilities(cfg).summary})")
+        from repro.kernels.partition import resolve_kernel_partition
+        resolve_kernel_partition(partition)    # fail fast on bad values
         return cls(arch=name, cfg=cfg, family=family, mesh=mesh, plan=plan,
                    specs=family.specs(cfg), seq_len=seq_len,
                    capacity=capacity, attn_impl=attn_impl,
                    ffn_impl=ffn_impl, kv_layout=kv_layout,
+                   partition=partition,
                    param_dtype=param_dtype, seed=seed, params=params,
                    plan_kw=plan_kw)
 
@@ -140,6 +151,7 @@ class Runtime:
                 attn_impl: Optional[str] = None,
                 ffn_impl: Optional[str] = None,
                 kv_layout: Optional[str] = None,
+                partition: Optional[str] = None,
                 plan_kw: Optional[dict] = None) -> "Runtime":
         """A new Runtime over the same cfg/params with a re-planned fabric
         mapping (e.g. train -> decode); materialized params and the original
@@ -151,6 +163,7 @@ class Runtime:
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
             ffn_impl=ffn_impl if ffn_impl is not None else self.ffn_impl,
             kv_layout=kv_layout if kv_layout is not None else self.kv_layout,
+            partition=partition if partition is not None else self.partition,
             param_dtype=self.param_dtype, seed=self.seed,
             params=self._params, plan_kw={**self.plan_kw, **(plan_kw or {})})
 
@@ -200,26 +213,29 @@ class Runtime:
         return train_steps.make_train_step(
             self.cfg, self.plan, self.specs, self.mesh, schedule=schedule,
             opt_cfg=opt_cfg, microbatches=microbatches,
-            attn_impl=self.attn_impl, ffn_impl=self.ffn_impl)
+            attn_impl=self.attn_impl, ffn_impl=self.ffn_impl,
+            partition=self.partition)
 
     def make_prefill_step(self, *, capacity: Optional[int] = None) -> Callable:
         return serve_steps.make_prefill_step(
             self.cfg, self.plan, self.mesh,
             capacity=capacity if capacity is not None else self.capacity,
-            attn_impl=self.attn_impl, ffn_impl=self.ffn_impl)
+            attn_impl=self.attn_impl, ffn_impl=self.ffn_impl,
+            partition=self.partition)
 
     def make_decode_step(self, *, attn_impl: Optional[str] = None,
                          advance_pos: bool = False) -> Callable:
         return serve_steps.make_decode_step(
             self.cfg, self.plan, self.mesh,
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
-            advance_pos=advance_pos)
+            advance_pos=advance_pos, partition=self.partition)
 
     def make_paged_decode_step(self, *,
                                attn_impl: Optional[str] = None) -> Callable:
         return serve_steps.make_paged_decode_step(
             self.cfg, self.plan, self.mesh,
-            attn_impl=attn_impl if attn_impl is not None else self.attn_impl)
+            attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
+            partition=self.partition)
 
     # -- compiled executables ----------------------------------------------
 
@@ -233,8 +249,8 @@ class Runtime:
         if self.mesh is None:
             return jax.jit(step, **donate_kw)
         sh = self.state_shardings
-        return jax.jit(step, in_shardings=(sh, None),
-                       out_shardings=(sh, None), **donate_kw)
+        return self._bind_mesh(jax.jit(step, in_shardings=(sh, None),
+                                       out_shardings=(sh, None), **donate_kw))
 
     @property
     def train_step(self):
@@ -244,13 +260,32 @@ class Runtime:
             self._exec["train_step"] = self.compile_train_step()
         return self._exec["train_step"]
 
+    def mesh_context(self):
+        """Context manager binding this Runtime's mesh (nullcontext when
+        single-device).  Tracing sharding-annotated model code requires an
+        ambient mesh for the bare-PartitionSpec constraints; every cached
+        executable and the serve engine bind it through here."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _bind_mesh(self, fn):
+        """Wrap a jitted executable so each call runs under mesh_context()."""
+        if self.mesh is None:
+            return fn
+
+        def bound(*args, **kwargs):
+            with self.mesh_context():
+                return fn(*args, **kwargs)
+
+        return bound
+
     def _with_rules(self, fn):
         """Run ``fn`` under the plan's activation rules when a mesh exists;
         without one the model-level path is left bare so it is bit-for-bit
-        the legacy ``models/api`` path (the registry parity contract) —
-        unless a non-default kernel impl was requested, in which case only
-        the impl-selection rules are installed (models resolve "auto" to
-        the same backend either way, so parity is preserved)."""
+        the raw registry family surface (the parity contract
+        tests/test_registry.py pins) — unless a non-default kernel impl was
+        requested, in which case only the impl-selection rules are
+        installed (models resolve "auto" to the same backend either way,
+        so parity is preserved)."""
         impls = {"train_attn_impl": self.attn_impl, "ffn_impl": self.ffn_impl}
         if self.mesh is None:
             if self.attn_impl == "auto" and self.ffn_impl == "auto":
@@ -259,6 +294,7 @@ class Runtime:
                 return fn()
         rules = dict(self.plan.act_rules)
         rules["mesh"] = self.mesh
+        rules["kernel_partition"] = self.partition
         rules.update(impls)
         with activation_sharding(rules):
             return fn()
@@ -274,6 +310,7 @@ class Runtime:
             def _loss(params, batch):
                 return self._with_rules(lambda: fam.loss(params, batch, cfg))
 
+            _loss = self._bind_mesh(_loss)
             self._exec["loss"] = \
                 lambda batch, *, params=None: _loss(self._p(params), batch)
         return self._exec["loss"]
@@ -290,7 +327,7 @@ class Runtime:
                     params, batch, cfg, cap,
                     last_only=last_only, last_index=last_index))
 
-            jfn = jax.jit(_raw, static_argnames=("last_only",))
+            jfn = self._bind_mesh(jax.jit(_raw, static_argnames=("last_only",)))
             self._exec["prefill"] = (
                 lambda batch, *, last_only=False, last_index=None, params=None:
                 jfn(self._p(params), batch, last_index, last_only=last_only))
@@ -308,6 +345,7 @@ class Runtime:
                     lambda: fam.decode_step(params, token, caches, cfg,
                                             pos=pos))
 
+            _raw = self._bind_mesh(_raw)
             self._exec["decode"] = (
                 lambda token, caches, pos, *, params=None:
                 _raw(self._p(params), token, caches, pos))
@@ -392,6 +430,11 @@ class Runtime:
             f"kv_layout={self.kv_layout} "
             f"swa_bucketing={'exact' if self.caps.swa else 'pow2'}",
         ]
+        from repro.kernels import partition as kernel_partition
+        pspecs = kernel_partition.partition_report(self.cfg, plan, self.caps,
+                                                   self.partition)
+        lines.append("  partition : " + "; ".join(
+            f"{k}[{v}]" for k, v in pspecs.items()))
         return "\n".join(lines)
 
     def __repr__(self) -> str:

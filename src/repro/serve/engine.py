@@ -208,7 +208,11 @@ class ServeEngine:
         # reads block columns out of the same program's caches, so dense
         # and paged engines see bitwise-identical prefill K/V (the
         # token-parity contract tests/test_paged.py pins down).
-        self._prefill = jax.jit(rt.make_prefill_step(capacity=capacity))
+        # ``rt._bind_mesh`` wraps each executable so tracing happens under
+        # the Runtime's mesh context (sharding-annotated model code needs
+        # an ambient mesh for its bare-PartitionSpec constraints).
+        self._prefill = rt._bind_mesh(
+            jax.jit(rt.make_prefill_step(capacity=capacity)))
         if self.paged:
             # block pool sized for the worst case (every slot at capacity)
             # unless told tighter; +reserved null/trash blocks.
@@ -223,7 +227,7 @@ class ServeEngine:
                                             max_entries=capacity)
             self.caches = blockpool.init_paged_cache(self.cfg, nblocks, bs)
             decode = rt.make_paged_decode_step(attn_impl=attn_impl)
-            self._decode = jax.jit(decode, **donate_kw)
+            self._decode = rt._bind_mesh(jax.jit(decode, **donate_kw))
             self._splice = jax.jit(_install_admitted_paged, **splice_kw)
             self._copy = jax.jit(blockpool.copy_blocks, **splice_kw)
         else:
@@ -231,7 +235,7 @@ class ServeEngine:
             self.caches = kvcache.init_cache(self.cfg, num_slots, capacity)
             decode = rt.make_decode_step(attn_impl=attn_impl,
                                          advance_pos=True)
-            self._decode = jax.jit(decode, **donate_kw)
+            self._decode = rt._bind_mesh(jax.jit(decode, **donate_kw))
             self._splice = jax.jit(_install_admitted, **splice_kw)
         # slot state: host-side bookkeeping + device-resident hot-loop state
         self.slot_req: list[Optional[Request]] = [None] * num_slots

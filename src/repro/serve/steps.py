@@ -93,7 +93,8 @@ def resolve_decode_attn_impl(impl: str, cfg: ModelConfig,
 
 def make_prefill_step(cfg: ModelConfig, plan: Plan, mesh, *,
                       capacity: int, attn_impl: str = "auto",
-                      ffn_impl: str = "auto") -> Callable:
+                      ffn_impl: str = "auto",
+                      partition: str = "auto") -> Callable:
     """(params, batch) -> (next_token [B], caches).
 
     ``capacity`` is the decode-cache length the caches are padded to
@@ -108,6 +109,7 @@ def make_prefill_step(cfg: ModelConfig, plan: Plan, mesh, *,
     rules["mesh"] = mesh
     rules["train_attn_impl"] = attn_impl
     rules["ffn_impl"] = ffn_impl
+    rules["kernel_partition"] = partition
     caps = capabilities(cfg)
 
     def prefill(params, batch):
@@ -133,7 +135,8 @@ def make_prefill_step(cfg: ModelConfig, plan: Plan, mesh, *,
 
 def make_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
                      attn_impl: str = "auto",
-                     advance_pos: bool = False) -> Callable:
+                     advance_pos: bool = False,
+                     partition: str = "auto") -> Callable:
     """(params, token [B,1], caches, pos [B]) -> (next [B], caches).
 
     ``pos`` is the absolute position of the *incoming* token; ring-buffer
@@ -146,6 +149,7 @@ def make_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
     rules = dict(plan.act_rules)
     rules["mesh"] = mesh
     rules["decode_attn_impl"] = resolve_decode_attn_impl(attn_impl, cfg)
+    rules["kernel_partition"] = partition
 
     def decode(params, token, caches, pos):
         with activation_sharding(rules):
@@ -160,7 +164,8 @@ def make_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
 
 
 def make_paged_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
-                           attn_impl: str = "auto") -> Callable:
+                           attn_impl: str = "auto",
+                           partition: str = "auto") -> Callable:
     """(params, token [B,1], caches, pos [B], block_table [B,M],
     write_bids [B]) -> (next [B,1], caches, pos+1).
 
@@ -175,6 +180,7 @@ def make_paged_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
     rules["mesh"] = mesh
     rules["decode_attn_impl"] = resolve_decode_attn_impl(attn_impl, cfg,
                                                          kv_layout="paged")
+    rules["kernel_partition"] = partition
 
     def decode(params, token, caches, pos, block_table, write_bids):
         with activation_sharding(rules):

@@ -107,13 +107,17 @@ def _constrain_zero1(grads, specs, plan: Plan):
 
 def _make_auto_step(cfg: ModelConfig, plan: Plan, specs, mesh, *,
                     schedule, opt_cfg: AdamWConfig, microbatches: int,
-                    attn_impl: str = "auto", ffn_impl: str = "auto"):
+                    attn_impl: str = "auto", ffn_impl: str = "auto",
+                    partition: str = "auto"):
     """flat / hierarchical: fully-automatic pjit; hierarchy is expressed
-    with sharding constraints only."""
+    with sharding constraints only — except the Pallas kernels, whose
+    operands the partitioner would replicate over 'model': those dispatch
+    through kernels.partition's shard_map layer (``kernel_partition``)."""
     rules = dict(plan.act_rules)
     rules["mesh"] = mesh
     rules["train_attn_impl"] = attn_impl
     rules["ffn_impl"] = ffn_impl
+    rules["kernel_partition"] = partition
     hierarchical = plan.grad_sync == "hierarchical"
     acc_pspecs = partition_specs(specs, zero1_rules(plan)) \
         if hierarchical else None
@@ -136,7 +140,8 @@ def _make_auto_step(cfg: ModelConfig, plan: Plan, specs, mesh, *,
 
 def _make_compressed_step(cfg: ModelConfig, plan: Plan, specs, mesh, *,
                           schedule, opt_cfg: AdamWConfig, microbatches: int,
-                          attn_impl: str = "auto", ffn_impl: str = "auto"):
+                          attn_impl: str = "auto", ffn_impl: str = "auto",
+                          partition: str = "auto"):
     """hierarchical_int8: per-pod grads via vmap(spmd_axis_name='pod'),
     EF-int8 quantization applied *before* the pod-dim mean, so the only
     collective crossing the slow tier carries int8-valued payloads.
@@ -152,6 +157,10 @@ def _make_compressed_step(cfg: ModelConfig, plan: Plan, specs, mesh, *,
     inner_rules.pop("moe_regime", None)   # shard_map does not vmap here
     inner_rules["train_attn_impl"] = attn_impl
     inner_rules["ffn_impl"] = ffn_impl
+    # no "mesh" rule on purpose: shard_map regions (MoE dispatch, the
+    # kernels.partition layer) cannot ride inside the per-pod vmap, so the
+    # kernels keep their replicated dispatch under this sync mode
+    del partition
 
     def pod_grads(params, mb):
         return _grads_and_loss(params, mb, cfg, microbatches)
@@ -188,20 +197,24 @@ def _make_compressed_step(cfg: ModelConfig, plan: Plan, specs, mesh, *,
 def make_train_step(cfg: ModelConfig, plan: Plan, specs, mesh, *,
                     schedule=None, opt_cfg: Optional[AdamWConfig] = None,
                     microbatches: int = 1, attn_impl: str = "auto",
-                    ffn_impl: str = "auto") -> Callable:
+                    ffn_impl: str = "auto",
+                    partition: str = "auto") -> Callable:
     """Returns step(state, batch) -> (state, metrics); jit it with the
     shardings from ``train_state_shardings`` / ``batch_pspec``.
 
     ``attn_impl`` / ``ffn_impl`` select the train-forward kernels
     ("auto" | "pallas" | "ref"; resolution and the REPRO_ATTN_IMPL /
-    REPRO_FFN_IMPL env overrides live in kernels.ops)."""
+    REPRO_FFN_IMPL env overrides live in kernels.ops).  ``partition``
+    ("auto" | "off") controls the shard_map kernel dispatch
+    (kernels.partition; ``REPRO_KERNEL_PARTITION`` overrides)."""
     schedule = schedule or (lambda s: jnp.asarray(3e-4, jnp.float32))
     opt_cfg = opt_cfg or AdamWConfig()
     if plan.grad_sync == "hierarchical_int8":
         return _make_compressed_step(
             cfg, plan, specs, mesh, schedule=schedule, opt_cfg=opt_cfg,
             microbatches=microbatches, attn_impl=attn_impl,
-            ffn_impl=ffn_impl)
+            ffn_impl=ffn_impl, partition=partition)
     return _make_auto_step(
         cfg, plan, specs, mesh, schedule=schedule, opt_cfg=opt_cfg,
-        microbatches=microbatches, attn_impl=attn_impl, ffn_impl=ffn_impl)
+        microbatches=microbatches, attn_impl=attn_impl, ffn_impl=ffn_impl,
+        partition=partition)

@@ -12,7 +12,7 @@ from repro.models.common import (LayerGroup, ModelConfig, MoEConfig,
                                  SSMConfig, XLSTMConfig, init_params)
 from repro.models.layers import (apply_rope, chunked_softmax_xent,
                                  cross_entropy, lm_head, rmsnorm)
-from repro.models.sharding import activation_sharding
+from repro.models.sharding import activation_sharding, resolve_mesh_axes
 
 KEY = jax.random.PRNGKey(3)
 
@@ -23,6 +23,34 @@ def _cfg(**kw):
                 head_dim=16, groups=(LayerGroup(("attn",), 1),))
     base.update(kw)
     return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding rule resolution
+# ---------------------------------------------------------------------------
+
+
+def test_shard_duplicate_mesh_axis_prefers_earlier_logical_axis():
+    """A mesh axis claimed by an earlier logical axis is dropped from every
+    later one — deterministically, in argument order."""
+    rules = {"a": "model", "b": "model", "c": "data"}
+    assert resolve_mesh_axes(rules, ("a", "b", "c")) == ["model", None, "data"]
+    # order decides the winner, not the rule-dict layout
+    assert resolve_mesh_axes(rules, ("b", "a", "c")) == ["model", None, "data"]
+    # None / unmapped dims neither claim nor block a mesh axis
+    assert resolve_mesh_axes(rules, (None, "a", "x")) == [None, "model", None]
+
+
+def test_shard_tuple_collision_keeps_noncolliding_components():
+    """A tuple mapping drops only the colliding components: the remainder
+    still shards instead of silently replicating the whole dim."""
+    rules = {"batch": ("pod", "data"), "seq": "data", "two": ("data", "model")}
+    # earlier 'seq' claims data; batch keeps pod
+    assert resolve_mesh_axes(rules, ("seq", "batch")) == ["data", "pod"]
+    # full tuple survives when nothing collides
+    assert resolve_mesh_axes(rules, ("batch", "seq")) == [("pod", "data"), None]
+    # partial tuple collision degrades to the single surviving axis
+    assert resolve_mesh_axes(rules, ("seq", "two")) == ["data", "model"]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,494 @@
+"""Sharded kernel-dispatch (kernels/partition.py) parity suite.
+
+The contract: on a multi-device mesh, routing every Pallas kernel through
+the shard_map partition layer must change *where* the flops run, not what
+they compute — loss/grads within 1e-4, logits within 1e-3, decode token
+streams identical, and the mesh-None path bitwise-untouched.
+
+Most tests here need the forced 8-device CPU topology
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``; scripts/ci.sh
+runs this file as its own gate with that env).  Under the plain tier-1 run
+(1 device) those skip; the knob/fallback/capability tests run everywhere.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.kernels import ops
+from repro.kernels import partition
+from repro.models import registry
+from repro.models.common import init_params
+from repro.models.sharding import activation_sharding
+from repro.runtime import Runtime
+from repro.serve import steps as serve_steps
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(scripts/ci.sh runs this gate)")
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _mesh(spec):
+    from repro.launch.mesh import mesh_from_spec
+    return mesh_from_spec(spec)
+
+
+def _f32_cfg(arch):
+    return get_smoke_config(arch).scaled(dtype=jnp.float32)
+
+
+def _batch(cfg, B=4, S=16, labels=True):
+    k = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if labels:
+        batch["labels"] = jax.random.randint(jax.random.fold_in(k, 1),
+                                             (B, S), 0, cfg.vocab_size)
+    if registry.capabilities(cfg).has_encoder:
+        batch["audio_embeds"] = jax.random.normal(
+            jax.random.fold_in(k, 2), (B, 16, cfg.d_model), jnp.float32)
+    elif cfg.frontend:
+        batch["extra_embeds"] = jax.random.normal(
+            jax.random.fold_in(k, 3), (B, 4, cfg.d_model), jnp.float32)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level parity (partition.* vs the replicated ops.* dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _kernel_rules(mesh, partition_mode="auto"):
+    return {"mesh": mesh, "heads_act": "model", "mlp_act": "model",
+            "batch": ("data",), "kernel_partition": partition_mode}
+
+
+@needs8
+def test_flash_attention_sharded_matches_replicated():
+    """Head-sharded flash fwd+bwd == replicated, and the sharded jaxpr
+    really contains a shard_map region (no silent fallback)."""
+    mesh = _mesh("2x4")
+    B, H, S, D = 4, 4, 32, 16
+    k = jax.random.PRNGKey(0)
+    q, kk, v = (jax.random.normal(jax.random.fold_in(k, i), (B, H, S, D),
+                                  jnp.float32) for i in range(3))
+    g = jax.random.normal(jax.random.fold_in(k, 9), (B, H, S, D), jnp.float32)
+
+    def run(mode):
+        with mesh, activation_sharding(_kernel_rules(mesh, mode)):
+            f = lambda q, kk, v: jnp.sum(
+                partition.flash_attention(q, kk, v, causal=True, window=0) * g)
+            out = jax.jit(lambda q, kk, v: partition.flash_attention(
+                q, kk, v, causal=True, window=0))(q, kk, v)
+            grads = jax.jit(jax.grad(f, argnums=(0, 1, 2)))(q, kk, v)
+            jaxpr = str(jax.make_jaxpr(f)(q, kk, v))
+        return out, grads, jaxpr
+
+    out_s, grads_s, jaxpr_s = run("auto")
+    out_r, grads_r, jaxpr_r = run("off")
+    assert "shard_map" in jaxpr_s
+    assert "shard_map" not in jaxpr_r
+    # head slicing does not touch per-head arithmetic: bitwise
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_r))
+    for a, b in zip(grads_s, grads_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@needs8
+def test_swiglu_sharded_matches_replicated():
+    """Column-sharded fused FFN: forward + all four grads within f32
+    reassociation noise of the replicated kernel; the explicit psums are
+    in the jaxpr."""
+    mesh = _mesh("2x4")
+    k = jax.random.PRNGKey(1)
+    N, D, F = 64, 32, 128
+    x = jax.random.normal(jax.random.fold_in(k, 0), (N, D), jnp.float32)
+    wg, wu = (jax.random.normal(jax.random.fold_in(k, 1 + i), (D, F),
+                                jnp.float32) * 0.1 for i in range(2))
+    wd = jax.random.normal(jax.random.fold_in(k, 3), (F, D), jnp.float32) * 0.1
+    dy = jax.random.normal(jax.random.fold_in(k, 4), (N, D), jnp.float32)
+
+    def run(mode):
+        with mesh, activation_sharding(_kernel_rules(mesh, mode)):
+            f = lambda *a: jnp.sum(partition.swiglu_ffn(*a) * dy)
+            y = jax.jit(partition.swiglu_ffn)(x, wg, wu, wd)
+            grads = jax.jit(jax.grad(f, argnums=(0, 1, 2, 3)))(x, wg, wu, wd)
+            jaxpr = str(jax.make_jaxpr(f)(x, wg, wu, wd))
+        return y, grads, jaxpr
+
+    y_s, grads_s, jaxpr_s = run("auto")
+    y_r, grads_r, jaxpr_r = run("off")
+    assert "shard_map" in jaxpr_s and "psum" in jaxpr_s
+    assert "shard_map" not in jaxpr_r
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_r),
+                               atol=1e-5, rtol=1e-5)
+    for a, b in zip(grads_s, grads_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@needs8
+@pytest.mark.parametrize("spec,kv_sharded", [("2x2", True), ("2x4", False)])
+def test_decode_attention_sharded_bitwise(spec, kv_sharded):
+    """Row(+KV-head)-sharded flash-decode == replicated *bitwise*: the
+    per-(row, kv-head) online softmax is untouched and the head gather
+    restores the replicated layout.  On the 2x4 mesh KV=2 does not divide
+    the model axis, so only the rows shard — still exact."""
+    mesh = _mesh(spec)
+    B, H, KV, D, T = 4, 4, 2, 16, 32
+    k = jax.random.PRNGKey(2)
+    q = jax.random.normal(jax.random.fold_in(k, 0), (B, H, D), jnp.float32)
+    kc, vc = (jax.random.normal(jax.random.fold_in(k, 1 + i), (B, T, KV, D),
+                                jnp.float32) for i in range(2))
+    kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    pos = jnp.full((B,), T - 1, jnp.int32)
+
+    with mesh, activation_sharding(_kernel_rules(mesh)):
+        out = jax.jit(lambda *a: partition.decode_attention(*a, window=0))(
+            q, kc, vc, kv_pos, pos)
+        jaxpr = str(jax.make_jaxpr(
+            lambda *a: partition.decode_attention(*a, window=0))(
+            q, kc, vc, kv_pos, pos))
+    ref = ops.decode_attention(q, kc, vc, kv_pos, pos, window=0)
+    assert "shard_map" in jaxpr
+    assert ("all_gather" in jaxpr) == kv_sharded
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@needs8
+def test_paged_decode_attention_sharded_bitwise():
+    mesh = _mesh("2x2")
+    B, H, KV, D = 4, 4, 2, 16
+    Nb, bs, M = 6, 8, 2
+    k = jax.random.PRNGKey(3)
+    q = jax.random.normal(jax.random.fold_in(k, 0), (B, H, D), jnp.float32)
+    kp, vp = (jax.random.normal(jax.random.fold_in(k, 1 + i), (Nb, bs, KV, D),
+                                jnp.float32) for i in range(2))
+    pp = jnp.tile(jnp.arange(bs, dtype=jnp.int32)[None], (Nb, 1))
+    tbl = jnp.asarray([[2, 3], [4, 5], [2, 3], [4, 5]], jnp.int32)
+    pos = jnp.full((B,), bs - 1, jnp.int32)
+
+    with mesh, activation_sharding(_kernel_rules(mesh)):
+        out = jax.jit(partition.paged_decode_attention)(q, kp, vp, pp, tbl,
+                                                        pos)
+    ref = ops.paged_decode_attention(q, kp, vp, pp, tbl, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Model-level parity: every arch, 2x4 (data, model) mesh
+# ---------------------------------------------------------------------------
+
+
+def _loss_and_grads(cfg, mesh, mode, params, batch):
+    fam = registry.resolve(cfg)
+    from repro.core.topology import make_plan, mesh_axes_of
+    plan = make_plan(cfg, mesh_axes_of(mesh), shape_kind="train", seq_len=16)
+    rules = dict(plan.act_rules, mesh=mesh, train_attn_impl="pallas",
+                 ffn_impl="pallas", kernel_partition=mode)
+    with mesh, activation_sharding(rules):
+        (loss, _), grads = jax.jit(jax.value_and_grad(
+            lambda p: fam.loss(p, batch, cfg), has_aux=True))(params)
+    return loss, grads
+
+
+@needs8
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_loss_and_grads_sharded_match_replicated(arch):
+    """Full family loss (scan + remat + CE) with the kernels partitioned
+    over the 2x4 mesh: loss AND every grad leaf within 1e-4 of the
+    replicated-kernel path."""
+    cfg = _f32_cfg(arch)
+    fam = registry.resolve(cfg)
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    batch = _batch(cfg)
+    mesh = _mesh("2x4")
+
+    loss_r, grads_r = _loss_and_grads(cfg, mesh, "off", params, batch)
+    loss_s, grads_s = _loss_and_grads(cfg, mesh, "auto", params, batch)
+
+    np.testing.assert_allclose(np.asarray(loss_s), np.asarray(loss_r),
+                               atol=1e-4, rtol=1e-4)
+    flat_s = jax.tree_util.tree_flatten_with_path(grads_s)[0]
+    flat_r = jax.tree_util.tree_flatten_with_path(grads_r)[0]
+    for (path, a), (_, b) in zip(flat_s, flat_r):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4,
+            err_msg=jax.tree_util.keystr(path))
+
+
+@needs8
+def test_sharded_dispatch_reaches_the_model_jaxpr():
+    """With partition=auto the (dense, heads-mode) model loss lowers
+    through shard_map; with partition=off it must not — the knob is real,
+    not cosmetic.  qwen3-4b: no MoE, so any shard_map comes from the
+    kernel dispatch alone."""
+    cfg = _f32_cfg("qwen3-4b")
+    fam = registry.resolve(cfg)
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    batch = _batch(cfg)
+    mesh = _mesh("2x4")
+    from repro.core.topology import make_plan, mesh_axes_of
+    plan = make_plan(cfg, mesh_axes_of(mesh), shape_kind="train", seq_len=16)
+
+    def trace(mode):
+        rules = dict(plan.act_rules, mesh=mesh, train_attn_impl="pallas",
+                     ffn_impl="pallas", kernel_partition=mode)
+        with mesh, activation_sharding(rules):
+            return str(jax.make_jaxpr(
+                lambda p: fam.loss(p, batch, cfg)[0])(params))
+
+    assert "shard_map" in trace("auto")
+    assert "shard_map" not in trace("off")
+
+
+def _decode_runtimes(arch, mesh, capacity=24):
+    """(rt_auto, rt_off) sharing params, f32, forced-pallas impls."""
+    cfg = _f32_cfg(arch)
+    rt_a = Runtime.create(cfg, mesh, shape_kind="decode", capacity=capacity,
+                          attn_impl="pallas", ffn_impl="pallas",
+                          partition="auto")
+    rt_o = Runtime.create(cfg, mesh, shape_kind="decode", capacity=capacity,
+                          attn_impl="pallas", ffn_impl="pallas",
+                          partition="off")
+    rt_o.params = rt_a.params
+    return rt_a, rt_o
+
+
+@needs8
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_logits_and_decode_stream_parity(arch):
+    """Serve prefill logits within 1e-3 and an 8-step greedy decode stream
+    *identical* between sharded and replicated dispatch on the 2x4 mesh."""
+    mesh = _mesh("2x4")
+    rt_a, rt_o = _decode_runtimes(arch, mesh)
+    cfg = rt_a.cfg
+    B, S = 4, 8
+    batch = _batch(cfg, B=B, S=S, labels=False)
+    off = 4 if (cfg.frontend and not rt_a.caps.has_encoder) else 0
+
+    logits_a, caches_a = rt_a.prefill(batch, last_only=True)
+    logits_o, caches_o = rt_o.prefill(batch, last_only=True)
+    np.testing.assert_allclose(np.asarray(logits_a), np.asarray(logits_o),
+                               atol=1e-3, rtol=1e-3)
+
+    streams = {}
+    for rt, caches in ((rt_a, caches_a), (rt_o, caches_o)):
+        dec = rt._bind_mesh(jax.jit(serve_steps.make_decode_step(
+            cfg, rt.plan, mesh, attn_impl="pallas",
+            partition=rt.partition)))
+        tok = jnp.argmax(jnp.asarray(logits_a)[:, -1], axis=-1) \
+            .astype(jnp.int32)[:, None]
+        toks = []
+        pos = jnp.full((B,), S + off, jnp.int32)
+        for _ in range(8):
+            nxt, caches = dec(rt.params, tok, caches, pos)
+            toks.append(np.asarray(nxt).copy())
+            tok = nxt[:, None]
+            pos = pos + 1
+        streams[rt.partition] = np.stack(toks)
+    np.testing.assert_array_equal(streams["auto"], streams["off"])
+
+
+PAGED_ARCHS = sorted(
+    a for a in ALL_ARCHS
+    if registry.capabilities(get_smoke_config(a)).supports_paged_decode)
+
+
+@needs8
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_decode_stream_parity(arch):
+    """12-tick greedy paged decode (static block chains, from-scratch
+    pools) token-identical between sharded and replicated dispatch on the
+    2x2 mesh, where KV heads divide the model axis."""
+    from repro.serve import blockpool
+    mesh = _mesh("2x2")
+    cfg = _f32_cfg(arch)
+    fam = registry.resolve(cfg)
+    params = init_params(fam.specs(cfg), jax.random.PRNGKey(7))
+    from repro.core.topology import make_plan, mesh_axes_of
+    plan = make_plan(cfg, mesh_axes_of(mesh), shape_kind="decode")
+
+    B, bs, M = 4, 8, 2
+    nblocks = blockpool.NUM_RESERVED + B * M
+    tbl_host = np.arange(blockpool.NUM_RESERVED, nblocks,
+                         dtype=np.int32).reshape(B, M)
+    tbl = jnp.asarray(tbl_host)
+
+    streams = {}
+    for mode in ("auto", "off"):
+        caches = blockpool.init_paged_cache(cfg, nblocks, bs)
+        step = serve_steps.make_paged_decode_step(cfg, plan, mesh,
+                                                  attn_impl="pallas",
+                                                  partition=mode)
+        jstep = jax.jit(step)
+        tok = jnp.full((B, 1), 7, jnp.int32)
+        pos = jnp.zeros((B,), jnp.int32)
+        toks = []
+        with mesh:
+            for t in range(12):
+                bids = jnp.asarray(tbl_host[np.arange(B), t // bs])
+                tok, caches, pos = jstep(params, tok, caches, pos, tbl, bids)
+                toks.append(np.asarray(tok[:, 0]).copy())
+        streams[mode] = np.stack(toks)
+    np.testing.assert_array_equal(streams["auto"], streams["off"])
+
+
+@needs8
+def test_engine_streams_identical_dense_and_paged():
+    """Full ServeEngine runs (batched admission, donation, hot loop) on the
+    2x2 mesh: finished token streams identical sharded vs replicated, for
+    both KV layouts."""
+    from repro.serve.engine import Request
+    mesh = _mesh("2x2")
+
+    def run(mode, kv_layout="dense", **kw):
+        rt = Runtime.create("llama3.2-3b", mesh, shape_kind="decode",
+                            smoke=True, capacity=32, kv_layout=kv_layout,
+                            partition=mode)
+        eng = rt.engine(num_slots=4, attn_impl="pallas", **kw)
+        rng = np.random.default_rng(0)
+        for i in range(6):
+            eng.submit(Request(
+                rid=i,
+                prompt=rng.integers(0, rt.cfg.vocab_size,
+                                    rng.integers(4, 12)).astype(np.int32),
+                max_new_tokens=int(rng.integers(4, 9))))
+        eng.run_to_completion()
+        return {r.rid: list(r.generated) for r in eng.finished}
+
+    assert run("auto") == run("off")
+    paged_kw = dict(kv_layout="paged", block_size=8, num_blocks=26)
+    assert run("auto", **paged_kw) == run("off", **paged_kw)
+
+
+@needs8
+def test_compiled_train_step_runs_sharded():
+    """Runtime.compile_train_step (ZeRO-1 shardings + donation) with the
+    partitioned kernels: two steps, finite decreasing-ish loss."""
+    rt = Runtime.create(_f32_cfg("qwen3-4b"), _mesh("2x4"),
+                        shape_kind="train", seq_len=16,
+                        attn_impl="pallas", ffn_impl="pallas")
+    step = rt.train_step
+    state = rt.init_train_state()
+    batch = _batch(rt.cfg)
+    state, m1 = step(state, batch)
+    state, m2 = step(state, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# describe() partition report
+# ---------------------------------------------------------------------------
+
+
+@needs8
+def test_describe_reports_partitioned_specs():
+    rt = Runtime.create("qwen3-4b", _mesh("2x4"), shape_kind="train",
+                        seq_len=32, smoke=True)
+    rep = rt.describe()
+    assert "partition :" in rep
+    assert "heads/4@model" in rep          # flash train attention
+    assert "columns/4@model" in rep        # fused FFN
+    assert "rows@data" in rep              # decode kernels
+    off = rt.reshape(shape_kind="train", partition="off")
+    assert "replicated (off)" in off.describe()
+
+
+@needs8
+def test_describe_reports_divisibility_fallback():
+    """KV=2 on a 4-way model axis (heads-mode arch): the decode kernels
+    report the replicated-head fallback with the failing divisibility
+    spelled out."""
+    rt = Runtime.create("qwen3-4b", _mesh("2x4"), shape_kind="decode",
+                        capacity=32, smoke=True)
+    rep = rt.describe()
+    assert "kv_heads=replicated(2%4!=0)" in rep
+
+
+@needs8
+def test_sharded_path_keeps_the_block_divisibility_failure_loud():
+    """S=384 splits into neither one 256-block nor whole blocks: the
+    replicated kernel asserts on it, and the sharded dispatch must fall
+    back to that same loud failure instead of silently truncating its
+    grid."""
+    mesh = _mesh("2x4")
+    k = jax.random.PRNGKey(8)
+    q, kk, v = (jax.random.normal(jax.random.fold_in(k, i), (2, 4, 384, 16),
+                                  jnp.float32) for i in range(3))
+    with mesh, activation_sharding(_kernel_rules(mesh)):
+        with pytest.raises(AssertionError):
+            partition.flash_attention(q, kk, v, causal=True, window=0)
+
+
+@needs8
+def test_describe_reports_int8_vmap_replication():
+    """hierarchical_int8 training drops the mesh rule (shard_map cannot
+    ride the per-pod vmap), so describe() must not claim partitioned
+    kernels for that cell."""
+    rt = Runtime.create("qwen3-4b", _mesh("2x2x2"), shape_kind="train",
+                        seq_len=32, smoke=True,
+                        grad_sync="hierarchical_int8")
+    assert "replicated (hierarchical_int8" in rt.describe()
+
+
+def test_describe_single_device_reports_replicated():
+    rt = Runtime.create("exanode-100m", smoke=True, shape_kind="decode",
+                        capacity=16)
+    assert "replicated (single-device)" in rt.describe()
+
+
+# ---------------------------------------------------------------------------
+# Knob / fallback / capability laws (run everywhere, incl. tier-1)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_none_dispatch_is_the_plain_ops_path():
+    """No rules installed: every partition entry point must produce output
+    bitwise identical to its ops.* twin (the mesh-None parity contract)."""
+    k = jax.random.PRNGKey(5)
+    q, kk, v = (jax.random.normal(jax.random.fold_in(k, i), (2, 4, 16, 8),
+                                  jnp.float32) for i in range(3))
+    np.testing.assert_array_equal(
+        np.asarray(partition.flash_attention(q, kk, v, causal=True, window=0)),
+        np.asarray(ops.flash_attention(q, kk, v, causal=True, window=0)))
+
+    x = jax.random.normal(jax.random.fold_in(k, 3), (16, 8), jnp.float32)
+    w1, w2 = (jax.random.normal(jax.random.fold_in(k, 4 + i), (8, 32),
+                                jnp.float32) for i in range(2))
+    w3 = jax.random.normal(jax.random.fold_in(k, 6), (32, 8), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(partition.swiglu_ffn(x, w1, w2, w3)),
+        np.asarray(ops.swiglu_ffn(x, w1, w2, w3)))
+
+
+def test_bad_partition_env_fails_fast(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_PARTITION", "bogus")
+    with pytest.raises(ValueError, match="valid choices.*auto"):
+        partition.resolve_kernel_partition("auto")
+    monkeypatch.setenv("REPRO_KERNEL_PARTITION", "off")
+    assert partition.resolve_kernel_partition("auto") == "off"  # env wins
+    monkeypatch.delenv("REPRO_KERNEL_PARTITION")
+    with pytest.raises(ValueError, match="valid choices"):
+        partition.resolve_kernel_partition("bogus")
+
+
+def test_runtime_rejects_bad_partition_knob():
+    with pytest.raises(ValueError, match="valid choices"):
+        Runtime.create("exanode-100m", smoke=True, shape_kind="decode",
+                       capacity=16, partition="bogus")
+
+
+def test_capabilities_shardable_predicates():
+    caps = registry.capabilities(get_smoke_config("qwen3-4b"))
+    assert caps.num_heads == 4 and caps.num_kv_heads == 2
+    assert caps.heads_shardable(4) and caps.heads_shardable(2)
+    assert not caps.heads_shardable(3)
+    assert not caps.heads_shardable(1)       # tp=1: nothing to shard
+    assert caps.kv_heads_shardable(2) and not caps.kv_heads_shardable(4)
+    assert caps.ffn_shardable(4)             # d_ff=128
+    assert not caps.ffn_shardable(3)

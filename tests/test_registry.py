@@ -2,9 +2,10 @@
 
 The all-arch smoke test is the registry's parity contract: for every entry
 in ``configs.ARCHS`` a ``Runtime`` (smoke config, CPU mesh) must produce
-prefill + decode logits bit-for-bit identical to the legacy
-``models/api.py`` path.  Satellite coverage: ``mesh_from_spec``'s one
-axis-naming table and the fail-fast ``REPRO_DECODE_ATTN`` validation.
+prefill + decode logits bit-for-bit identical to the raw model-family
+surface (``registry.resolve(cfg)``'s prefill/decode_step, jitted bare).
+Satellite coverage: ``mesh_from_spec``'s one axis-naming table + error
+paths and the fail-fast ``REPRO_DECODE_ATTN`` validation.
 """
 import jax
 import jax.numpy as jnp
@@ -12,7 +13,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_smoke_config
-from repro.models import api as legacy_api
 from repro.models import registry
 from repro.runtime import Runtime
 from repro.serve.steps import resolve_decode_attn_impl
@@ -72,24 +72,23 @@ def test_register_family_rejects_duplicates():
 
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)
-def test_runtime_matches_legacy_api(arch):
-    """Runtime prefill + one decode step == the legacy models/api path,
+def test_runtime_matches_raw_family(arch):
+    """Runtime prefill + one decode step == the raw model-family surface,
     bit for bit, for every registered arch (smoke config, CPU mesh).
 
-    models/api is now a shim over the registry, so what this actually pins
-    is the Runtime executable wrapping (jit, act-rules context, capacity
-    padding, params plumbing) against the raw family surface — any future
-    divergence between the two paths fails here first.  Family-port
-    correctness itself is covered by test_archs' prefill/decode
-    consistency checks."""
+    What this pins is the Runtime executable wrapping (jit, act-rules
+    context, capacity padding, params plumbing, kernel-partition dispatch)
+    against the family functions jitted bare — any future divergence
+    between the two paths fails here first.  Family-port correctness
+    itself is covered by test_archs' prefill/decode consistency checks."""
     rt = Runtime.create(arch, smoke=True, shape_kind="decode", capacity=20)
-    cfg = rt.cfg
+    cfg, fam = rt.cfg, rt.family
     B, S = 2, 8
     batch = _smoke_batch(cfg, B, S)
     off = 4 if (cfg.frontend and not rt.caps.has_encoder) else 0
 
     logits_rt, caches_rt = rt.prefill(batch)
-    ref = jax.jit(lambda p, b: legacy_api.model_prefill(p, b, cfg, 20))
+    ref = jax.jit(lambda p, b: fam.prefill(p, b, cfg, 20))
     logits_ref, caches_ref = ref(rt.params, batch)
     np.testing.assert_array_equal(np.asarray(logits_rt),
                                   np.asarray(logits_ref))
@@ -99,8 +98,7 @@ def test_runtime_matches_legacy_api(arch):
     pos = jnp.full((B,), S + off, jnp.int32)
     dec_rt, _ = rt.decode_step(tok, caches_rt, pos)
     dec_ref, _ = jax.jit(
-        lambda p, t, c, po: legacy_api.model_decode_step(p, t, c, cfg,
-                                                         pos=po))(
+        lambda p, t, c, po: fam.decode_step(p, t, c, cfg, pos=po))(
         rt.params, tok, caches_ref, pos)
     np.testing.assert_array_equal(np.asarray(dec_rt), np.asarray(dec_ref))
 
@@ -160,13 +158,35 @@ def test_every_arch_picks_a_valid_train_impl(arch):
 
 
 def test_mesh_from_spec_axis_table():
-    from repro.launch.mesh import mesh_from_spec
+    from repro.launch.mesh import mesh_axes, mesh_from_spec
+    m1 = mesh_from_spec("1")
+    assert m1.axis_names == ("model",)
+    assert mesh_axes(m1) == {"model": 1}
     m = mesh_from_spec("1x1")
     assert m.axis_names == ("data", "model")
+    assert mesh_axes(m) == {"data": 1, "model": 1}
     m3 = mesh_from_spec("1x1x1")
     assert m3.axis_names == ("pod", "data", "model")
+    assert mesh_axes(m3) == {"pod": 1, "data": 1, "model": 1}
     with pytest.raises(ValueError):
         mesh_from_spec("1x1x1x1")
+
+
+@pytest.mark.parametrize("bad", ["", "2xbad", "x", "1x", "2.5", "ax2"])
+def test_mesh_from_spec_rejects_malformed(bad):
+    """Every malformed spec fails with the module's own ValueError (listing
+    the accepted grammar), never a bare int() traceback."""
+    from repro.launch.mesh import mesh_from_spec
+    with pytest.raises(ValueError, match="x.-separated"):
+        mesh_from_spec(bad)
+
+
+def test_mesh_from_spec_rejects_nonpositive_dims():
+    from repro.launch.mesh import mesh_from_spec
+    with pytest.raises(ValueError, match="positive"):
+        mesh_from_spec("0x2")
+    with pytest.raises(ValueError, match="positive"):
+        mesh_from_spec("-1")
 
 
 # -- satellite: REPRO_DECODE_ATTN / REPRO_ATTN_IMPL / REPRO_FFN_IMPL fail fast
