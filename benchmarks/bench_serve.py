@@ -20,6 +20,13 @@ the full capacity, while the paged engine's block pool is sized to the
 workload's actual peak usage — the K/V footprint ratio that comparison
 yields is the subsystem's reason to exist and is asserted <= 0.5.
 
+The paged flood ends with shared-prefix requests (one 16-token prefix =
+two full blocks) so the pool's content-hash prefix cache registers real
+``prefix_hits``, and every run closes with a **fault section**: the same
+flood with a scripted mid-run fault (``ft/inject.py``) that exhausts the
+tick retries and forces a live evacuation — BENCH_serve.json records the
+evacuation latency and asserts zero streams dropped / zero tokens lost.
+
 ``--smoke`` shrinks the flood for CI; the speedup line is emitted either
 way (benchmarks/common.py CSV convention), and the results land in
 ``BENCH_serve.json`` at the repo root so the perf trajectory is
@@ -41,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, merge_bench_json
+from repro.ft.inject import FaultInjector
 from repro.runtime import Runtime
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.steps import make_decode_step, make_prefill_step
@@ -117,17 +125,31 @@ class _LegacyEngine:
                 break
 
 
-def _requests(cfg, n, seed=0):
+def _requests(cfg, n, seed=0, shared_prefix=0):
+    """Mixed-length flood; the last ``shared_prefix`` requests share one
+    16-token prefix (two full block_size=8 blocks), so the paged pool's
+    content-hash prefix cache is actually exercised — without it the
+    random 4..16-token prompts essentially never collide on a full block
+    and BENCH_serve.json reports prefix_hits=0 forever."""
     rng = np.random.default_rng(seed)
-    return [Request(rid=i,
+    reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
                                         size=int(rng.integers(4, 17)),
                                         dtype=np.int32),
                     max_new_tokens=int(rng.integers(6, 13)))
-            for i in range(n)]
+            for i in range(n - shared_prefix)]
+    if shared_prefix:
+        prefix = rng.integers(0, cfg.vocab_size, size=16, dtype=np.int32)
+        for j in range(shared_prefix):
+            tail = rng.integers(0, cfg.vocab_size, size=2, dtype=np.int32)
+            reqs.append(Request(
+                rid=n - shared_prefix + j,
+                prompt=np.concatenate([prefix, tail]).astype(np.int32),
+                max_new_tokens=int(rng.integers(6, 13))))
+    return reqs
 
 
-def _run(make_engine, cfg, n_requests) -> dict:
+def _run(make_engine, cfg, n_requests, shared_prefix=0) -> dict:
     # warmup pass compiles prefill buckets + decode outside the timed window
     warm = make_engine()
     for r in _requests(cfg, 4, seed=99):
@@ -135,7 +157,7 @@ def _run(make_engine, cfg, n_requests) -> dict:
     warm.run_to_completion()
 
     eng = make_engine()
-    reqs = _requests(cfg, n_requests)
+    reqs = _requests(cfg, n_requests, shared_prefix=shared_prefix)
     t0 = time.perf_counter()
     for r in reqs:
         eng.submit(r)
@@ -144,7 +166,11 @@ def _run(make_engine, cfg, n_requests) -> dict:
     toks = getattr(eng, "stats", eng).tokens_out
     admitted = getattr(eng, "stats", eng).admitted
     assert len(eng.finished) == n_requests, len(eng.finished)
-    out = {"wall": wall, "tok_s": toks / wall, "adm_s": admitted / wall}
+    out = {"wall": wall, "tok_s": toks / wall, "adm_s": admitted / wall,
+           # per-request stream lengths (rid -> tokens emitted): the fault
+           # section diffs these against a fault-free run to prove zero
+           # token loss; never serialized into BENCH_serve.json
+           "streams": {r.rid: len(r.generated) for r in eng.finished}}
     if hasattr(eng, "latency_summary"):
         out["latency"] = eng.latency_summary()
         out["kv_bytes"] = eng.kv_cache_bytes()
@@ -206,17 +232,19 @@ def main(smoke: bool = False, kv_layout: str = "dense"):
         # blocks of 8 per slot, + the 2 reserved blocks).
         cap128 = 128
         bs, nblocks = 8, num_slots * 4 + 2
+        shared = max(2, n_requests // 4)    # shared-prefix pairs: 2 full
+        #                                     blocks each -> prefix_hits > 0
         rt_d = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
                               capacity=cap128)
         dense = _run(lambda: rt_d.engine(num_slots=num_slots,
                                          attn_impl="ref"),
-                     cfg, n_requests)
+                     cfg, n_requests, shared_prefix=shared)
         rt_p = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
                               capacity=cap128, kv_layout="paged")
         paged = _run(lambda: rt_p.engine(num_slots=num_slots,
                                         attn_impl="ref", block_size=bs,
                                         num_blocks=nblocks),
-                     cfg, n_requests)
+                     cfg, n_requests, shared_prefix=shared)
         ratio = paged["kv_bytes"] / dense["kv_bytes"]
         emit("serve_paged_us_per_req", paged["wall"] * 1e6 / n_requests,
              f"tok_s={paged['tok_s']:.1f} kv_ratio={ratio:.3f}")
@@ -236,8 +264,48 @@ def main(smoke: bool = False, kv_layout: str = "dense"):
             "block_high_water": paged["block_high_water"],
             **_lat_fields(paged),
         }
+        record["paged"]["shared_prefix_requests"] = shared
         assert ratio <= 0.5, \
             f"paged KV footprint {ratio:.2%} of dense exceeds the 50% bound"
+        assert paged["prefix_hits"] >= 2, \
+            f"shared-prefix mix produced no prefix hits " \
+            f"({paged['prefix_hits']})"
+
+    # Fault tolerance under fire: the same flood with a scripted mid-run
+    # fault that exhausts the tick retries and forces a live evacuation.
+    # The contract BENCH_serve.json records: zero streams dropped, zero
+    # tokens lost, and the evacuation latency.
+    fault_plan = "tick=6,kind=raise,times=3"
+    captured = {}
+
+    def make_faulted():
+        captured["eng"] = ServeEngine(
+            rt, num_slots=num_slots, capacity=capacity, attn_impl="ref",
+            injector=FaultInjector.parse(fault_plan),
+            tick_retries=2, retry_backoff_s=0.005)
+        return captured["eng"]
+
+    faulted = _run(make_faulted, cfg, n_requests)
+    eng = captured["eng"]
+    lost = sum(max(0, n_base - faulted["streams"].get(rid, 0))
+               for rid, n_base in fast["streams"].items())
+    evac = [e for e in eng.ft_events if e["event"] == "evacuate"]
+    assert eng.stats.evacuations >= 1, "scripted fault never evacuated"
+    assert lost == 0, f"evacuation lost {lost} tokens"
+    print(f"# fault tolerance: {eng.stats.evacuations} evacuation(s) "
+          f"(plan {fault_plan!r}), {eng.stats.tick_retries} retries, "
+          f"evac latency {evac[0]['latency_s'] * 1e3:.1f} ms, "
+          f"tokens lost {lost}, "
+          f"{faulted['tok_s']:.1f} tok/s under fire", flush=True)
+    record["fault"] = {
+        "plan": fault_plan,
+        "evacuations": eng.stats.evacuations,
+        "tick_retries": eng.stats.tick_retries,
+        "evac_latency_ms": round(evac[0]["latency_s"] * 1e3, 2),
+        "streams_dropped": n_requests - len(eng.finished),
+        "tokens_lost": lost,
+        "tokens_per_s": round(faulted["tok_s"], 2),
+    }
 
     merge_bench_json(BENCH_JSON, record)
 

@@ -16,7 +16,10 @@
 # (fast-vs-ref step time per arch) beside it, and (e) the 8-device sharded
 # kernel-dispatch gate: tests/test_partition.py (sharded-vs-replicated
 # parity for every arch) plus the --mesh variants of both benchmarks,
-# which merge sharded-vs-replicated numbers into the BENCH jsons.
+# which merge sharded-vs-replicated numbers into the BENCH jsons, and
+# (f) the 8-device fault-injection gate: tests/test_ft_serve.py drives
+# scripted faults through health-gated evacuation onto a surviving mesh
+# (2x4 -> 1x4) with token-identical streams and zero drops.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -35,11 +38,13 @@ echo "== paged==dense token-parity subset =="
 python -m pytest -q tests/test_paged.py
 
 echo "== tier-1 pytest =="
-# registry + paged suites already ran above and the partition suite runs
-# in its own 8-device gate below — skip the re-runs (ROADMAP's tier-1
-# command without --ignore covers them when run standalone)
+# registry + paged suites already ran above; the partition and ft-serve
+# suites run in their own 8-device gates below — skip the re-runs
+# (ROADMAP's tier-1 command without --ignore covers them when run
+# standalone)
 python -m pytest -x -q --ignore=tests/test_registry.py \
-    --ignore=tests/test_paged.py --ignore=tests/test_partition.py
+    --ignore=tests/test_paged.py --ignore=tests/test_partition.py \
+    --ignore=tests/test_ft_serve.py
 
 echo "== serve fast-path smoke benchmark (dense + paged engines) =="
 # --kv-layout paged adds the dense-vs-paged section and asserts the paged
@@ -63,5 +68,14 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.bench_step --smoke --mesh 2x4
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.bench_serve --smoke --mesh 2x2
+
+echo "== 8-device fault-injection gate =="
+# fault-tolerant serving acceptance: scripted faults (ft/inject.py) force
+# health-gated / straggler / retry-exhaustion evacuations, including the
+# real mesh shrink (2x4 -> 1x4 after losing a device) with token-identical
+# streams and zero drops; single-device variants of these tests also run
+# under plain tier-1
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_ft_serve.py
 
 echo "CI OK"

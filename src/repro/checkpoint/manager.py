@@ -9,10 +9,12 @@ the core of the fault-tolerance story: kill the process at any point and
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import shutil
 import threading
+from dataclasses import asdict, dataclass, field
 from typing import Any, Optional
 
 import jax
@@ -91,3 +93,58 @@ class CheckpointManager:
         state = serialize.load_pytree(self._step_dir(step), like,
                                       shardings=shardings)
         return state, step
+
+
+# ---------------------------------------------------------------------------
+# Engine snapshots: warm restart for the serving side
+# ---------------------------------------------------------------------------
+
+_SNAP_FILE = "ENGINE_SNAPSHOT.json"
+
+
+@dataclass
+class EngineSnapshot:
+    """Portable serve-engine state: every in-flight and queued request in
+    replay-ready form (the tokens to re-prefill + the tokens already
+    streamed), plus the engine's cumulative stats and sizing for sanity
+    checks at restore.
+
+    This is the serving analog of a train-state checkpoint: the device
+    state (KV caches, slot arrays) is deliberately *not* captured — it is
+    reconstructed by replaying each request's ``prompt`` through the
+    prefill path, which is also exactly how live evacuation moves streams
+    onto a surviving mesh (serve/engine._evacuate).  ``requests[i]`` holds
+    ``prompt`` (original prompt + every generated token — the replay
+    prefix), ``generated`` (tokens already streamed, preserved so the
+    restored request keeps counting toward ``max_new_tokens``), ``rid``,
+    ``max_new_tokens`` and ``eos_id``.
+    """
+    requests: list = field(default_factory=list)    # replay-ready dicts
+    stats: dict = field(default_factory=dict)
+    meta: dict = field(default_factory=dict)        # arch/kv_layout/sizing
+
+    # -- persistence (same tmp+rename crash safety as serialize.save_pytree:
+    #    a crash mid-write never corrupts an existing snapshot) -------------
+
+    def save(self, directory: str) -> str:
+        tmp = directory + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        with open(os.path.join(tmp, _SNAP_FILE), "w") as f:
+            json.dump(asdict(self), f, indent=1)
+        if os.path.exists(directory):
+            shutil.rmtree(directory)
+        os.rename(tmp, directory)
+        return directory
+
+    @classmethod
+    def load(cls, directory: str) -> "EngineSnapshot":
+        path = os.path.join(directory, _SNAP_FILE)
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"no engine snapshot at {directory!r} (missing {_SNAP_FILE})")
+        with open(path) as f:
+            raw = json.load(f)
+        return cls(requests=raw.get("requests", []),
+                   stats=raw.get("stats", {}), meta=raw.get("meta", {}))

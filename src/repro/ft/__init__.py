@@ -1,3 +1,6 @@
-from repro.ft.elastic import best_mesh_shape, plan_remesh
-from repro.ft.health import DeviceHealth, check_devices
+from repro.ft.elastic import (best_mesh_shape, evacuation_mesh,
+                              make_elastic_mesh, plan_remesh)
+from repro.ft.health import (DeviceHealth, HealthReason, all_healthy,
+                             check_devices)
+from repro.ft.inject import Fault, FaultInjector, InjectedFault
 from repro.ft.straggler import StragglerMonitor

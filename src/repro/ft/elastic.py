@@ -46,7 +46,12 @@ def best_mesh_shape(n_devices: int, *, model_size: int,
     TP ('model') is preserved — weight-shard divisibility ties the model
     axis to the architecture; the survivors' count is absorbed by DP.
     """
-    assert n_devices >= model_size, (n_devices, model_size)
+    if n_devices < model_size:
+        raise ValueError(
+            f"cannot re-mesh: {n_devices} survivors < model (TP) axis "
+            f"size {model_size} — the mesh cannot shrink below one full "
+            f"TP group; restore from checkpoint onto fresh capacity "
+            f"instead")
     usable = (n_devices // model_size) * model_size
     data = usable // model_size
     pods = prefer_pods if prefer_pods > 1 and data % prefer_pods == 0 else 1
@@ -89,3 +94,21 @@ def make_elastic_mesh(decision: RemeshDecision, devices=None):
     import numpy as np
     grid = np.array(devices[:n]).reshape(decision.mesh_shape)
     return jax.sharding.Mesh(grid, decision.axis_names)
+
+
+def evacuation_mesh(survivors: Sequence, *, tp: int, prefer_pods: int = 1):
+    """The largest mesh the surviving devices support with the model (TP)
+    axis preserved — the serve engine's evacuation target.  ``survivors``
+    are jax Devices; trailing devices that don't fill a whole TP group are
+    left idle (they rejoin at the next full re-plan).  Raises ValueError
+    (via :func:`best_mesh_shape`) when fewer survivors than one TP group
+    remain."""
+    shape = best_mesh_shape(len(survivors), model_size=tp,
+                            prefer_pods=prefer_pods)
+    names = ("pod", "data", "model") if len(shape) == 3 \
+        else ("data", "model")
+    return make_elastic_mesh(
+        RemeshDecision(mesh_shape=shape, axis_names=names, microbatches=1,
+                       dropped=len(survivors) - math.prod(shape),
+                       note="serve evacuation"),
+        devices=list(survivors))

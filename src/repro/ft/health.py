@@ -2,18 +2,36 @@
 
 ``check_devices`` runs a short proof-of-work on every local device (a
 seeded matmul whose checksum is known) and reports per-device pass/fail +
-latency.  On a real cluster this runs per host under the coordinator's
-heartbeat; a failed device triggers the elastic path (ft/elastic.py):
-checkpoint-restore onto the surviving mesh.
+latency with a structured :class:`HealthReason`.  On a real cluster this
+runs per host under the coordinator's heartbeat; serving runs it on the
+engine's health cadence (``ServeEngine(health_every=...)``), and a failed
+device triggers the elastic path (ft/elastic.py): live evacuation onto
+the surviving mesh.
+
+The reference checksum and the jitted proof-of-work are cached at module
+level — the health gate runs every few ticks on the serving hot path, so
+recomputing the reference (or re-tracing the kernel) per call would turn
+the watchdog into its own straggler.
 """
 from __future__ import annotations
 
+import enum
 import time
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+
+class HealthReason(enum.Enum):
+    """Structured failure cause — consumed by the serve engine's
+    escalation log (no string parsing between watchdog and policy)."""
+    OK = "ok"
+    CHECKSUM_MISMATCH = "checksum_mismatch"
+    TIMEOUT = "timeout"
+    EXECUTION_ERROR = "execution_error"
+    INJECTED = "injected_fault"
 
 
 @dataclass
@@ -21,7 +39,13 @@ class DeviceHealth:
     device: str
     ok: bool
     latency_s: float
-    error: str = ""
+    reason: HealthReason = HealthReason.OK
+    detail: str = ""
+
+    @property
+    def error(self) -> str:
+        """Legacy formatted-string view of (reason, detail)."""
+        return "" if self.ok else f"{self.reason.value}: {self.detail}"
 
 
 def _proof_of_work(n: int = 256) -> jax.Array:
@@ -30,24 +54,45 @@ def _proof_of_work(n: int = 256) -> jax.Array:
     return jnp.sum(y)
 
 
+# lazy module-level cache: one trace of the kernel (re-executed per device
+# under jax.default_device) and one reference checksum for the process
+_POW_JIT = None
+_POW_EXPECT: Optional[float] = None
+
+
+def _pow_refs():
+    global _POW_JIT, _POW_EXPECT
+    if _POW_JIT is None:
+        _POW_JIT = jax.jit(_proof_of_work)
+    if _POW_EXPECT is None:
+        _POW_EXPECT = float(jax.device_get(_POW_JIT()))
+    return _POW_JIT, _POW_EXPECT
+
+
 def check_devices(devices=None, timeout_s: float = 30.0) -> list[DeviceHealth]:
     devices = devices or jax.devices()
-    # reference checksum computed once on device 0
-    expect = float(jax.device_get(_proof_of_work()))
+    pow_jit, expect = _pow_refs()
     out = []
     for d in devices:
         t0 = time.perf_counter()
         try:
             with jax.default_device(d):
-                got = float(jax.device_get(jax.jit(_proof_of_work)()))
+                got = float(jax.device_get(pow_jit()))
             dt = time.perf_counter() - t0
-            ok = abs(got - expect) < 1e-3 * max(abs(expect), 1.0) \
-                and dt < timeout_s
-            out.append(DeviceHealth(str(d), ok, dt,
-                                    "" if ok else f"checksum {got}!={expect}"))
+            if abs(got - expect) >= 1e-3 * max(abs(expect), 1.0):
+                out.append(DeviceHealth(
+                    str(d), False, dt, HealthReason.CHECKSUM_MISMATCH,
+                    f"checksum {got} != {expect}"))
+            elif dt >= timeout_s:
+                out.append(DeviceHealth(
+                    str(d), False, dt, HealthReason.TIMEOUT,
+                    f"proof-of-work took {dt:.3f}s >= {timeout_s}s"))
+            else:
+                out.append(DeviceHealth(str(d), True, dt))
         except Exception as e:  # noqa: BLE001 - any failure = unhealthy
             out.append(DeviceHealth(str(d), False,
-                                    time.perf_counter() - t0, repr(e)))
+                                    time.perf_counter() - t0,
+                                    HealthReason.EXECUTION_ERROR, repr(e)))
     return out
 
 

@@ -1,0 +1,193 @@
+"""Deterministic fault injection: script device failures into the engine.
+
+The paper validates the MCM daughter board adversarially — IBERT 31-bit
+PRBS link stress and exhaustive memory tests — because at scale the
+question is not *if* a part degrades but *when*.  This module is that
+discipline one level up: a scripted plan of faults the serve engine
+replays deterministically, so every recovery path (health-gated
+evacuation, straggler escalation, transient-tick retry) is testable on
+the CPU mesh, tick-for-tick reproducible.
+
+Plan grammar (``REPRO_FAULT_PLAN`` env var, or :meth:`FaultInjector.parse`)::
+
+    plan   := clause (';' clause)*
+    clause := field (',' field)*
+    field  := key '=' value
+
+    keys:
+      tick    (int, required)  first engine tick the fault is armed at
+      kind    (required)       fail | stall | raise
+      device  (int)            JAX device id the fault is pinned to
+                               (required for 'fail'; optional straggler
+                               attribution for 'stall')
+      times   (int)            how many times the fault fires; defaults:
+                               fail -> persistent (a dead device stays
+                               dead), stall/raise -> 1
+      ms      (float)          stall duration per fired tick (default 100)
+
+Examples::
+
+    REPRO_FAULT_PLAN="tick=6,kind=fail,device=7"          # device 7 dies
+    REPRO_FAULT_PLAN="tick=4,kind=raise,times=3"          # 3 mid-tick errors
+    REPRO_FAULT_PLAN="tick=5,kind=stall,ms=250,times=2,device=3"
+
+Fault kinds and where they bite:
+
+* ``fail`` — the device fails the next health checks
+  (:meth:`FaultInjector.apply_health` overlays ``ft.health`` reports with
+  ``HealthReason.INJECTED``).  The engine's health gate escalates to
+  evacuation.
+* ``stall`` — :meth:`FaultInjector.on_tick` sleeps ``ms`` before the
+  decode dispatch, inflating the tick wall time the engine feeds into
+  ``StragglerMonitor``; sustained stalls walk the warn -> remesh ladder.
+* ``raise`` — :meth:`FaultInjector.on_tick` raises :class:`InjectedFault`
+  before the decode dispatch (the donated cache buffers are untouched, as
+  they would be when a real dispatch is rejected).  With the engine's
+  bounded retry (``tick_retries``), ``times=1`` models a transient error
+  that retry absorbs; ``times >= tick_retries + 1`` exhausts the retries
+  of one tick and escalates to evacuation — and is then spent, so the
+  evacuated engine decodes cleanly.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+from repro.ft.health import HealthReason
+
+KINDS = ("fail", "stall", "raise")
+_PERSISTENT = 1 << 30
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a scripted ``raise`` fault at dispatch time."""
+
+
+@dataclass
+class Fault:
+    tick: int                 # first engine tick the fault is armed at
+    kind: str                 # fail | stall | raise
+    device: int = -1          # JAX device id (-1 = unattributed)
+    times: int = 0            # 0 -> kind default (fail persistent, else 1)
+    ms: float = 100.0         # stall duration per fired tick
+    fired: int = field(default=0, compare=False)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"fault kind {self.kind!r} is not one of "
+                             f"{', '.join(KINDS)}")
+        if self.kind == "fail" and self.device < 0:
+            raise ValueError("kind=fail needs device=<jax device id> "
+                             "(which device fails its health checks)")
+        if self.times <= 0:
+            self.times = _PERSISTENT if self.kind == "fail" else 1
+
+    def due(self, tick: int) -> bool:
+        return tick >= self.tick and self.fired < self.times
+
+
+class FaultInjector:
+    """A scripted plan of :class:`Fault`\\ s the engine consults each tick."""
+
+    def __init__(self, faults):
+        self.faults = list(faults)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def parse(cls, plan: str) -> "FaultInjector":
+        """Parse the ``REPRO_FAULT_PLAN`` grammar (see module docstring)."""
+        faults = []
+        for clause in plan.split(";"):
+            clause = clause.strip()
+            if not clause:
+                continue
+            kw: dict = {}
+            for fieldspec in clause.split(","):
+                if "=" not in fieldspec:
+                    raise ValueError(
+                        f"fault plan clause {clause!r}: field "
+                        f"{fieldspec!r} is not key=value "
+                        f"(grammar: tick=<int>,kind=<fail|stall|raise>"
+                        f"[,device=<id>][,times=<n>][,ms=<float>])")
+                k, v = (s.strip() for s in fieldspec.split("=", 1))
+                try:
+                    if k in ("tick", "device", "times"):
+                        kw[k] = int(v)
+                    elif k == "ms":
+                        kw[k] = float(v)
+                    elif k == "kind":
+                        kw[k] = v.lower()
+                    else:
+                        raise ValueError(
+                            f"unknown fault-plan key {k!r}; valid keys: "
+                            f"tick, kind, device, times, ms")
+                except ValueError as e:
+                    if "fault-plan" in str(e):
+                        raise
+                    raise ValueError(
+                        f"fault plan clause {clause!r}: bad value for "
+                        f"{k}={v!r}") from None
+            if "tick" not in kw or "kind" not in kw:
+                raise ValueError(
+                    f"fault plan clause {clause!r}: tick= and kind= are "
+                    f"required (grammar: tick=<int>,kind=<fail|stall|raise>"
+                    f"[,device=<id>][,times=<n>][,ms=<float>])")
+            faults.append(Fault(**kw))
+        if not faults:
+            raise ValueError(f"fault plan {plan!r} contains no clauses")
+        return cls(faults)
+
+    @classmethod
+    def from_env(cls, env_var: str = "REPRO_FAULT_PLAN"):
+        """An injector from the env plan, or None when the var is unset —
+        the engine's default, so any run can be made adversarial without
+        touching code."""
+        plan = os.environ.get(env_var, "").strip()
+        return cls.parse(plan) if plan else None
+
+    # -- engine hooks -------------------------------------------------------
+
+    def _due(self, tick: int, kind: str):
+        return [f for f in self.faults if f.kind == kind and f.due(tick)]
+
+    def on_tick(self, tick: int):
+        """Fire tick-scoped faults: sleep for due stalls, then raise the
+        first due ``raise`` fault.  Called at the top of every dispatch
+        attempt, so each retry consumes one fire of a ``raise`` fault."""
+        for f in self._due(tick, "stall"):
+            f.fired += 1
+            time.sleep(f.ms / 1e3)
+        for f in self._due(tick, "raise"):
+            f.fired += 1
+            raise InjectedFault(
+                f"injected mid-tick fault at tick {tick} "
+                f"(scripted tick={f.tick}, fire {f.fired}/{f.times})")
+
+    def apply_health(self, reports: list, devices: list, tick: int) -> list:
+        """Overlay scripted ``fail`` faults onto ``ft.health`` reports:
+        a due fault marks its device's report unhealthy with
+        ``HealthReason.INJECTED``.  ``devices`` are the jax Devices the
+        reports were taken over (fault ``device`` matches ``Device.id``)."""
+        for f in self._due(tick, "fail"):
+            for rep, dev in zip(reports, devices):
+                if getattr(dev, "id", -1) == f.device:
+                    f.fired += 1
+                    rep.ok = False
+                    rep.reason = HealthReason.INJECTED
+                    rep.detail = (f"scripted fault (armed tick={f.tick}, "
+                                  f"now tick={tick})")
+        return reports
+
+    def suspect_devices(self) -> set:
+        """Device ids implicated by fired device-attributed faults — the
+        engine excludes these when a straggler escalation (which carries no
+        device attribution of its own) forces an evacuation."""
+        return {f.device for f in self.faults
+                if f.device >= 0 and f.fired > 0}
+
+    def __repr__(self) -> str:
+        return ("FaultInjector(" + "; ".join(
+            f"tick={f.tick},kind={f.kind},device={f.device},"
+            f"times={f.times},fired={f.fired}" for f in self.faults) + ")")

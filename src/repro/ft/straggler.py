@@ -29,12 +29,15 @@ class StragglerReport:
 class StragglerMonitor:
     def __init__(self, *, window: int = 50, warn_ratio: float = 1.5,
                  remesh_ratio: float = 2.5, abort_ratio: float = 5.0,
-                 sustained: int = 3):
+                 sustained: int = 3, min_window: int = 2):
         self.times: deque = deque(maxlen=window)
         self.warn_ratio = warn_ratio
         self.remesh_ratio = remesh_ratio
         self.abort_ratio = abort_ratio
         self.sustained = sustained
+        # a median over fewer than min_window samples is not a baseline:
+        # observations during warmup are recorded but never escalate
+        self.min_window = max(1, min_window)
         self._over = 0
         self._t0: Optional[float] = None
         self.history: list[StragglerReport] = []
@@ -45,24 +48,49 @@ class StragglerMonitor:
         self._t0 = time.perf_counter()
 
     def step_end(self, step: int) -> StragglerReport:
-        assert self._t0 is not None, "step_start not called"
+        """Close the step opened by :meth:`step_start`.  Tolerant of an
+        unpaired call (e.g. right after a :meth:`reset` mid-step): reports
+        "ok" without polluting the window instead of asserting."""
+        if self._t0 is None:
+            rep = StragglerReport(step, 0.0, 0.0, 0.0, "ok")
+            self.history.append(rep)
+            return rep
         dt = time.perf_counter() - self._t0
         self._t0 = None
         return self.observe(step, dt)
 
+    def reset(self, *, clear_window: bool = True):
+        """Forget escalation state after a recovery action (re-mesh /
+        evacuation): the new regime's step times are a different
+        distribution, so the sustained-outlier counter and (by default)
+        the rolling window must re-warm rather than judge the new mesh
+        against the old one's median."""
+        self._over = 0
+        self._t0 = None
+        if clear_window:
+            self.times.clear()
+
     # -- core ------------------------------------------------------------------
 
     def observe(self, step: int, step_time: float) -> StragglerReport:
-        med = statistics.median(self.times) if self.times else step_time
+        if len(self.times) < self.min_window:
+            # warmup: the window is too short for a meaningful median
+            # (median of < 2 samples is just the sample) — record and pass
+            self.times.append(step_time)
+            self._over = 0
+            rep = StragglerReport(step, step_time, step_time, 1.0, "ok")
+            self.history.append(rep)
+            return rep
+        med = statistics.median(self.times)
         ratio = step_time / max(med, 1e-9)
         # only steady-state samples pollute the window (skip compile steps)
-        if ratio < self.warn_ratio or not self.times:
+        if ratio < self.warn_ratio:
             self.times.append(step_time)
 
         if ratio >= self.warn_ratio:
             self._over += 1
         else:
-            self._over = 0
+            self._over = 0          # recovery: sustained counter restarts
 
         action = "ok"
         if self._over >= self.sustained:

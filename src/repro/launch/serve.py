@@ -7,6 +7,12 @@ Builds a decode-shaped ``repro.runtime.Runtime``, runs the
 continuous-batching engine (serve/engine.py) over synthetic prompts and
 reports throughput/latency percentiles — the serving-side end-to-end
 driver.
+
+Fault-tolerance knobs: ``--health-every N`` gates every Nth tick on
+device health checks, ``--tick-retries`` bounds the transient-failure
+retry loop, and ``--fault-plan`` (or the ``REPRO_FAULT_PLAN`` env var)
+arms a scripted fault plan — e.g. ``tick=6,kind=raise,times=3`` forces a
+live evacuation mid-run; the engine's ft event log is printed at exit.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.ft.inject import FaultInjector
 from repro.launch import preflight as pf
 from repro.launch.mesh import mesh_from_spec
 from repro.runtime import Runtime
@@ -32,6 +39,14 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--mesh", default="")
     ap.add_argument("--no-preflight", action="store_true")
+    ap.add_argument("--health-every", type=int, default=0,
+                    help="run device health checks every N ticks (0 = off)")
+    ap.add_argument("--tick-retries", type=int, default=2,
+                    help="transient tick failures retried before evacuating")
+    ap.add_argument("--fault-plan", default="",
+                    help="scripted fault plan (ft/inject.py grammar, e.g. "
+                         "'tick=6,kind=raise,times=3'); defaults to "
+                         "$REPRO_FAULT_PLAN")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -47,7 +62,11 @@ def main(argv=None):
             if not rep.ok:
                 raise SystemExit("preflight failed")
 
-    eng = rt.engine(num_slots=args.slots)
+    ft_kw = dict(health_every=args.health_every,
+                 tick_retries=args.tick_retries)
+    if args.fault_plan:
+        ft_kw["injector"] = FaultInjector.parse(args.fault_plan)
+    eng = rt.engine(num_slots=args.slots, **ft_kw)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(
@@ -57,6 +76,8 @@ def main(argv=None):
             max_new_tokens=args.max_new))
     stats = eng.run_to_completion()
     print("engine:", stats.summary)
+    for ev in eng.ft_events:
+        print("ft event:", ev)
 
     # latency percentiles over finished requests
     lat = sorted(r.finished_at - r.submitted_at for r in eng.finished)

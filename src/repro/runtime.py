@@ -146,7 +146,11 @@ class Runtime:
                    param_dtype=param_dtype, seed=seed, params=params,
                    plan_kw=plan_kw)
 
-    def reshape(self, *, shape_kind: str, seq_len: Optional[int] = None,
+    _KEEP_MESH = object()      # reshape() sentinel: None is a valid mesh
+
+    def reshape(self, *, shape_kind: Optional[str] = None,
+                mesh=_KEEP_MESH,
+                seq_len: Optional[int] = None,
                 capacity: Optional[int] = None, grad_sync: Optional[str] = None,
                 attn_impl: Optional[str] = None,
                 ffn_impl: Optional[str] = None,
@@ -155,9 +159,24 @@ class Runtime:
                 plan_kw: Optional[dict] = None) -> "Runtime":
         """A new Runtime over the same cfg/params with a re-planned fabric
         mapping (e.g. train -> decode); materialized params and the original
-        plan overrides are carried over (``plan_kw`` entries merge on top)."""
+        plan overrides are carried over (``plan_kw`` entries merge on top).
+
+        ``mesh`` moves the Runtime onto a different device grid — the
+        elastic/evacuation path (ft/elastic.py) hands the surviving mesh
+        here.  Materialized params take a host round-trip so the new
+        executables re-commit them under the new mesh (their old shardings
+        may reference devices that no longer participate); on a real
+        cluster this is where a checkpoint restore with resharding slots
+        in instead."""
+        if mesh is Runtime._KEEP_MESH:
+            mesh, params = self.mesh, self._params
+        else:
+            params = (None if self._params is None
+                      else jax.tree.map(jax.device_get, self._params))
         return Runtime.create(
-            self.cfg, self.mesh, shape_kind=shape_kind,
+            self.cfg, mesh,
+            shape_kind=shape_kind if shape_kind is not None
+            else self.plan.shape_kind,
             seq_len=seq_len, capacity=capacity,
             grad_sync=grad_sync if grad_sync is not None else self.plan.grad_sync,
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
@@ -165,7 +184,7 @@ class Runtime:
             kv_layout=kv_layout if kv_layout is not None else self.kv_layout,
             partition=partition if partition is not None else self.partition,
             param_dtype=self.param_dtype, seed=self.seed,
-            params=self._params, plan_kw={**self.plan_kw, **(plan_kw or {})})
+            params=params, plan_kw={**self.plan_kw, **(plan_kw or {})})
 
     # -- params / state -----------------------------------------------------
 
@@ -359,17 +378,19 @@ class Runtime:
     def engine(self, *, num_slots: int = 4, capacity: Optional[int] = None,
                max_admit: Optional[int] = None,
                attn_impl: Optional[str] = None, donate: bool = True,
-               params=None, kv_layout: Optional[str] = None, **paged_kw):
+               params=None, kv_layout: Optional[str] = None, **engine_kw):
         """A continuous-batching ServeEngine over this Runtime.
 
-        ``kv_layout`` defaults to the Runtime's own knob; ``paged_kw``
+        ``kv_layout`` defaults to the Runtime's own knob; ``engine_kw``
         forwards the paged-pool sizing (``block_size``, ``num_blocks``,
-        ``max_blocks_per_seq``, ``admit_window``)."""
+        ``max_blocks_per_seq``, ``admit_window``) and the fault-tolerance
+        knobs (``health_every``, ``injector``, ``tick_retries``,
+        ``retry_backoff_s``, ``straggler_kw``, ``max_evacuations``)."""
         from repro.serve.engine import ServeEngine
         return ServeEngine(self, num_slots=num_slots, capacity=capacity,
                            max_admit=max_admit, attn_impl=attn_impl,
                            donate=donate, params=params,
-                           kv_layout=kv_layout, **paged_kw)
+                           kv_layout=kv_layout, **engine_kw)
 
     # -- report -------------------------------------------------------------
 
@@ -401,6 +422,25 @@ class Runtime:
             impl = "ref"
         return impl
 
+    def _ft_status(self) -> str:
+        """Fault-tolerance posture: device pool, the mesh a one-device
+        loss would evacuate onto (ft/elastic.best_mesh_shape with the TP
+        axis preserved), and any armed REPRO_FAULT_PLAN."""
+        import os
+        from repro.ft.elastic import best_mesh_shape
+        n_dev = (int(self.mesh.devices.size) if self.mesh is not None else 1)
+        tp = self.plan.tp_size
+        if n_dev - 1 >= tp:
+            shape = best_mesh_shape(n_dev - 1, model_size=tp,
+                                    prefer_pods=self.plan.mesh_axes.get(
+                                        "pod", 1))
+            lose1 = "x".join(str(s) for s in shape)
+        else:
+            lose1 = "impossible (survivors < TP group)"
+        plan_env = os.environ.get("REPRO_FAULT_PLAN", "").strip() or "none"
+        return (f"  ft        : devices={n_dev} tp={tp} "
+                f"evac(lose-1)->{lose1} fault_plan={plan_env}")
+
     def describe(self) -> str:
         """Plan + tier placement + kernel selection in one report."""
         from repro.kernels import ops as kernel_ops
@@ -429,6 +469,7 @@ class Runtime:
             f"  serve     : capacity={self.capacity} "
             f"kv_layout={self.kv_layout} "
             f"swa_bucketing={'exact' if self.caps.swa else 'pow2'}",
+            self._ft_status(),
         ]
         from repro.kernels import partition as kernel_partition
         pspecs = kernel_partition.partition_report(self.cfg, plan, self.caps,

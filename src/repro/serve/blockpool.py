@@ -142,6 +142,14 @@ class BlockPool:
     def blocks_needed(self, entries: int) -> int:
         return -(-entries // self.block_size)
 
+    def chain(self, slot: int) -> list[int]:
+        """The slot's live block chain (pool ids, in sequence order) — the
+        host-side view that makes a paged request's KV *portable*: together
+        with the token prefix it was built from, the chain is exactly what
+        an evacuation snapshot records before the engine replays the
+        request onto the surviving mesh (ft: serve/engine._evacuate)."""
+        return [int(b) for b in self.table[slot, :int(self.seq_blocks[slot])]]
+
     def can_admit(self, prompt_len: int) -> bool:
         """Conservative (ignores prefix sharing): a fresh allocation of
         every prompt block must fit the unreserved free list."""

@@ -76,6 +76,50 @@ twists:
   block — their junk stays unobservable.
 * **Eviction** just drops refcounts; blocks return to the free list when
   the last owner leaves.
+
+Fault tolerance
+---------------
+
+The paper's MCM is validated by adversarial stress (PRBS link tests,
+exhaustive memory tests) because degradation at scale is a *when*, not an
+*if*; the engine carries the same posture one level up.  Three watchdogs
+wrap the tick loop, and every escalation converges on live evacuation:
+
+* **Health-gated ticks.**  Every ``health_every`` ticks the engine runs
+  ``ft.health.check_devices`` (cached-checksum proof-of-work) over its
+  mesh devices; any unhealthy report — structured ``HealthReason``, no
+  string parsing — escalates straight to evacuation with the failed
+  devices excluded.
+* **Straggler escalation.**  Per-tick wall times (dispatch + the
+  overlapped collection) feed a ``StragglerMonitor``; its existing
+  warn -> remesh -> abort ladder maps to log -> evacuate -> evacuate (with
+  scripted-fault device attribution when available, else an in-place
+  rebuild).
+* **Bounded retry.**  A tick that *raises* is retried with exponential
+  backoff up to ``tick_retries`` times — transient faults recover without
+  losing a stream — before escalating to evacuation.
+
+**Evacuation** (``_evacuate``) never drops a stream: the in-flight token
+transfer is flushed, every live request's portable state is snapshotted
+(tokens emitted, position, and — under the paged layout — its block
+chain, the host-side KV identity), the generated prefix is folded into
+the prompt, the Runtime is ``reshape()``-d onto the surviving mesh
+(``ft.elastic.evacuation_mesh`` preserves the TP axis; params take a host
+round-trip), the data path is rebuilt, and the snapshot re-enters through
+the standard prefill admission at the head of the queue.  Replaying
+prompt+generated through prefill computes the next token at exactly the
+position the lost decode step would have, so the continued stream is the
+same f32 token sequence the uninterrupted run emits (the contract
+tests/test_ft_serve.py pins, dense and paged).  Under the paged layout
+the replayed prefixes re-register in the block pool's content cache, so
+streams that shared prefix blocks before the failure share them again
+after — the paged KV-replay fast path.
+
+Deterministic fault injection (``ft/inject.py``; ``REPRO_FAULT_PLAN``)
+scripts device failures, stalls and mid-tick raises at chosen tick
+numbers, which is how all of the above is exercised on the CPU mesh.
+``snapshot()`` / ``load_snapshot()`` extend the same replay contract to a
+``checkpoint``-backed warm restart across engine (or process) lifetimes.
 """
 from __future__ import annotations
 
@@ -88,7 +132,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import EngineSnapshot
+from repro.ft import elastic as ft_elastic
+from repro.ft import health as ft_health
+from repro.ft.inject import FaultInjector
+from repro.ft.straggler import StragglerMonitor
 from repro.serve import blockpool, kvcache
+
+_FROM_ENV = object()     # injector default: build from REPRO_FAULT_PLAN
 
 
 @dataclass
@@ -104,6 +155,10 @@ class Request:
     finished_at: float = 0.0
     token_times: list = field(default_factory=list)   # decode-token arrivals
     done: bool = False
+    # replay bookkeeping: how many ``generated`` tokens are already folded
+    # into ``prompt`` (evacuation / snapshot re-prefill the folded prefix;
+    # the counter makes folding idempotent across repeated evacuations)
+    folded: int = 0
 
 
 @dataclass
@@ -113,12 +168,35 @@ class EngineStats:
     admitted: int = 0
     finished: int = 0
     prefill_calls: int = 0
+    # fault tolerance
+    evacuations: int = 0
+    tick_retries: int = 0
+    health_checks: int = 0
 
     @property
     def summary(self) -> str:
-        return (f"ticks={self.ticks} tokens={self.tokens_out} "
-                f"admitted={self.admitted} finished={self.finished} "
-                f"prefills={self.prefill_calls}")
+        s = (f"ticks={self.ticks} tokens={self.tokens_out} "
+             f"admitted={self.admitted} finished={self.finished} "
+             f"prefills={self.prefill_calls}")
+        if self.evacuations or self.tick_retries or self.health_checks:
+            s += (f" evacuations={self.evacuations} "
+                  f"retries={self.tick_retries} "
+                  f"health_checks={self.health_checks}")
+        return s
+
+
+def _fold_replay_prefix(req: Request):
+    """Fold a request's generated tokens into its prompt so one prefill
+    replays the full prefix.  After folding, re-admission through the
+    standard prefill path computes the next token at position
+    ``len(prompt)`` — exactly where the interrupted decode loop would have
+    — so the continued stream matches the uninterrupted one.  Idempotent
+    via ``Request.folded`` (repeated evacuations fold only the new tail)."""
+    fresh = req.generated[req.folded:]
+    if fresh:
+        req.prompt = np.concatenate([np.asarray(req.prompt, np.int32),
+                                     np.asarray(fresh, np.int32)])
+        req.folded = len(req.generated)
 
 
 def _seed_hot_loop(slots, tok, pos, next_tok, lengths):
@@ -162,7 +240,15 @@ class ServeEngine:
     The Runtime owns arch/plan/mesh/params and the step factories; the
     engine owns slots, admission and the device-resident hot loop.
     ``capacity`` / ``attn_impl`` / ``params`` default to the Runtime's own
-    (``params=`` lets quickstarts serve freshly trained weights)."""
+    (``params=`` lets quickstarts serve freshly trained weights).
+
+    Fault-tolerance knobs: ``health_every`` gates ticks on device health
+    checks (0 = off), ``tick_retries``/``retry_backoff_s`` bound the
+    transient-failure retry loop, ``injector`` takes a ``FaultInjector``
+    (defaults to parsing ``REPRO_FAULT_PLAN``; pass ``None`` to disable),
+    ``straggler_kw`` overrides the StragglerMonitor thresholds, and
+    ``max_evacuations`` is the give-up bound on repeated evacuation (a
+    persistently failing data path must eventually surface, not loop)."""
 
     def __init__(self, runtime, *, num_slots: int = 4,
                  capacity: Optional[int] = None,
@@ -172,10 +258,13 @@ class ServeEngine:
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  max_blocks_per_seq: Optional[int] = None,
-                 admit_window: Optional[int] = None):
+                 admit_window: Optional[int] = None,
+                 health_every: int = 0, injector=_FROM_ENV,
+                 tick_retries: int = 2, retry_backoff_s: float = 0.02,
+                 straggler_kw: Optional[dict] = None,
+                 max_evacuations: int = 8):
         rt = runtime
         self.rt = rt
-        self.cfg, self.plan, self.mesh = rt.cfg, rt.plan, rt.mesh
         self.caps = rt.caps
         self.params = params if params is not None else rt.params
         capacity = capacity if capacity is not None else rt.capacity
@@ -191,7 +280,7 @@ class ServeEngine:
                              f"valid choices: dense, paged")
         if kv_layout == "paged" and not self.caps.supports_paged_decode:
             raise ValueError(
-                f"arch {self.cfg.name!r} does not support the paged KV "
+                f"arch {rt.cfg.name!r} does not support the paged KV "
                 f"layout (caps: {self.caps.summary}); use kv_layout='dense'")
         if kv_layout == "dense" and any(
                 v is not None for v in (block_size, num_blocks,
@@ -202,8 +291,48 @@ class ServeEngine:
                 "silently ignore them)")
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
-        donate_kw = dict(donate_argnums=(2,)) if donate else {}
-        splice_kw = dict(donate_argnums=(0,)) if donate else {}
+        # data-path build knobs, kept so an evacuation-time rebuild sizes
+        # the new pool/caches identically to the originals
+        self._attn_impl = attn_impl
+        self._donate = donate
+        self._block_size = block_size if block_size is not None else 16
+        self._num_blocks = num_blocks
+        self._max_blocks_per_seq = max_blocks_per_seq
+        # fault tolerance: watchdogs + scripted-fault harness
+        self.health_every = health_every
+        self.injector = (FaultInjector.from_env() if injector is _FROM_ENV
+                         else injector)
+        self.tick_retries = tick_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.max_evacuations = max_evacuations
+        # Serving-tuned thresholds: decode ticks are short and noisy on a
+        # shared host, so ratios sit far above the training defaults and
+        # the first (compile-spiked) ticks land inside the warmup window.
+        self.straggler = StragglerMonitor(**(
+            straggler_kw if straggler_kw is not None
+            else dict(window=32, warn_ratio=4.0, remesh_ratio=10.0,
+                      abort_ratio=100.0, sustained=3)))
+        self.ft_events: list[dict] = []    # structured fault-handling log
+        self._tick_no = 0                  # absolute tick count (fault plans
+        #                                    address ticks by this number)
+        # engine state that survives an evacuation rebuild
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self.stats = EngineStats()
+        self._build_data_path()
+
+    def _build_data_path(self):
+        """(Re)build everything derived from the Runtime: jitted
+        executables, device caches, block pool and slot state.  Called at
+        construction and again after an evacuation has reshaped the
+        Runtime onto a surviving mesh; queue/finished/stats and the
+        fault-tolerance state deliberately survive the rebuild."""
+        rt = self.rt
+        self.cfg, self.plan, self.mesh = rt.cfg, rt.plan, rt.mesh
+        self._devices = (list(self.mesh.devices.flatten())
+                         if self.mesh is not None else jax.devices()[:1])
+        donate_kw = dict(donate_argnums=(2,)) if self._donate else {}
+        splice_kw = dict(donate_argnums=(0,)) if self._donate else {}
         # One capacity-padded prefill for both layouts: the paged splice
         # reads block columns out of the same program's caches, so dense
         # and paged engines see bitwise-identical prefill K/V (the
@@ -212,53 +341,59 @@ class ServeEngine:
         # the Runtime's mesh context (sharding-annotated model code needs
         # an ambient mesh for its bare-PartitionSpec constraints).
         self._prefill = rt._bind_mesh(
-            jax.jit(rt.make_prefill_step(capacity=capacity)))
+            jax.jit(rt.make_prefill_step(capacity=self.capacity)))
         if self.paged:
             # block pool sized for the worst case (every slot at capacity)
             # unless told tighter; +reserved null/trash blocks.
             # max_entries=capacity keeps the storable length identical to
             # the dense slabs even when capacity % block_size != 0.
-            bs = block_size if block_size is not None else 16
-            M = (max_blocks_per_seq if max_blocks_per_seq is not None
-                 else -(-capacity // bs))
-            nblocks = (num_blocks if num_blocks is not None
-                       else num_slots * M + blockpool.NUM_RESERVED)
-            self.pool = blockpool.BlockPool(nblocks, bs, num_slots, M,
-                                            max_entries=capacity)
+            bs = self._block_size
+            M = (self._max_blocks_per_seq
+                 if self._max_blocks_per_seq is not None
+                 else -(-self.capacity // bs))
+            nblocks = (self._num_blocks if self._num_blocks is not None
+                       else self.num_slots * M + blockpool.NUM_RESERVED)
+            self.pool = blockpool.BlockPool(nblocks, bs, self.num_slots, M,
+                                            max_entries=self.capacity)
             self.caches = blockpool.init_paged_cache(self.cfg, nblocks, bs)
-            decode = rt.make_paged_decode_step(attn_impl=attn_impl)
+            decode = rt.make_paged_decode_step(attn_impl=self._attn_impl)
             self._decode = rt._bind_mesh(jax.jit(decode, **donate_kw))
             self._splice = jax.jit(_install_admitted_paged, **splice_kw)
             self._copy = jax.jit(blockpool.copy_blocks, **splice_kw)
         else:
             self.pool = None
-            self.caches = kvcache.init_cache(self.cfg, num_slots, capacity)
-            decode = rt.make_decode_step(attn_impl=attn_impl,
+            self.caches = kvcache.init_cache(self.cfg, self.num_slots,
+                                             self.capacity)
+            decode = rt.make_decode_step(attn_impl=self._attn_impl,
                                          advance_pos=True)
             self._decode = rt._bind_mesh(jax.jit(decode, **donate_kw))
             self._splice = jax.jit(_install_admitted, **splice_kw)
         # slot state: host-side bookkeeping + device-resident hot-loop state
-        self.slot_req: list[Optional[Request]] = [None] * num_slots
+        self.slot_req: list[Optional[Request]] = [None] * self.num_slots
         # Diagnostic host mirror of per-request progress (next absolute pos,
         # 0 when free).  The hot loop never reads it — the authoritative
         # position array is the device-resident ``_pos``, which also keeps
         # advancing on inactive slots (harmless junk, reset at re-admission).
-        self.slot_pos = np.zeros(num_slots, np.int32)
-        self._tok = jnp.zeros((num_slots, 1), jnp.int32)  # last emitted
-        self._pos = jnp.zeros((num_slots,), jnp.int32)
+        self.slot_pos = np.zeros(self.num_slots, np.int32)
+        self._tok = jnp.zeros((self.num_slots, 1), jnp.int32)  # last emitted
+        self._pos = jnp.zeros((self.num_slots,), jnp.int32)
         self._inflight = None   # (device tokens of step t-1, slot->req snap)
-        self.queue: deque[Request] = deque()
-        self.finished: list[Request] = []
-        self.stats = EngineStats()
+        # the first dispatch after a (re)build is a compile tick — orders
+        # of magnitude above steady state; feeding it to the straggler
+        # monitor would poison the small warmup window's median
+        self._straggler_skip = 1
 
     # -- admission ----------------------------------------------------------
 
     def _paged_reserve(self, req: Request) -> int:
-        """Worst-case block-chain length for ``req``: prompt + generation
-        budget (capped at the table width — writes past it junk to trash,
-        matching the dense engine's out-of-bounds scatter drop)."""
+        """Worst-case block-chain length for ``req``: prompt + remaining
+        generation budget (capped at the table width — writes past it junk
+        to trash, matching the dense engine's out-of-bounds scatter drop).
+        ``folded`` tokens already live inside the prompt of a replayed
+        request, so they are not counted twice."""
         return min(self.pool.blocks_needed(len(req.prompt)
-                                           + req.max_new_tokens),
+                                           + req.max_new_tokens
+                                           - req.folded),
                    self.pool.max_blocks_per_seq)
 
     def submit(self, req: Request):
@@ -420,54 +555,271 @@ class ServeEngine:
             if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
                 self._free(slot)
 
+    def _dispatch(self):
+        """One jitted decode step over the current slots; returns the
+        (device tokens, slot->request snapshot) pair the next tick's
+        collection consumes."""
+        if self.paged:
+            # per-tick write plan: lazy chain growth at block
+            # boundaries, copy-on-write for shared tails, trash for
+            # inactive slots (their junk writes stay unobservable)
+            bids = np.empty(self.num_slots, np.int32)
+            copies = []
+            for s in range(self.num_slots):
+                bids[s], cp = self.pool.write_plan(
+                    s, self.slot_req[s] is not None)
+                copies.extend(cp)
+            if copies:
+                # pad to a fixed width (<= 1 COW per slot per tick)
+                # with trash self-copies so the jitted copy compiles
+                # exactly once
+                copies += [(blockpool.TRASH_BLOCK,
+                            blockpool.TRASH_BLOCK)] * \
+                    (self.num_slots - len(copies))
+                self.caches = self._copy(
+                    self.caches,
+                    jnp.asarray([c[0] for c in copies], jnp.int32),
+                    jnp.asarray([c[1] for c in copies], jnp.int32))
+            tok, caches, pos = self._decode(
+                self.params, self._tok, self.caches, self._pos,
+                jnp.asarray(self.pool.table), jnp.asarray(bids))
+        else:
+            tok, caches, pos = self._decode(self.params, self._tok,
+                                            self.caches, self._pos)
+        # the old cache buffer was donated — replace references now
+        self.caches, self._tok, self._pos = caches, tok, pos
+        self.stats.ticks += 1
+        return (tok, list(self.slot_req))
+
+    def _dispatch_with_retry(self, t: int):
+        """Dispatch with bounded retry-with-backoff: a transient tick
+        failure is retried up to ``tick_retries`` times before escalating
+        to evacuation.  Scripted faults fire via ``injector.on_tick``
+        *before* the jitted step, so a failed attempt never half-consumes
+        the donated cache buffers (the paged write plan likewise only
+        advances inside a successful ``_dispatch``)."""
+        last = None
+        for attempt in range(self.tick_retries + 1):
+            try:
+                if self.injector is not None:
+                    self.injector.on_tick(t)
+                return self._dispatch()
+            except Exception as e:  # noqa: BLE001 — retry, then escalate
+                last = e
+                self.stats.tick_retries += 1
+                self._log_event("tick_retry", tick=t, attempt=attempt,
+                                error=repr(e))
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+        self._evacuate(tick=t,
+                       reason=(f"tick failed {self.tick_retries + 1} "
+                               f"attempts: {last!r}"),
+                       bad=self._suspects())
+        return None
+
     def tick(self) -> bool:
         """Dispatch one decode step, collect the previous one, admit.
 
         Order matters: dispatch first (device starts immediately), then the
         host overlaps collection + admission bookkeeping with the running
         step.  Admissions take effect on the next tick's step (the splice is
-        queued behind the step via its data dependency on the caches)."""
+        queued behind the step via its data dependency on the caches).
+
+        Fault tolerance wraps the loop: on the ``health_every`` cadence the
+        tick first consults ``ft.health.check_devices`` (with scripted
+        faults overlaid), the dispatch is retried with backoff on transient
+        failures, and the tick wall time feeds the ``StragglerMonitor``;
+        every escalation converges on :meth:`_evacuate`."""
+        self._tick_no += 1
+        t = self._tick_no
+        if self.health_every and t % self.health_every == 0:
+            self._health_gate(t)
+
+        t_start = time.perf_counter()
         dispatched = None
         if any(r is not None for r in self.slot_req):
-            if self.paged:
-                # per-tick write plan: lazy chain growth at block
-                # boundaries, copy-on-write for shared tails, trash for
-                # inactive slots (their junk writes stay unobservable)
-                bids = np.empty(self.num_slots, np.int32)
-                copies = []
-                for s in range(self.num_slots):
-                    bids[s], cp = self.pool.write_plan(
-                        s, self.slot_req[s] is not None)
-                    copies.extend(cp)
-                if copies:
-                    # pad to a fixed width (<= 1 COW per slot per tick)
-                    # with trash self-copies so the jitted copy compiles
-                    # exactly once
-                    copies += [(blockpool.TRASH_BLOCK,
-                                blockpool.TRASH_BLOCK)] * \
-                        (self.num_slots - len(copies))
-                    self.caches = self._copy(
-                        self.caches,
-                        jnp.asarray([c[0] for c in copies], jnp.int32),
-                        jnp.asarray([c[1] for c in copies], jnp.int32))
-                tok, caches, pos = self._decode(
-                    self.params, self._tok, self.caches, self._pos,
-                    jnp.asarray(self.pool.table), jnp.asarray(bids))
-            else:
-                tok, caches, pos = self._decode(self.params, self._tok,
-                                                self.caches, self._pos)
-            # the old cache buffer was donated — replace references now
-            self.caches, self._tok, self._pos = caches, tok, pos
-            dispatched = (tok, list(self.slot_req))
-            self.stats.ticks += 1
+            dispatched = self._dispatch_with_retry(t)
 
         processed = self._inflight is not None
         if processed:
             self._collect(self._inflight)
         self._inflight = dispatched
 
+        if dispatched is not None:
+            if self._straggler_skip:
+                self._straggler_skip -= 1       # compile tick: not baseline
+            else:
+                # the tick critical path (dispatch + overlapped collection)
+                rep = self.straggler.observe(t,
+                                             time.perf_counter() - t_start)
+                if rep.action != "ok":
+                    self._on_straggler(t, rep)
+
         admitted = self._admit_batch()
         return dispatched is not None or processed or admitted > 0
+
+    # -- fault handling -------------------------------------------------------
+
+    def _log_event(self, kind: str, **fields):
+        self.ft_events.append({"event": kind, **fields})
+
+    def _suspects(self) -> set:
+        """Device ids implicated by fired scripted faults — the only
+        attribution source for raise/stall failures (a real deployment
+        would read XLA error payloads here)."""
+        return (self.injector.suspect_devices()
+                if self.injector is not None else set())
+
+    def _health_gate(self, t: int):
+        """Proof-of-work health check over the engine's devices, scripted
+        faults overlaid; any unhealthy device escalates straight to
+        evacuation (a failed checksum is not a transient)."""
+        reports = ft_health.check_devices(self._devices)
+        if self.injector is not None:
+            reports = self.injector.apply_health(reports, self._devices, t)
+        self.stats.health_checks += 1
+        bad = [(r, d) for r, d in zip(reports, self._devices) if not r.ok]
+        if not bad:
+            return
+        self._log_event(
+            "health", tick=t,
+            failed=[{"device": r.device, "reason": r.reason.value,
+                     "detail": r.detail} for r, _ in bad])
+        self._evacuate(
+            tick=t,
+            reason="unhealthy devices: " + ", ".join(
+                f"{r.device}[{r.reason.value}]" for r, _ in bad),
+            bad={d.id for _, d in bad})
+
+    def _on_straggler(self, t: int, rep):
+        self._log_event("straggler", tick=t, action=rep.action,
+                        ratio=round(rep.ratio, 2),
+                        step_time=round(rep.step_time, 5),
+                        median=round(rep.median, 5))
+        if rep.action in ("remesh", "abort"):
+            self._evacuate(
+                tick=t,
+                reason=f"straggler {rep.action} "
+                       f"(tick {rep.ratio:.1f}x rolling median)",
+                bad=self._suspects())
+
+    def _evacuate(self, *, tick: int, reason: str, bad: set):
+        """Live evacuation: move every in-flight stream onto a surviving
+        mesh without dropping it.
+
+        1. flush the in-flight token transfer (the last healthy tick's
+           tokens belong to their streams),
+        2. snapshot per-request portable state — tokens emitted, position,
+           and (paged) the block chain, the host-side KV identity — and
+           fold each stream's generated prefix into its prompt,
+        3. pick the surviving mesh: ``ft.elastic.evacuation_mesh`` over
+           the non-implicated devices preserves the TP axis (survivors <
+           one TP group raises — restore from checkpoint instead); with no
+           device attribution the rebuild is in place (a process-level
+           fault, same devices),
+        4. ``Runtime.reshape()`` onto it — params take a host round-trip
+           so the rebuilt executables re-commit them — and rebuild the
+           data path,
+        5. requeue the snapshot at the queue head: standard admission
+           replays each prefix through prefill, so the continued streams
+           are the same f32 tokens the uninterrupted run emits.
+        """
+        if self.stats.evacuations >= self.max_evacuations:
+            raise RuntimeError(
+                f"giving up after {self.stats.evacuations} evacuations "
+                f"(latest trigger: {reason})")
+        t0 = time.perf_counter()
+        if self._inflight is not None:
+            self._collect(self._inflight)
+            self._inflight = None
+        live, chains = [], {}
+        for s in range(self.num_slots):
+            r = self.slot_req[s]
+            if r is None:
+                continue
+            if self.paged:
+                chains[r.rid] = self.pool.chain(s)
+            _fold_replay_prefix(r)
+            live.append(r)
+        bad = set(bad)
+        if self.mesh is not None and bad:
+            survivors = [d for d in self._devices if d.id not in bad]
+            new_mesh = ft_elastic.evacuation_mesh(
+                survivors, tp=self.plan.tp_size,
+                prefer_pods=self.plan.mesh_axes.get("pod", 1))
+        else:
+            new_mesh = self.mesh    # no attribution: rebuild in place
+        # params leave the (possibly dead) old placement via the host; the
+        # rebuilt executables re-commit them under the new mesh
+        self.params = jax.tree.map(jax.device_get, self.params)
+        self.rt = self.rt.reshape(mesh=new_mesh)
+        self._build_data_path()
+        for r in reversed(live):
+            self.queue.appendleft(r)
+        # the new mesh's tick times are a new distribution — don't judge
+        # them against the old rolling median
+        self.straggler.reset()
+        self.stats.evacuations += 1
+        self._log_event(
+            "evacuate", tick=tick, reason=reason, requeued=len(live),
+            replayed=[r.rid for r in live], kv_chains=chains or None,
+            mesh=(dict(zip(self.mesh.axis_names,
+                           self.mesh.devices.shape))
+                  if self.mesh is not None else None),
+            latency_s=round(time.perf_counter() - t0, 4))
+
+    # -- warm restart ---------------------------------------------------------
+
+    def snapshot(self) -> EngineSnapshot:
+        """Warm-restart snapshot: every in-flight (slot order) and queued
+        request in replay-ready form.  Flushes the in-flight token
+        transfer first — a snapshot must not lose the already-dispatched
+        tick — so taking one advances the engine by the tokens it had
+        computed; device caches are deliberately NOT captured (restore
+        replays prompts through prefill, same contract as evacuation)."""
+        if self._inflight is not None:
+            self._collect(self._inflight)
+            self._inflight = None
+        live = [r for r in self.slot_req if r is not None]
+        reqs = []
+        for r in list(live) + list(self.queue):
+            _fold_replay_prefix(r)
+            reqs.append({"rid": int(r.rid),
+                         "prompt": [int(x) for x in np.asarray(r.prompt)],
+                         "generated": [int(x) for x in r.generated],
+                         "max_new_tokens": int(r.max_new_tokens),
+                         "eos_id": int(r.eos_id)})
+        return EngineSnapshot(
+            requests=reqs,
+            stats={k: getattr(self.stats, k)
+                   for k in ("ticks", "tokens_out", "admitted", "finished",
+                             "prefill_calls", "evacuations", "tick_retries",
+                             "health_checks")},
+            meta={"arch": self.cfg.name, "kv_layout": self.kv_layout,
+                  "capacity": self.capacity, "num_slots": self.num_slots,
+                  "tick": self._tick_no})
+
+    def load_snapshot(self, snap: EngineSnapshot) -> int:
+        """Warm restart: requeue a snapshot's requests into this idle
+        engine; each replays through standard prefill admission and
+        continues its stream (``folded`` marks the whole ``generated``
+        prefix as already in the prompt).  Returns the request count."""
+        if any(r is not None for r in self.slot_req) or self.queue:
+            raise RuntimeError(
+                "load_snapshot needs an idle engine (no live slots, empty "
+                "queue) — restore into a freshly built engine")
+        if snap.meta.get("arch") not in (None, self.cfg.name):
+            raise ValueError(
+                f"snapshot was taken on arch {snap.meta.get('arch')!r} but "
+                f"this engine serves {self.cfg.name!r}")
+        for d in snap.requests:
+            gen = list(d.get("generated", []))
+            self.submit(Request(
+                rid=int(d["rid"]),
+                prompt=np.asarray(d["prompt"], np.int32),
+                max_new_tokens=int(d["max_new_tokens"]),
+                eos_id=int(d.get("eos_id", -1)),
+                generated=gen, folded=len(gen)))
+        return len(snap.requests)
 
     def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
         for _ in range(max_ticks):
