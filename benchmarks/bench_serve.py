@@ -37,6 +37,14 @@ devices via XLA_FLAGS) runs the fast engine with the Pallas decode kernel
 under the shard_map kernel dispatch on vs off (``partition="auto"`` vs
 ``"off"``) and *merges* a ``mesh`` section into the existing
 BENCH_serve.json, so the plain-run numbers survive.
+
+``--scheduler`` runs the SLO comparison instead: one mixed
+long-prompt/decode load on the monolithic engine vs the token-budget
+continuous-batching scheduler (serve/scheduler.py, chunked prefill
+interleaved with decode).  Token streams must match bitwise (f32), the
+scheduler's ITL p95 must be >= 3x better, and an ``slo`` section with
+TTFT/ITL/queue-wait p50/p95/p99 for both configurations is merged into
+BENCH_serve.json.
 """
 from __future__ import annotations
 
@@ -183,7 +191,9 @@ def _run(make_engine, cfg, n_requests, shared_prefix=0) -> dict:
 def _lat_fields(res: dict, prefix: str = "") -> dict:
     lat = res.get("latency", {})
     return {f"{prefix}{k}_ms": round(lat[k] * 1e3, 3)
-            for k in ("ttft_p50", "ttft_p95", "itl_p50", "itl_p95")
+            for k in ("ttft_p50", "ttft_p95", "ttft_p99",
+                      "itl_p50", "itl_p95", "itl_p99",
+                      "queue_wait_p50", "queue_wait_p95", "queue_wait_p99")
             if k in lat}
 
 
@@ -314,6 +324,102 @@ def main(smoke: bool = False, kv_layout: str = "dense"):
 
 
 
+def _sched_requests(cfg, *, chat, chat_new, floods, flood_len, flood_new,
+                    seed=1):
+    """Mixed load for the SLO section: ``chat`` short-prompt/long-decode
+    streams (the latency-sensitive traffic) plus ``floods`` long-prompt/
+    short-decode requests (the head-of-line blockers).  In the monolithic
+    engine every flood admission runs its whole prompt through one prefill
+    call while the chat streams sit stalled — that stall IS the ITL tail
+    the scheduler's chunking removes."""
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=8,
+                                        dtype=np.int32),
+                    max_new_tokens=chat_new)
+            for i in range(chat)]
+    reqs += [Request(rid=chat + j,
+                     prompt=rng.integers(0, cfg.vocab_size, size=flood_len,
+                                         dtype=np.int32),
+                     max_new_tokens=flood_new)
+             for j in range(floods)]
+    return reqs
+
+
+def _run_mixed(make_engine, cfg, load_kw) -> dict:
+    warm = make_engine()
+    for r in _sched_requests(cfg, **{**load_kw, "chat": 1, "floods": 2},
+                             seed=99):
+        warm.submit(r)
+    warm.run_to_completion(max_ticks=100_000)
+
+    eng = make_engine()
+    reqs = _sched_requests(cfg, **load_kw)
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_ticks=100_000)
+    wall = time.perf_counter() - t0
+    assert len(eng.finished) == len(reqs), len(eng.finished)
+    return {"wall": wall, "tok_s": eng.stats.tokens_out / wall,
+            "latency": eng.latency_summary(),
+            "chunk_ticks": eng.stats.chunk_ticks,
+            "streams": {r.rid: list(r.generated) for r in eng.finished}}
+
+
+def main_scheduler(smoke: bool = False):
+    """Scheduler SLO section: the same mixed long-prompt/decode load on the
+    monolithic engine vs the token-budget scheduler, f32 both ways so the
+    token streams must match bit-for-bit.  Merges an ``slo`` section
+    (TTFT/ITL/queue-wait p50/p95/p99 for both configurations) into
+    BENCH_serve.json and asserts the scheduler's ITL p95 is >= 3x better."""
+    num_slots, capacity = 4, 512
+    token_budget, chunk_size = 32, 16
+    load_kw = dict(chat=2, chat_new=48 if smoke else 96,
+                   floods=6 if smoke else 12,
+                   flood_len=192 if smoke else 384, flood_new=8)
+
+    rt = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
+                        capacity=capacity)
+    mono = _run_mixed(lambda: rt.engine(num_slots=num_slots,
+                                        attn_impl="ref"),
+                      rt.cfg, load_kw)
+    rt_s = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
+                          capacity=capacity, scheduler=True,
+                          sched_kw=dict(token_budget=token_budget,
+                                        chunk_size=chunk_size))
+    sched = _run_mixed(lambda: rt_s.engine(num_slots=num_slots,
+                                           attn_impl="ref"),
+                       rt_s.cfg, load_kw)
+
+    assert mono["streams"] == sched["streams"], \
+        "scheduler changed a token stream (must be bitwise-identical in f32)"
+    mono_p95 = mono["latency"]["itl_p95"]
+    sched_p95 = sched["latency"]["itl_p95"]
+    gain = mono_p95 / max(sched_p95, 1e-9)
+    emit("serve_sched_itl_p95_us", sched_p95 * 1e6,
+         f"monolithic_us={mono_p95 * 1e6:.1f} gain={gain:.2f}x")
+    print(f"# scheduler SLO: ITL p95 {mono_p95 * 1e3:.2f} ms -> "
+          f"{sched_p95 * 1e3:.2f} ms ({gain:.1f}x better), "
+          f"{sched['chunk_ticks']} chunk ticks, streams identical",
+          flush=True)
+    merge_bench_json(BENCH_JSON, {"slo": {
+        "smoke": smoke, "num_slots": num_slots, "capacity": capacity,
+        "load": {k: v for k, v in load_kw.items()},
+        "monolithic": {"tokens_per_s": round(mono["tok_s"], 2),
+                       **_lat_fields(mono)},
+        "scheduler": {"token_budget": token_budget,
+                      "chunk_size": chunk_size,
+                      "chunk_ticks": sched["chunk_ticks"],
+                      "tokens_per_s": round(sched["tok_s"], 2),
+                      **_lat_fields(sched)},
+        "itl_p95_gain": round(gain, 2),
+        "streams_identical": True,
+    }})
+    assert gain >= 3.0, \
+        f"scheduler ITL p95 only {gain:.2f}x better (need >= 3x)"
+
+
 def main_mesh(mesh_spec: str, smoke: bool = False):
     """Sharded-vs-replicated serve decode on ``mesh_spec`` (qwen3-4b:
     heads-mode GQA whose KV heads divide a 2-way model axis, so the decode
@@ -369,8 +475,15 @@ if __name__ == "__main__":
                     help="mesh spec (e.g. 2x2): run sharded-vs-replicated "
                          "decode and merge a 'mesh' section into "
                          "BENCH_serve.json (skips the plain sections)")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="run the scheduler SLO comparison (monolithic vs "
+                         "token-budget chunked prefill) and merge an 'slo' "
+                         "section into BENCH_serve.json (skips the plain "
+                         "sections)")
     ns = ap.parse_args()
     if ns.mesh:
         main_mesh(ns.mesh, smoke=ns.smoke)
+    elif ns.scheduler:
+        main_scheduler(smoke=ns.smoke)
     else:
         main(smoke=ns.smoke, kv_layout=ns.kv_layout)

@@ -19,7 +19,13 @@
 # which merge sharded-vs-replicated numbers into the BENCH jsons, and
 # (f) the 8-device fault-injection gate: tests/test_ft_serve.py drives
 # scripted faults through health-gated evacuation onto a surviving mesh
-# (2x4 -> 1x4) with token-identical streams and zero drops.
+# (2x4 -> 1x4) with token-identical streams and zero drops, and (g) the
+# continuous-batching scheduler gate: tests/test_scheduler.py (chunked
+# prefill == monolithic token parity, WRR/aging policy, mid-prefill
+# evacuation replay; re-run under the 8-device mesh) plus the bench
+# --scheduler SLO smoke, which asserts the scheduler's ITL p95 is >= 3x
+# better than monolithic admission under a mixed long-prompt/decode load
+# and merges the 'slo' section into BENCH_serve.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -44,7 +50,7 @@ echo "== tier-1 pytest =="
 # standalone)
 python -m pytest -x -q --ignore=tests/test_registry.py \
     --ignore=tests/test_paged.py --ignore=tests/test_partition.py \
-    --ignore=tests/test_ft_serve.py
+    --ignore=tests/test_ft_serve.py --ignore=tests/test_scheduler.py
 
 echo "== serve fast-path smoke benchmark (dense + paged engines) =="
 # --kv-layout paged adds the dense-vs-paged section and asserts the paged
@@ -77,5 +83,20 @@ echo "== 8-device fault-injection gate =="
 # under plain tier-1
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -q tests/test_ft_serve.py
+
+echo "== continuous-batching scheduler gate =="
+# chunked-prefill-interleaved-with-decode acceptance: token streams must
+# be bitwise-identical to the monolithic engine (dense + paged), the
+# WRR/aging policy invariants must hold, and a mid-prefill evacuation
+# must replay the partially-prefilled prompt exactly once.  Runs on the
+# real single device first, then again under the forced 8-device mesh
+# so the chunked mixed step is exercised through the partition layer.
+python -m pytest -q tests/test_scheduler.py
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_scheduler.py
+# SLO smoke: monolithic vs scheduler on a mixed long-prompt/decode load;
+# asserts ITL p95 >= 3x better with identical streams and merges the
+# 'slo' section into BENCH_serve.json
+python -m benchmarks.bench_serve --smoke --scheduler
 
 echo "CI OK"

@@ -47,12 +47,26 @@ def main(argv=None):
                     help="scripted fault plan (ft/inject.py grammar, e.g. "
                          "'tick=6,kind=raise,times=3'); defaults to "
                          "$REPRO_FAULT_PLAN")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="token-budget continuous batching: chunked prefill "
+                         "interleaved with decode (serve/scheduler.py)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="scheduler per-tick token budget (0 = default)")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="scheduler prefill chunk length (0 = default)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = mesh_from_spec(args.mesh) if args.mesh else None
+    sched_kw = {}
+    if args.token_budget:
+        sched_kw["token_budget"] = args.token_budget
+    if args.chunk_size:
+        sched_kw["chunk_size"] = args.chunk_size
     rt = Runtime.create(cfg, mesh, shape_kind="decode",
-                        capacity=args.capacity)
+                        capacity=args.capacity,
+                        scheduler=args.scheduler,
+                        sched_kw=sched_kw or None)
     print(rt.describe(), flush=True)
 
     if mesh and not args.no_preflight:
@@ -86,6 +100,10 @@ def main(argv=None):
         pick = lambda xs, q: xs[min(len(xs) - 1, int(q * len(xs)))]
         print(f"latency  p50={pick(lat, .5):.3f}s p95={pick(lat, .95):.3f}s")
         print(f"ttft     p50={pick(ttft, .5):.3f}s p95={pick(ttft, .95):.3f}s")
+        ls = eng.latency_summary()
+        print(f"itl      p50={ls['itl_p50']:.4f}s p95={ls['itl_p95']:.4f}s "
+              f"p99={ls['itl_p99']:.4f}s  "
+              f"queue_wait p95={ls['queue_wait_p95']:.4f}s")
     print("done")
 
 

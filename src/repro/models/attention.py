@@ -276,22 +276,30 @@ def paged_pallas_supported(cfg: ModelConfig) -> bool:
 def _jnp_decode_attend(q, k_cache, v_cache, kv_positions, pos,
                        cfg: ModelConfig, cross: bool = False):
     """The reference decode-attention math shared by the dense and paged
-    layouts: q [B,1,H,Dh] against grouped caches [B,T,KV,Dh] with
-    positional masking (kv_positions [B,T]; -1 = empty) -> out [B,1,H,Dh].
+    layouts: q [B,S,H,Dh] against grouped caches [B,T,KV,Dh] with
+    positional masking (kv_positions [B,T]; -1 = empty) -> out [B,S,H,Dh].
+
+    ``pos`` is [B] (the classic one-token decode step, S == 1) or [B,S]
+    per-query absolute positions (the chunked-prefill append path — each
+    query attends to every cache entry at or before its own position, so
+    causality *within* the chunk falls out of the same positional mask,
+    provided the chunk's K/V entries are written before attending).
     """
-    B = q.shape[0]
+    B, S = q.shape[0], q.shape[1]
     H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = H // KV
-    q = q.reshape(B, 1, KV, G, Dh)
+    q = q.reshape(B, S, KV, G, Dh)
     if cross:
-        mask = (kv_positions >= 0)[:, None, None, None, :]          # [B,1,1,1,T]
+        mask = (kv_positions >= 0)[:, None, None, None, :]      # [B,1,1,1,T]
     else:
-        valid = kv_positions >= 0
-        within = kv_positions <= pos[:, None]
+        q_pos = pos[:, None] if pos.ndim == 1 else pos          # [B,S]
+        valid = (kv_positions >= 0)[:, None, :]                 # [B,1,T]
+        within = kv_positions[:, None, :] <= q_pos[:, :, None]  # [B,S,T]
         mask = valid & within
         if cfg.sliding_window is not None:
-            mask &= kv_positions > (pos[:, None] - cfg.sliding_window)
-        mask = mask[:, None, None, None, :]
+            mask &= kv_positions[:, None, :] > \
+                (q_pos[:, :, None] - cfg.sliding_window)
+        mask = mask[:, None, None, :, :]                        # [B,1,1,S,T]
 
     scale = Dh ** -0.5
     s = jnp.einsum("bskgd,btkd->bkgst", q, k_cache).astype(jnp.float32) * scale
@@ -300,7 +308,7 @@ def _jnp_decode_attend(q, k_cache, v_cache, kv_positions, pos,
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgst,btkd->bskgd", p, v_cache)
-    return out.reshape(B, 1, H, Dh)
+    return out.reshape(B, S, H, Dh)
 
 
 def attention_decode(x: jax.Array, params: dict, cfg: ModelConfig, *,
@@ -433,5 +441,116 @@ def attention_decode_paged(x: jax.Array, params: dict, cfg: ModelConfig, *,
         v = v_pool[flat].reshape(B, M * bs, KV, Dh)
         kvp = pos_pool[flat].reshape(B, M * bs)
         out = _jnp_decode_attend(q, k, v, kvp, pos, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, k_pool, v_pool, pos_pool
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill append (C tokens against a KV cache; scheduler fast path)
+# ---------------------------------------------------------------------------
+
+
+PAD_POS = 2 ** 30
+"""Pad-token position sentinel for chunked prefill.
+
+A chunk is a fixed [B, C] window; when fewer than C prompt tokens remain,
+the tail is padded and the pad tokens carry this position.  Everything
+downstream then neutralizes them for free: the dense cache write at index
+``PAD_POS`` is an out-of-bounds scatter XLA drops, the paged write lands in
+the TRASH block (the caller's write_bids), rope/softmax of a huge position
+stay finite, and the pad rows' outputs are never read (``last_index``)."""
+
+
+def _project_chunk_kv(x, params, cfg: ModelConfig, positions):
+    """Shared q/k/v projection + qk-norm + rope for a chunk append.
+    x [B,C,D], positions [B,C] absolute (PAD_POS on pads)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm and "q_norm" in params:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_chunk_append(x: jax.Array, params: dict, cfg: ModelConfig, *,
+                           k_cache: jax.Array, v_cache: jax.Array,
+                           kv_positions: jax.Array, positions: jax.Array,
+                           reset: jax.Array):
+    """Append a prompt chunk to a dense KV cache and attend.
+
+    x [B,C,D] chunk tokens' hidden states; caches [B,T,KV,Dh]; positions
+    [B,C] the chunk's absolute positions (``PAD_POS`` on pads — their cache
+    writes are out-of-bounds scatters XLA drops); reset [B] bool — True on
+    a request's *first* chunk, clearing the slot row's stale positions so
+    a recycled slot's junk can never pass the positional mask as phantoms.
+
+    The chunk's K/V are written before attending, so every query sees the
+    prefix cached by earlier chunks plus the chunk itself causally (the
+    per-query positional mask in ``_jnp_decode_attend``).  Non-SWA only:
+    write indices are absolute positions (the capability gate
+    ``supports_chunked_prefill`` rules ring buffers out).
+
+    Returns (y [B,C,D], k_cache', v_cache', kv_positions').
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_chunk_kv(x, params, cfg, positions)
+
+    kv_positions = jnp.where(reset[:, None], -1, kv_positions)
+    b = jnp.arange(B)[:, None]
+    k_cache = k_cache.at[b, positions].set(k_new)
+    v_cache = v_cache.at[b, positions].set(v_new)
+    kv_positions = kv_positions.at[b, positions].set(positions)
+
+    out = _jnp_decode_attend(q, k_cache, v_cache, kv_positions, positions,
+                             cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, k_cache, v_cache, kv_positions
+
+
+def attention_chunk_append_paged(x: jax.Array, params: dict,
+                                 cfg: ModelConfig, *,
+                                 k_pool: jax.Array, v_pool: jax.Array,
+                                 pos_pool: jax.Array,
+                                 block_table: jax.Array,
+                                 write_bids: jax.Array,
+                                 positions: jax.Array):
+    """Append a prompt chunk to a *paged* KV pool and attend.
+
+    x [B,C,D]; pools [N,bs,KV,Dh] / pos_pool [N,bs]; block_table [B,M] the
+    chunk owner's chain; write_bids [B,C] per-token destination blocks —
+    TRASH for pads *and* for shared prefix blocks (content-cache hits were
+    already written by their first owner; skipping the write is what makes
+    sharing safe).  Block offsets are ``positions % bs``; a token landing
+    at offset 0 of a fresh block first clears that block's position row
+    (recycled storage — same contract as the one-token paged decode).
+
+    Returns (y [B,C,D], k_pool', v_pool', pos_pool').
+    """
+    B = x.shape[0]
+    bs = k_pool.shape[1]
+    M = block_table.shape[1]
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    q, k_new, v_new = _project_chunk_kv(x, params, cfg, positions)
+
+    off = (positions % bs).astype(jnp.int32)                    # [B,C]
+    # clear fresh blocks' stale position rows before any chunk write; pads
+    # and shared blocks carry TRASH write_bids, so their "clear" hits the
+    # trash block (unobservable); tokens past offset 0 redirect their clear
+    # there too (TRASH_BLOCK = 1, serve/blockpool.py)
+    clear = jnp.where(off == 0, write_bids, jnp.ones_like(write_bids))
+    pos_pool = pos_pool.at[clear].set(-1)
+    k_pool = k_pool.at[write_bids, off].set(k_new)
+    v_pool = v_pool.at[write_bids, off].set(v_new)
+    pos_pool = pos_pool.at[write_bids, off].set(positions)
+
+    flat = block_table.reshape(-1)
+    k = k_pool[flat].reshape(B, M * bs, KV, Dh)
+    v = v_pool[flat].reshape(B, M * bs, KV, Dh)
+    kvp = pos_pool[flat].reshape(B, M * bs)
+    out = _jnp_decode_attend(q, k, v, kvp, positions, cfg)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return y, k_pool, v_pool, pos_pool

@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import ssm as ssm_mod
-from repro.models.attention import (attention, attention_decode,
+from repro.models.attention import (attention, attention_chunk_append,
+                                    attention_chunk_append_paged,
+                                    attention_decode,
                                     attention_decode_paged, attention_specs)
 from repro.models.common import LayerGroup, ModelConfig, PSpec, is_pspec
 from repro.models.layers import rmsnorm, rmsnorm_spec
@@ -286,3 +288,61 @@ def run_groups_decode(x, group_params: list, caches: list, cfg: ModelConfig, *,
 
 def kind_cache_key(kind: str) -> str:
     return "attn" if kind.startswith("attn") else "ssm"
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (C tokens appended to the caches; scheduler fast path)
+# ---------------------------------------------------------------------------
+
+
+def block_chunk(kind: str, x, p, cfg: ModelConfig, cache: dict, *,
+                positions, reset, paged=None):
+    """One block, one prompt chunk [B,C].  Returns (x, new_cache).
+
+    Attention-family blocks only (the ``supports_chunked_prefill``
+    capability gate): recurrent mixers would need a sequential in-chunk
+    scan, which is exactly the full-prefill path this mode replaces."""
+    if not kind.startswith("attn") or kind == "attn_cross":
+        raise ValueError(
+            f"chunked prefill only supports self-attention blocks; "
+            f"got block kind {kind!r}")
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if paged is not None:
+        a, kc, vc, kp = attention_chunk_append_paged(
+            h, p["attn"], cfg, k_pool=cache["k"], v_pool=cache["v"],
+            pos_pool=cache["pos"], block_table=paged["block_table"],
+            write_bids=paged["write_bids"], positions=positions)
+    else:
+        a, kc, vc, kp = attention_chunk_append(
+            h, p["attn"], cfg, k_cache=cache["k"], v_cache=cache["v"],
+            kv_positions=cache["pos"], positions=positions, reset=reset)
+    cache = dict(cache, k=kc, v=vc, pos=kp)
+    x = x + a
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if kind == "attn_moe":
+        f, _ = moe_ffn(h2, p["ffn"], cfg, cfg.moe)
+    else:
+        f = mlp(h2, p["ffn"], cfg)
+    x = x + f
+    return x, cache
+
+
+def run_groups_chunk(x, group_params: list, caches: list, cfg: ModelConfig, *,
+                     positions, reset, paged=None):
+    """One prompt-chunk step through all groups; caches updated
+    functionally — the chunk analog of :func:`run_groups_decode` (same
+    scan threading, C queries instead of one)."""
+    new_caches = []
+    for group, gp, gc in zip(cfg.groups, group_params, caches):
+
+        def body(xx, scanned):
+            layer_p, layer_c = scanned
+            for j, kind in enumerate(group.pattern):
+                xx, layer_c[f"sub{j}"] = block_chunk(
+                    kind, xx, layer_p[f"sub{j}"], cfg, layer_c[f"sub{j}"],
+                    positions=positions, reset=reset, paged=paged)
+            return xx, layer_c
+
+        x, nc = jax.lax.scan(body, x, (gp, gc))
+        new_caches.append(nc)
+    return x, new_caches

@@ -12,7 +12,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.blocks import group_specs, run_groups, run_groups_decode
+from repro.models.blocks import (group_specs, run_groups, run_groups_chunk,
+                                 run_groups_decode)
 from repro.models.common import ModelConfig, PSpec
 from repro.models.layers import (chunked_softmax_xent, cross_entropy,
                                  embedding_spec, lm_head, rmsnorm,
@@ -123,6 +124,33 @@ def lm_loss(params, batch: dict, cfg: ModelConfig, *,
         ce = cross_entropy(logits, labels)
     loss = ce + aux
     return loss, {"loss": loss, "ce": ce, "moe_aux": aux}
+
+
+def lm_chunk_prefill(params, tokens, caches, cfg: ModelConfig, *,
+                     positions, reset, last_index, paged=None):
+    """tokens [B,C] (one prompt chunk, pad positions = PAD_POS) ->
+    (logits [B,1,V], new caches).
+
+    Chunked prefill: appends C tokens of KV into the decode caches at
+    absolute ``positions`` [B,C] and attends with per-query positional
+    masking — interleaved with decode ticks by the serve scheduler.
+    ``reset`` [B] bool clears a slot's cache row before the first chunk
+    (dense layout; paged slots are cleared via the block pool).
+    ``last_index`` [B] gathers each row's final real-token logits."""
+    emb_pos = None
+    if cfg.pos_emb == "learned":
+        # clip the PAD_POS sentinel so the gather stays in-table; pad
+        # outputs are never read (last_index points at real tokens)
+        emb_pos = jnp.minimum(positions, cfg.max_position_embeddings - 1)
+    x = _embed(params, tokens, cfg, positions=emb_pos)
+    x, caches = run_groups_chunk(x, params["groups"], caches, cfg,
+                                 positions=positions, reset=reset,
+                                 paged=paged)
+    x = jnp.take_along_axis(
+        x, last_index.astype(jnp.int32)[:, None, None], axis=1)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(x, _unembed_table(params, cfg), cfg)
+    return logits, caches
 
 
 def lm_decode_step(params, token, caches, cfg: ModelConfig, *,

@@ -73,6 +73,7 @@ class Capabilities:
     supports_flash_train: bool   # Pallas train/prefill flash-attn expressible
     supports_fused_ffn: bool     # Pallas fused SwiGLU (dense FFN) expressible
     supports_paged_decode: bool  # pooled block-table KV layout expressible
+    supports_chunked_prefill: bool = False  # scheduler chunk-append step
     num_heads: int = 0           # q heads (post-GQA-repeat kernel head count)
     num_kv_heads: int = 0        # grouped KV heads (decode-cache head axis)
     ffn_columns: int = 0         # dense d_ff (fused-FFN column axis)
@@ -101,7 +102,8 @@ class Capabilities:
         on = [n for n in ("has_encoder", "has_frontend", "swa", "softcap",
                           "subquadratic", "supports_flash_decode",
                           "supports_flash_train", "supports_fused_ffn",
-                          "supports_paged_decode")
+                          "supports_paged_decode",
+                          "supports_chunked_prefill")
               if getattr(self, n)]
         return ",".join(on) or "-"
 
@@ -126,6 +128,10 @@ class ModelFamily:
                         pos, block_table, write_bids)     -> (logits, caches)
         (optional — families whose decode state can live in the pooled
         paged-KV layout; caches are then serve/blockpool.py pools)
+      chunk_prefill(params, tokens, caches, cfg, *,
+                    positions, reset, last_index, paged)  -> (logits, caches)
+        (optional — appends one [B,C] prompt chunk into decode caches at
+        absolute positions; the serve scheduler's interleaved-prefill step)
     """
 
     name: str
@@ -137,6 +143,7 @@ class ModelFamily:
     prefill: Callable
     decode_step: Callable
     paged_decode_step: Optional[Callable] = None
+    chunk_prefill: Optional[Callable] = None
 
     def capabilities(self, cfg: ModelConfig) -> Capabilities:
         return Capabilities(
@@ -156,6 +163,15 @@ class ModelFamily:
             # carries softcap; only the Pallas paged kernel rules it out).
             supports_paged_decode=(
                 self.paged_decode_step is not None
+                and cfg.sliding_window is None
+                and all(k.startswith("attn") and k != "attn_cross"
+                        for g in cfg.groups for k in g.pattern)),
+            # Chunked prefill shares paged's structural law: pure
+            # self-attention stacks with absolute positions.  SWA would need
+            # ring-buffer chunk writes and recurrent mixers a sequential
+            # in-chunk scan — both stay on monolithic admission.
+            supports_chunked_prefill=(
+                self.chunk_prefill is not None
                 and cfg.sliding_window is None
                 and all(k.startswith("attn") and k != "attn_cross"
                         for g in cfg.groups for k in g.pattern)),
@@ -265,12 +281,20 @@ def _lm_paged_decode_step(params, token, caches, cfg: ModelConfig, *,
         paged={"block_table": block_table, "write_bids": write_bids})
 
 
+def _lm_chunk_prefill(params, tokens, caches, cfg: ModelConfig, *,
+                      positions, reset, last_index, paged=None):
+    return lm.lm_chunk_prefill(params, tokens, caches, cfg,
+                               positions=positions, reset=reset,
+                               last_index=last_index, paged=paged)
+
+
 LM_FAMILY = register_family(ModelFamily(
     name="lm", has_encoder=False,
     matches=lambda cfg: True,
     specs=lm.lm_specs, loss=_lm_loss, forward=_lm_forward,
     prefill=_lm_prefill, decode_step=_lm_decode_step,
     paged_decode_step=_lm_paged_decode_step,
+    chunk_prefill=_lm_chunk_prefill,
 ), fallback=True)
 
 
@@ -363,3 +387,19 @@ def model_paged_decode_step(params, token, caches, cfg: ModelConfig, *,
     return fam.paged_decode_step(params, token, caches, cfg, pos=pos,
                                  block_table=block_table,
                                  write_bids=write_bids)
+
+
+def model_chunk_prefill(params, tokens, caches, cfg: ModelConfig, *,
+                        positions, reset, last_index, paged=None):
+    """Append one [B,C] prompt chunk into decode caches at absolute
+    ``positions`` [B,C] (pad = models.attention.PAD_POS) and return the
+    per-row ``last_index`` logits.  ``paged`` = {"block_table",
+    "write_bids"} ([B,M] / [B,C]) switches to the pooled KV layout."""
+    fam = resolve(cfg)
+    if fam.chunk_prefill is None:
+        raise ValueError(
+            f"family {fam.name!r} has no chunked prefill step "
+            f"(caps.supports_chunked_prefill is False for {cfg.name!r})")
+    return fam.chunk_prefill(params, tokens, caches, cfg,
+                             positions=positions, reset=reset,
+                             last_index=last_index, paged=paged)

@@ -54,7 +54,8 @@ class Runtime:
                  family: registry.ModelFamily, mesh, plan: Plan, specs,
                  seq_len: int, capacity: int, attn_impl: str,
                  ffn_impl: str = "auto", kv_layout: str = "dense",
-                 partition: str = "auto",
+                 partition: str = "auto", scheduler: bool = False,
+                 sched_kw=None,
                  param_dtype=jnp.float32, seed: int = 0, params=None,
                  plan_kw=None):
         self.arch = arch
@@ -70,6 +71,8 @@ class Runtime:
         self.ffn_impl = ffn_impl            # requested; resolution is lazy
         self.kv_layout = kv_layout          # serve KV layout: dense | paged
         self.partition = partition          # shard_map kernel dispatch knob
+        self.scheduler = scheduler          # chunked-prefill serve scheduler
+        self.sched_kw = dict(sched_kw or {})  # token_budget/chunk_size/...
         self.param_dtype = param_dtype
         self.seed = seed
         self.plan_kw = dict(plan_kw or {})
@@ -84,7 +87,8 @@ class Runtime:
                seq_len: Optional[int] = None, capacity: Optional[int] = None,
                grad_sync: str = "hierarchical", attn_impl: str = "auto",
                ffn_impl: str = "auto", kv_layout: str = "dense",
-               partition: str = "auto",
+               partition: str = "auto", scheduler: bool = False,
+               sched_kw: Optional[dict] = None,
                param_dtype=jnp.float32, seed: int = 0, params=None,
                plan_kw: Optional[dict] = None) -> "Runtime":
         """Build the full chain for one cell.
@@ -103,6 +107,11 @@ class Runtime:
         dispatch (kernels.partition): "auto" runs each Pallas kernel on
         head-/column-/row-sharded operands when the mesh axes divide,
         "off" keeps today's replicated dispatch everywhere.
+        ``scheduler`` turns on the serve engine's token-budget chunked-
+        prefill scheduler (serve/scheduler.py; arch-gated by
+        ``caps.supports_chunked_prefill``, fails fast here) and
+        ``sched_kw`` carries its knobs (``token_budget``, ``chunk_size``,
+        ``class_weights``, ``aging_ticks``).
         """
         if isinstance(arch, ModelConfig):
             if smoke:
@@ -136,13 +145,21 @@ class Runtime:
             raise ValueError(
                 f"arch {cfg.name!r} does not support the paged KV layout "
                 f"(caps: {family.capabilities(cfg).summary})")
+        if scheduler and \
+                not family.capabilities(cfg).supports_chunked_prefill:
+            raise ValueError(
+                f"arch {cfg.name!r} does not support chunked prefill "
+                f"(caps: {family.capabilities(cfg).summary}); the serve "
+                f"scheduler needs a pure self-attention, non-SWA stack — "
+                f"use scheduler=False")
         from repro.kernels.partition import resolve_kernel_partition
         resolve_kernel_partition(partition)    # fail fast on bad values
         return cls(arch=name, cfg=cfg, family=family, mesh=mesh, plan=plan,
                    specs=family.specs(cfg), seq_len=seq_len,
                    capacity=capacity, attn_impl=attn_impl,
                    ffn_impl=ffn_impl, kv_layout=kv_layout,
-                   partition=partition,
+                   partition=partition, scheduler=scheduler,
+                   sched_kw=sched_kw,
                    param_dtype=param_dtype, seed=seed, params=params,
                    plan_kw=plan_kw)
 
@@ -156,6 +173,8 @@ class Runtime:
                 ffn_impl: Optional[str] = None,
                 kv_layout: Optional[str] = None,
                 partition: Optional[str] = None,
+                scheduler: Optional[bool] = None,
+                sched_kw: Optional[dict] = None,
                 plan_kw: Optional[dict] = None) -> "Runtime":
         """A new Runtime over the same cfg/params with a re-planned fabric
         mapping (e.g. train -> decode); materialized params and the original
@@ -183,6 +202,8 @@ class Runtime:
             ffn_impl=ffn_impl if ffn_impl is not None else self.ffn_impl,
             kv_layout=kv_layout if kv_layout is not None else self.kv_layout,
             partition=partition if partition is not None else self.partition,
+            scheduler=scheduler if scheduler is not None else self.scheduler,
+            sched_kw={**self.sched_kw, **(sched_kw or {})},
             param_dtype=self.param_dtype, seed=self.seed,
             params=params, plan_kw={**self.plan_kw, **(plan_kw or {})})
 
@@ -252,6 +273,23 @@ class Runtime:
     def make_paged_decode_step(self, *,
                                attn_impl: Optional[str] = None) -> Callable:
         return serve_steps.make_paged_decode_step(
+            self.cfg, self.plan, self.mesh,
+            attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
+            partition=self.partition)
+
+    def make_mixed_step(self, *, attn_impl: Optional[str] = None) -> Callable:
+        """Scheduler mixed step (decode tick + one prefill chunk), dense
+        KV layout — see serve/steps.make_mixed_step."""
+        return serve_steps.make_mixed_step(
+            self.cfg, self.plan, self.mesh,
+            attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
+            partition=self.partition)
+
+    def make_paged_mixed_step(self, *,
+                              attn_impl: Optional[str] = None) -> Callable:
+        """Scheduler mixed step, paged KV layout — see
+        serve/steps.make_paged_mixed_step."""
+        return serve_steps.make_paged_mixed_step(
             self.cfg, self.plan, self.mesh,
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
             partition=self.partition)
@@ -383,8 +421,11 @@ class Runtime:
 
         ``kv_layout`` defaults to the Runtime's own knob; ``engine_kw``
         forwards the paged-pool sizing (``block_size``, ``num_blocks``,
-        ``max_blocks_per_seq``, ``admit_window``) and the fault-tolerance
-        knobs (``health_every``, ``injector``, ``tick_retries``,
+        ``max_blocks_per_seq``, ``admit_window``), the scheduler knobs
+        (``scheduler``, ``token_budget``, ``chunk_size``,
+        ``class_weights``, ``aging_ticks`` — defaulting to this Runtime's
+        ``scheduler``/``sched_kw``) and the fault-tolerance knobs
+        (``health_every``, ``injector``, ``tick_retries``,
         ``retry_backoff_s``, ``straggler_kw``, ``max_evacuations``)."""
         from repro.serve.engine import ServeEngine
         return ServeEngine(self, num_slots=num_slots, capacity=capacity,
@@ -468,7 +509,12 @@ class Runtime:
             f"paged_decode_ok={self.caps.supports_paged_decode}",
             f"  serve     : capacity={self.capacity} "
             f"kv_layout={self.kv_layout} "
-            f"swa_bucketing={'exact' if self.caps.swa else 'pow2'}",
+            f"swa_bucketing={'exact' if self.caps.swa else 'pow2'} "
+            + ("scheduler[" + ", ".join(
+                   f"{k}={v}" for k, v in sorted(self.sched_kw.items()))
+               + ("]" if self.sched_kw else "defaults]")
+               if self.scheduler else "scheduler=off")
+            + f" chunked_prefill_ok={self.caps.supports_chunked_prefill}",
             self._ft_status(),
         ]
         from repro.kernels import partition as kernel_partition

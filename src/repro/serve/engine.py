@@ -137,7 +137,9 @@ from repro.ft import elastic as ft_elastic
 from repro.ft import health as ft_health
 from repro.ft.inject import FaultInjector
 from repro.ft.straggler import StragglerMonitor
+from repro.models.attention import PAD_POS
 from repro.serve import blockpool, kvcache
+from repro.serve.scheduler import Scheduler
 
 _FROM_ENV = object()     # injector default: build from REPRO_FAULT_PLAN
 
@@ -148,9 +150,12 @@ class Request:
     prompt: np.ndarray               # [S] int32
     max_new_tokens: int = 16
     eos_id: int = -1                 # -1 = never
+    priority: int = 0                # scheduler class (lower id != higher
+    #                                  priority; weights are per-class knobs)
     # filled by the engine
     generated: list = field(default_factory=list)
     submitted_at: float = 0.0
+    admitted_at: float = 0.0         # queue exit (prefill start)
     first_token_at: float = 0.0
     finished_at: float = 0.0
     token_times: list = field(default_factory=list)   # decode-token arrivals
@@ -168,6 +173,7 @@ class EngineStats:
     admitted: int = 0
     finished: int = 0
     prefill_calls: int = 0
+    chunk_ticks: int = 0     # scheduler: mixed (decode + chunk) ticks
     # fault tolerance
     evacuations: int = 0
     tick_retries: int = 0
@@ -178,6 +184,8 @@ class EngineStats:
         s = (f"ticks={self.ticks} tokens={self.tokens_out} "
              f"admitted={self.admitted} finished={self.finished} "
              f"prefills={self.prefill_calls}")
+        if self.chunk_ticks:
+            s += f" chunk_ticks={self.chunk_ticks}"
         if self.evacuations or self.tick_retries or self.health_checks:
             s += (f" evacuations={self.evacuations} "
                   f"retries={self.tick_retries} "
@@ -210,6 +218,16 @@ def _seed_hot_loop(slots, tok, pos, next_tok, lengths):
         pos = jax.lax.dynamic_update_slice(
             pos, lengths[i:i + 1].astype(pos.dtype), (slots[i],))
     return tok, pos
+
+
+def _park_pos(pos, slot):
+    """Park one slot's device position at the PAD_POS sentinel (scheduler
+    mode): the lock-step decode keeps computing over every slot, but a
+    parked slot's cache write is an out-of-bounds scatter XLA drops — a
+    prefilling slot's incrementally built row is never clobbered by the
+    junk the monolithic engine relies on full-row admission splices to
+    overwrite."""
+    return pos.at[slot].set(PAD_POS)
 
 
 def _install_admitted(caches, part, slots, tok, pos, next_tok, lengths):
@@ -259,6 +277,11 @@ class ServeEngine:
                  num_blocks: Optional[int] = None,
                  max_blocks_per_seq: Optional[int] = None,
                  admit_window: Optional[int] = None,
+                 scheduler: Optional[bool] = None,
+                 token_budget: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
+                 class_weights: Optional[dict] = None,
+                 aging_ticks: Optional[int] = None,
                  health_every: int = 0, injector=_FROM_ENV,
                  tick_retries: int = 2, retry_backoff_s: float = 0.02,
                  straggler_kw: Optional[dict] = None,
@@ -291,6 +314,38 @@ class ServeEngine:
                 "silently ignore them)")
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
+        # chunked-prefill scheduler (serve/scheduler.py): knobs default to
+        # the Runtime's scheduler/sched_kw so Runtime.create(scheduler=True)
+        # flows through engine() untouched
+        self.scheduler = (scheduler if scheduler is not None
+                          else getattr(rt, "scheduler", False))
+        if self.scheduler and not self.caps.supports_chunked_prefill:
+            raise ValueError(
+                f"arch {rt.cfg.name!r} does not support chunked prefill "
+                f"(caps: {self.caps.summary}); the scheduler needs a pure "
+                f"self-attention, non-SWA stack — use scheduler=False")
+        if not self.scheduler and any(
+                v is not None for v in (token_budget, chunk_size,
+                                        class_weights, aging_ticks)):
+            raise ValueError(
+                "token_budget/chunk_size/class_weights/aging_ticks tune the "
+                "chunked-prefill scheduler; pass scheduler=True (a "
+                "monolithic engine would silently ignore them)")
+        if self.scheduler:
+            skw = dict(getattr(rt, "sched_kw", None) or {})
+            for k, v in (("token_budget", token_budget),
+                         ("chunk_size", chunk_size),
+                         ("class_weights", class_weights),
+                         ("aging_ticks", aging_ticks)):
+                if v is not None:
+                    skw[k] = v
+            self.sched = Scheduler(**skw)
+            if self.sched.chunk_size > capacity:
+                raise ValueError(
+                    f"chunk_size={self.sched.chunk_size} exceeds the decode "
+                    f"capacity {capacity}")
+        else:
+            self.sched = None
         # data-path build knobs, kept so an evacuation-time rebuild sizes
         # the new pool/caches identically to the originals
         self._attn_impl = attn_impl
@@ -360,6 +415,10 @@ class ServeEngine:
             self._decode = rt._bind_mesh(jax.jit(decode, **donate_kw))
             self._splice = jax.jit(_install_admitted_paged, **splice_kw)
             self._copy = jax.jit(blockpool.copy_blocks, **splice_kw)
+            if self.scheduler:
+                self._mixed = rt._bind_mesh(jax.jit(
+                    rt.make_paged_mixed_step(attn_impl=self._attn_impl),
+                    **donate_kw))
         else:
             self.pool = None
             self.caches = kvcache.init_cache(self.cfg, self.num_slots,
@@ -368,6 +427,10 @@ class ServeEngine:
                                          advance_pos=True)
             self._decode = rt._bind_mesh(jax.jit(decode, **donate_kw))
             self._splice = jax.jit(_install_admitted, **splice_kw)
+            if self.scheduler:
+                self._mixed = rt._bind_mesh(jax.jit(
+                    rt.make_mixed_step(attn_impl=self._attn_impl),
+                    **donate_kw))
         # slot state: host-side bookkeeping + device-resident hot-loop state
         self.slot_req: list[Optional[Request]] = [None] * self.num_slots
         # Diagnostic host mirror of per-request progress (next absolute pos,
@@ -377,11 +440,25 @@ class ServeEngine:
         self.slot_pos = np.zeros(self.num_slots, np.int32)
         self._tok = jnp.zeros((self.num_slots, 1), jnp.int32)  # last emitted
         self._pos = jnp.zeros((self.num_slots,), jnp.int32)
-        self._inflight = None   # (device tokens of step t-1, slot->req snap)
+        self._inflight = None   # (tokens of step t-1, slot->req snap,
+        #                          chunk-final (c_next, req, slot) | None)
+        # scheduler state: the one prompt mid-chunked-prefill (req, slot,
+        # consumed token count, paged per-column dst) and this tick's
+        # planned chunk
+        self._prefilling: Optional[dict] = None
+        self._chunk: Optional[dict] = None
+        if self.scheduler:
+            # park every (free) slot: see _park_pos
+            self._pos = jnp.full((self.num_slots,), PAD_POS, jnp.int32)
+            seed_kw = dict(donate_argnums=(1, 2)) if self._donate else {}
+            self._seed = jax.jit(_seed_hot_loop, **seed_kw)
+            park_kw = dict(donate_argnums=(0,)) if self._donate else {}
+            self._park = jax.jit(_park_pos, **park_kw)
         # the first dispatch after a (re)build is a compile tick — orders
         # of magnitude above steady state; feeding it to the straggler
-        # monitor would poison the small warmup window's median
-        self._straggler_skip = 1
+        # monitor would poison the small warmup window's median (scheduler
+        # engines compile two programs: mixed and decode-only)
+        self._straggler_skip = 2 if self.scheduler else 1
 
     # -- admission ----------------------------------------------------------
 
@@ -412,7 +489,26 @@ class ServeEngine:
                     f"{self.pool.max_blocks_per_seq}; grow num_blocks / "
                     f"max_blocks_per_seq or shrink the request")
         req.submitted_at = time.perf_counter()
-        self.queue.append(req)
+        if self.scheduler:
+            self.sched.enqueue(req)
+        else:
+            self.queue.append(req)
+
+    def _decoding(self, s: int) -> bool:
+        """Slot ``s`` participates in the decode tick: occupied and not the
+        slot currently receiving prefill chunks (scheduler mode reserves
+        the slot at prefill start; monolithic engines never prefill in
+        place, so this reduces to occupancy)."""
+        return self.slot_req[s] is not None and (
+            self._prefilling is None or self._prefilling["slot"] != s)
+
+    def _backlog(self) -> int:
+        """Requests not yet decoding: queued (either admission path) plus
+        the one mid-chunked-prefill."""
+        n = len(self.queue)
+        if self.scheduler:
+            n += self.sched.pending + (self._prefilling is not None)
+        return n
 
     def _bucket_len(self, n: int) -> int:
         """Prefill padding bucket for a prompt of length ``n``.
@@ -435,36 +531,46 @@ class ServeEngine:
         odd-length prompt in the stream no longer splits an otherwise
         batchable admission into multiple prefill calls; the head request
         always leads its group, and the window bound keeps it from being
-        starved by later look-alikes.  Paged engines additionally trim the
-        group to what the block pool can hold right now (conservative: the
-        check ignores prefix sharing).  Returns number admitted."""
+        starved by later look-alikes.
+
+        Order invariant: submission order is preserved *within a priority
+        class*.  A candidate joins the head's group only if it shares the
+        head's bucket AND class (grouping across classes would let a
+        late-submitted request of another class ride ahead of its own
+        class's earlier entries), and the scan keeps a deferral barrier —
+        the first same-class same-bucket candidate that cannot join
+        (group already full, or — paged — its worst-case block reservation
+        no longer fits the pool) ends the scan, so a deferred request can
+        never be leapfrogged by a look-alike submitted after it.  The
+        paged fit gate (worst-case chains against the unreserved pool, so
+        decode-time lazy growth can never exhaust it mid-tick; the check
+        is conservative, ignoring prefix sharing) is part of the same scan
+        for exactly this reason: trimming after the fact would have to
+        re-derive which deferral came first.  Returns number admitted."""
         admitted = 0
         free = [s for s in range(self.num_slots)
                 if self.slot_req[s] is None]
         while free and self.queue:
             k = min(len(free), self.max_admit)
-            blen = self._bucket_len(len(self.queue[0].prompt))
-            idxs = [0]
-            for i in range(1, min(len(self.queue), self.admit_window)):
+            head = self.queue[0]
+            blen = self._bucket_len(len(head.prompt))
+            avail = self.pool.available_blocks if self.paged else 0
+            need, idxs = 0, []
+            for i in range(min(len(self.queue), self.admit_window)):
+                r = self.queue[i]
+                if i and (r.priority != head.priority
+                          or self._bucket_len(len(r.prompt)) != blen):
+                    continue        # different group: no ordering relation
                 if len(idxs) >= k:
-                    break
-                if self._bucket_len(len(self.queue[i].prompt)) == blen:
-                    idxs.append(i)
-            if self.paged:
-                # gate on worst-case chains (prompt + generation budget)
-                # against the unreserved pool, so decode-time lazy growth
-                # can never exhaust it mid-tick
-                fit, need = [], 0
-                avail = self.pool.available_blocks
-                for i in idxs:
-                    nb = self._paged_reserve(self.queue[i])
+                    break           # barrier: group full
+                if self.paged:
+                    nb = self._paged_reserve(r)
                     if need + nb > avail:
-                        break
+                        break       # barrier: pool can't fit this one yet
                     need += nb
-                    fit.append(i)
-                idxs = fit
-                if not idxs:        # head doesn't fit: wait for evictions
-                    break
+                idxs.append(i)
+            if not idxs:            # head doesn't fit: wait for evictions
+                break
             group = [self.queue[i] for i in idxs]
             for i in reversed(idxs):
                 del self.queue[i]
@@ -479,6 +585,9 @@ class ServeEngine:
         repeating the last request (bounded recompilation); pad rows write
         the same payload to the same slot."""
         B = len(group)
+        now = time.perf_counter()
+        for r in group:
+            r.admitted_at = now          # queue exit: prefill starts here
         Bp = 1 << (B - 1).bit_length()
         toks = np.zeros((Bp, blen), np.int32)
         lens = np.zeros(Bp, np.int32)
@@ -532,6 +641,9 @@ class ServeEngine:
         self.stats.finished += 1
         if self.paged:
             self.pool.release(slot)
+        if self.scheduler:
+            self._pos = self._park(self._pos, slot)
+            self.sched.forget(req.rid)
 
     # -- main loop ----------------------------------------------------------
 
@@ -540,8 +652,11 @@ class ServeEngine:
 
         Runs *after* the current step was dispatched, so the transfer
         overlaps device compute.  Tokens of slots whose request already
-        finished (freed last tick, step was speculative) are discarded."""
-        tok_dev, reqs = inflight
+        finished (freed last tick, step was speculative) are discarded.
+        A scheduler tick that completed a prompt's final chunk also
+        carries that request's first token (``chunk_final``), collected
+        with the same one-tick lag as decode tokens."""
+        tok_dev, reqs, chunk_final = inflight
         vals = np.asarray(jax.device_get(tok_dev)).reshape(-1)
         now = time.perf_counter()
         for slot, req in enumerate(reqs):
@@ -554,11 +669,36 @@ class ServeEngine:
             self.stats.tokens_out += 1
             if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
                 self._free(slot)
+        if chunk_final is not None:
+            c_dev, req, slot = chunk_final
+            if not req.done:
+                tok = int(np.asarray(jax.device_get(c_dev)).reshape(-1)[0])
+                req.generated.append(tok)
+                req.first_token_at = now
+                self.stats.admitted += 1
+                if (len(req.generated) >= req.max_new_tokens
+                        or tok == req.eos_id):
+                    self._free(slot)      # degenerate: done at prefill
 
     def _dispatch(self):
-        """One jitted decode step over the current slots; returns the
-        (device tokens, slot->request snapshot) pair the next tick's
-        collection consumes."""
+        """One jitted step over the current slots; returns the
+        (device tokens, slot->request snapshot, chunk-final) triple the
+        next tick's collection consumes.
+
+        Scheduler mode: when ``_plan_chunk`` scheduled a chunk this tick
+        the step is the *mixed* program (decode over every slot + the
+        chunk appended into its slot's cache), otherwise the plain decode
+        program — exactly two executables, both static-shaped.  Chunk
+        progress (``consumed``) only advances here, after a successful
+        dispatch, so a retried tick re-dispatches the identical chunk.
+        The slot snapshot masks the prefilling slot: its decode lane is
+        parked junk, not stream output."""
+        ch = self._chunk
+        # snapshot the decoding mask before any final-chunk state change:
+        # this tick's decode output for the chunk slot is still junk
+        reqs = [self.slot_req[s] if self._decoding(s) else None
+                for s in range(self.num_slots)]
+        c_next = None
         if self.paged:
             # per-tick write plan: lazy chain growth at block
             # boundaries, copy-on-write for shared tails, trash for
@@ -566,8 +706,7 @@ class ServeEngine:
             bids = np.empty(self.num_slots, np.int32)
             copies = []
             for s in range(self.num_slots):
-                bids[s], cp = self.pool.write_plan(
-                    s, self.slot_req[s] is not None)
+                bids[s], cp = self.pool.write_plan(s, self._decoding(s))
                 copies.extend(cp)
             if copies:
                 # pad to a fixed width (<= 1 COW per slot per tick)
@@ -580,16 +719,117 @@ class ServeEngine:
                     self.caches,
                     jnp.asarray([c[0] for c in copies], jnp.int32),
                     jnp.asarray([c[1] for c in copies], jnp.int32))
-            tok, caches, pos = self._decode(
-                self.params, self._tok, self.caches, self._pos,
-                jnp.asarray(self.pool.table), jnp.asarray(bids))
+            if ch is not None:
+                tok, caches, pos, c_next = self._mixed(
+                    self.params, self._tok, self.caches, self._pos,
+                    jnp.asarray(self.pool.table), jnp.asarray(bids),
+                    jnp.asarray(ch["tok"]), jnp.asarray(ch["pos"]),
+                    jnp.asarray(ch["table"]), jnp.asarray(ch["bids"]),
+                    jnp.asarray([ch["last"]], jnp.int32))
+            else:
+                tok, caches, pos = self._decode(
+                    self.params, self._tok, self.caches, self._pos,
+                    jnp.asarray(self.pool.table), jnp.asarray(bids))
         else:
-            tok, caches, pos = self._decode(self.params, self._tok,
-                                            self.caches, self._pos)
+            if ch is not None:
+                tok, caches, pos, c_next = self._mixed(
+                    self.params, self._tok, self.caches, self._pos,
+                    jnp.asarray(ch["tok"]), jnp.asarray(ch["pos"]),
+                    jnp.asarray([ch["slot"]], jnp.int32),
+                    jnp.asarray([ch["reset"]]),
+                    jnp.asarray([ch["last"]], jnp.int32))
+            else:
+                tok, caches, pos = self._decode(self.params, self._tok,
+                                                self.caches, self._pos)
         # the old cache buffer was donated — replace references now
         self.caches, self._tok, self._pos = caches, tok, pos
         self.stats.ticks += 1
-        return (tok, list(self.slot_req))
+        chunk_final = None
+        if ch is not None:
+            self.stats.chunk_ticks += 1
+            pf = self._prefilling
+            pf["consumed"] = ch["start"] + ch["n"]
+            if ch["final"]:
+                req, slot = ch["req"], ch["slot"]
+                L = len(req.prompt)
+                # seed the hot loop: the chunk's sampled next token at
+                # position L — the slot starts decoding next tick
+                self._tok, self._pos = self._seed(
+                    jnp.asarray([slot], jnp.int32), self._tok, self._pos,
+                    c_next, jnp.asarray([L], jnp.int32))
+                self.slot_pos[slot] = L
+                self._prefilling = None
+                chunk_final = (c_next, req, slot)
+        # NB: return self._tok, not tok — the final-chunk seeding above
+        # donated tok's buffer; the seeded array is lane-identical for
+        # every decoding slot (the chunk slot is masked out of reqs)
+        return (self._tok, reqs, chunk_final)
+
+    def _plan_chunk(self) -> Optional[dict]:
+        """Scheduler-mode host planning for this tick's prefill chunk.
+
+        Starts the next waiting prompt when none is in flight (scheduler
+        ``select()``: WRR across priority classes + starvation aging) and
+        a slot is free — paged engines allocate the request's full block
+        chain here (``pool.admit``: prefix-shared blocks resolve now, the
+        worst-case reservation gates like monolithic admission).  Then
+        shapes this tick's chunk under the token budget
+        (``sched.chunk_tokens``); a saturated tick returns None
+        (decode-only).  All pure host bookkeeping — chunk *progress*
+        advances in ``_dispatch``, after the step actually ran."""
+        if self._prefilling is None and self.sched.pending:
+            free = next((s for s in range(self.num_slots)
+                         if self.slot_req[s] is None), None)
+            if free is not None:
+                req = self.sched.select()
+                if self.paged and \
+                        self._paged_reserve(req) > self.pool.available_blocks:
+                    # pool can't hold it yet: put it back at the front of
+                    # its class (order preserved) and wait for evictions
+                    self.sched.requeue_front([req])
+                else:
+                    req.admitted_at = time.perf_counter()
+                    self.slot_req[free] = req
+                    self.slot_pos[free] = 0
+                    dst = None
+                    if self.paged:
+                        nb = self.pool.blocks_needed(len(req.prompt))
+                        dst = self.pool.admit(
+                            free, req.prompt, nb,
+                            reserve_blocks=self._paged_reserve(req))
+                    self._prefilling = {"req": req, "slot": free,
+                                        "consumed": 0, "dst": dst}
+        pf = self._prefilling
+        if pf is None:
+            return None
+        req, slot = pf["req"], pf["slot"]
+        L = len(req.prompt)
+        active = sum(self._decoding(s) for s in range(self.num_slots))
+        n = self.sched.chunk_tokens(active, L - pf["consumed"])
+        if n == 0:
+            return None             # budget saturated: decode-only tick
+        start = pf["consumed"]
+        C = self.sched.chunk_size
+        c_tok = np.zeros((1, C), np.int32)
+        c_pos = np.full((1, C), PAD_POS, np.int32)
+        c_tok[0, :n] = req.prompt[start:start + n]
+        c_pos[0, :n] = np.arange(start, start + n, dtype=np.int32)
+        chunk = {"req": req, "slot": slot, "start": start, "n": n,
+                 "tok": c_tok, "pos": c_pos, "reset": start == 0,
+                 "last": n - 1, "final": start + n >= L}
+        if self.paged:
+            bs = self.pool.block_size
+            dst = pf["dst"]
+            bids = np.full((1, C), blockpool.TRASH_BLOCK, np.int32)
+            for j in range(n):
+                # per-token destination: the admitted chain's column —
+                # TRASH for prefix-shared columns (already written by
+                # their first owner) and for pads
+                bids[0, j] = dst[(start + j) // bs]
+            chunk["bids"] = bids
+            chunk["table"] = np.asarray(self.pool.table[slot:slot + 1],
+                                        np.int32)
+        return chunk
 
     def _dispatch_with_retry(self, t: int):
         """Dispatch with bounded retry-with-backoff: a transient tick
@@ -617,12 +857,15 @@ class ServeEngine:
         return None
 
     def tick(self) -> bool:
-        """Dispatch one decode step, collect the previous one, admit.
+        """Dispatch one step, collect the previous one, admit.
 
         Order matters: dispatch first (device starts immediately), then the
         host overlaps collection + admission bookkeeping with the running
-        step.  Admissions take effect on the next tick's step (the splice is
-        queued behind the step via its data dependency on the caches).
+        step.  Monolithic admissions take effect on the next tick's step
+        (the splice is queued behind the step via its data dependency on
+        the caches); scheduler mode instead *plans* a prefill chunk before
+        dispatch and rides it inside the mixed step, so admission is the
+        decode tick — no stream ever waits for a whole prompt.
 
         Fault tolerance wraps the loop: on the ``health_every`` cadence the
         tick first consults ``ft.health.check_devices`` (with scripted
@@ -634,9 +877,15 @@ class ServeEngine:
         if self.health_every and t % self.health_every == 0:
             self._health_gate(t)
 
+        self._chunk = None
+        if self.scheduler:
+            self.sched.on_tick()
+            self._chunk = self._plan_chunk()
+
         t_start = time.perf_counter()
         dispatched = None
-        if any(r is not None for r in self.slot_req):
+        if self._chunk is not None or \
+                any(self._decoding(s) for s in range(self.num_slots)):
             dispatched = self._dispatch_with_retry(t)
 
         processed = self._inflight is not None
@@ -654,8 +903,12 @@ class ServeEngine:
                 if rep.action != "ok":
                     self._on_straggler(t, rep)
 
-        admitted = self._admit_batch()
-        return dispatched is not None or processed or admitted > 0
+        admitted = 0
+        if not self.scheduler:
+            admitted = self._admit_batch()
+            return dispatched is not None or processed or admitted > 0
+        return (dispatched is not None or processed
+                or self._backlog() > 0)
 
     # -- fault handling -------------------------------------------------------
 
@@ -732,14 +985,23 @@ class ServeEngine:
             self._collect(self._inflight)
             self._inflight = None
         live, chains = [], {}
+        mid_prefill = (self._prefilling["req"].rid
+                       if self._prefilling is not None else None)
         for s in range(self.num_slots):
             r = self.slot_req[s]
             if r is None:
                 continue
             if self.paged:
                 chains[r.rid] = self.pool.chain(s)
+            # a mid-prefill request has no unfolded generated tail (its
+            # first token only arrives with the final chunk), so folding
+            # is a no-op and re-admission replays the prompt exactly once
             _fold_replay_prefix(r)
             live.append(r)
+        # drop in-flight chunk state: the interrupted prompt re-enters the
+        # queue and restarts its chunk sequence on the rebuilt caches
+        self._prefilling = None
+        self._chunk = None
         bad = set(bad)
         if self.mesh is not None and bad:
             survivors = [d for d in self._devices if d.id not in bad]
@@ -753,15 +1015,19 @@ class ServeEngine:
         self.params = jax.tree.map(jax.device_get, self.params)
         self.rt = self.rt.reshape(mesh=new_mesh)
         self._build_data_path()
-        for r in reversed(live):
-            self.queue.appendleft(r)
+        if self.scheduler:
+            self.sched.requeue_front(live)
+        else:
+            for r in reversed(live):
+                self.queue.appendleft(r)
         # the new mesh's tick times are a new distribution — don't judge
         # them against the old rolling median
         self.straggler.reset()
         self.stats.evacuations += 1
         self._log_event(
             "evacuate", tick=tick, reason=reason, requeued=len(live),
-            replayed=[r.rid for r in live], kv_chains=chains or None,
+            replayed=[r.rid for r in live], mid_prefill=mid_prefill,
+            kv_chains=chains or None,
             mesh=(dict(zip(self.mesh.axis_names,
                            self.mesh.devices.shape))
                   if self.mesh is not None else None),
@@ -780,14 +1046,16 @@ class ServeEngine:
             self._collect(self._inflight)
             self._inflight = None
         live = [r for r in self.slot_req if r is not None]
+        waiting = self.sched.waiting() if self.scheduler else list(self.queue)
         reqs = []
-        for r in list(live) + list(self.queue):
+        for r in list(live) + waiting:
             _fold_replay_prefix(r)
             reqs.append({"rid": int(r.rid),
                          "prompt": [int(x) for x in np.asarray(r.prompt)],
                          "generated": [int(x) for x in r.generated],
                          "max_new_tokens": int(r.max_new_tokens),
-                         "eos_id": int(r.eos_id)})
+                         "eos_id": int(r.eos_id),
+                         "priority": int(r.priority)})
         return EngineSnapshot(
             requests=reqs,
             stats={k: getattr(self.stats, k)
@@ -796,6 +1064,7 @@ class ServeEngine:
                              "health_checks")},
             meta={"arch": self.cfg.name, "kv_layout": self.kv_layout,
                   "capacity": self.capacity, "num_slots": self.num_slots,
+                  "scheduler": bool(self.scheduler),
                   "tick": self._tick_no})
 
     def load_snapshot(self, snap: EngineSnapshot) -> int:
@@ -803,7 +1072,7 @@ class ServeEngine:
         engine; each replays through standard prefill admission and
         continues its stream (``folded`` marks the whole ``generated``
         prefix as already in the prompt).  Returns the request count."""
-        if any(r is not None for r in self.slot_req) or self.queue:
+        if any(r is not None for r in self.slot_req) or self._backlog():
             raise RuntimeError(
                 "load_snapshot needs an idle engine (no live slots, empty "
                 "queue) — restore into a freshly built engine")
@@ -818,37 +1087,45 @@ class ServeEngine:
                 prompt=np.asarray(d["prompt"], np.int32),
                 max_new_tokens=int(d["max_new_tokens"]),
                 eos_id=int(d.get("eos_id", -1)),
+                priority=int(d.get("priority", 0)),
                 generated=gen, folded=len(gen)))
         return len(snap.requests)
 
     def run_to_completion(self, max_ticks: int = 10_000) -> EngineStats:
         for _ in range(max_ticks):
             busy = self.tick()
-            if not busy and not self.queue:
+            if not busy and not self._backlog():
                 break
         return self.stats
 
     # -- reporting -----------------------------------------------------------
 
     def latency_summary(self) -> dict:
-        """p50/p95 time-to-first-token and inter-token latency (seconds)
-        over finished requests.  TTFT = submit -> prefill token; ITL =
-        consecutive decode-token arrivals at collection (one tick behind
-        dispatch — the double-buffering contract — which is what a client
-        observes)."""
-        ttfts, itls = [], []
+        """p50/p95/p99 time-to-first-token, inter-token latency and
+        queue-wait (seconds) over finished requests.  TTFT = submit ->
+        prefill token; ITL = consecutive decode-token arrivals at
+        collection (one tick behind dispatch — the double-buffering
+        contract — which is what a client observes); queue wait = submit
+        -> prefill start, the share of TTFT spent purely in admission
+        (the number the scheduler's fairness knobs move)."""
+        ttfts, itls, waits = [], [], []
         for r in self.finished:
             if r.first_token_at:
                 ttfts.append(r.first_token_at - r.submitted_at)
+            if r.admitted_at:
+                waits.append(r.admitted_at - r.submitted_at)
             times = [r.first_token_at] + list(r.token_times)
             itls.extend(b - a for a, b in zip(times, times[1:]))
 
         def pct(xs, q):
             return float(np.percentile(xs, q)) if xs else 0.0
 
-        return {"requests": len(ttfts),
-                "ttft_p50": pct(ttfts, 50), "ttft_p95": pct(ttfts, 95),
-                "itl_p50": pct(itls, 50), "itl_p95": pct(itls, 95)}
+        out = {"requests": len(ttfts)}
+        for name, xs in (("ttft", ttfts), ("itl", itls),
+                         ("queue_wait", waits)):
+            for q in (50, 95, 99):
+                out[f"{name}_p{q}"] = pct(xs, q)
+        return out
 
     def kv_cache_bytes(self) -> int:
         """Bytes of attention K/V storage (dense per-slot slabs or the

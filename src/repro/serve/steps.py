@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.topology import Plan
-from repro.models.registry import (capabilities, model_decode_step,
+from repro.models.registry import (capabilities, model_chunk_prefill,
+                                   model_decode_step,
                                    model_paged_decode_step, model_prefill)
 from repro.models.common import ModelConfig
 from repro.models.sharding import activation_sharding
@@ -191,3 +192,90 @@ def make_paged_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
             return nxt[:, None], caches, pos + 1
 
     return decode
+
+
+def make_mixed_step(cfg: ModelConfig, plan: Plan, mesh, *,
+                    attn_impl: str = "auto",
+                    partition: str = "auto") -> Callable:
+    """One jitted program = decode tick over all slots + one prefill chunk.
+
+    (params, token [N,1], caches, pos [N],
+     c_tok [1,C], c_pos [1,C], c_slot [1], c_reset [1], c_last [1])
+      -> (next [N,1], caches, pos+1, c_next [1])
+
+    The scheduler's interleaving step: every decode slot advances exactly
+    as in ``make_decode_step(advance_pos=True)`` while one [1,C] prompt
+    chunk is appended into slot ``c_slot``'s cache row (sliced out, run
+    through the chunk-append forward, spliced back in place).  Contract
+    with the engine: non-decoding slots' ``pos`` are parked at
+    ``attention.PAD_POS`` so their junk writes are out-of-bounds scatters
+    XLA drops — the chunk slot's incrementally built row is never
+    clobbered by the lock-step decode.  ``c_pos`` pads carry PAD_POS too;
+    ``c_last`` gathers the chunk's final real token, whose greedy sample
+    ``c_next`` seeds the slot's decode loop on the request's last chunk.
+    """
+    rules = dict(plan.act_rules)
+    rules["mesh"] = mesh
+    rules["decode_attn_impl"] = resolve_decode_attn_impl(attn_impl, cfg)
+    rules["kernel_partition"] = partition
+
+    def mixed(params, token, caches, pos, c_tok, c_pos, c_slot, c_reset,
+              c_last):
+        with activation_sharding(rules):
+            logits, caches = model_decode_step(params, token, caches, cfg,
+                                               pos=pos)
+            nxt = greedy_sample(logits)
+            # cache leaves are [R, num_slots, ...]: slice the chunk slot's
+            # row, append the chunk, splice back (in place under donation)
+            row = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, c_slot[0], axis=1, keepdims=True), caches)
+            c_logits, row = model_chunk_prefill(
+                params, c_tok, row, cfg, positions=c_pos, reset=c_reset,
+                last_index=c_last)
+            caches = kvcache.splice_slots(caches, row, c_slot)
+            return nxt[:, None], caches, pos + 1, greedy_sample(c_logits)
+
+    return mixed
+
+
+def make_paged_mixed_step(cfg: ModelConfig, plan: Plan, mesh, *,
+                          attn_impl: str = "auto",
+                          partition: str = "auto") -> Callable:
+    """Paged-layout mixed step (decode tick + one prefill chunk).
+
+    (params, token [N,1], caches, pos [N], block_table [N,M],
+     write_bids [N], c_tok [1,C], c_pos [1,C], c_table [1,M],
+     c_bids [1,C], c_last [1])
+      -> (next [N,1], caches, pos+1, c_next [1])
+
+    The chunk writes the pooled caches directly: ``c_table`` is the chunk
+    owner's block chain and ``c_bids`` the per-token destination blocks
+    (TRASH for pads and for prefix-shared blocks, which were written by
+    their first owner).  Disjointness is what keeps decode streams
+    token-identical to the unscheduled engine: decode slots write their
+    own (COW-protected) blocks, the chunk writes only its exclusive
+    fresh blocks, and the chunk slot's decode-tick write goes to TRASH
+    (``write_plan(slot, active=False)``).
+    """
+    rules = dict(plan.act_rules)
+    rules["mesh"] = mesh
+    rules["decode_attn_impl"] = resolve_decode_attn_impl(attn_impl, cfg,
+                                                         kv_layout="paged")
+    rules["kernel_partition"] = partition
+
+    def mixed(params, token, caches, pos, block_table, write_bids,
+              c_tok, c_pos, c_table, c_bids, c_last):
+        with activation_sharding(rules):
+            logits, caches = model_paged_decode_step(
+                params, token, caches, cfg, pos=pos,
+                block_table=block_table, write_bids=write_bids)
+            nxt = greedy_sample(logits)
+            c_logits, caches = model_chunk_prefill(
+                params, c_tok, caches, cfg, positions=c_pos,
+                reset=jnp.zeros((1,), bool),   # paged clears via the pool
+                last_index=c_last,
+                paged={"block_table": c_table, "write_bids": c_bids})
+            return nxt[:, None], caches, pos + 1, greedy_sample(c_logits)
+
+    return mixed

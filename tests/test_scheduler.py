@@ -1,0 +1,371 @@
+"""Continuous-batching scheduler suite (serve/scheduler.py + engine wiring).
+
+Two contracts under test.  **Policy** (host-side, no jax): smooth WRR
+serves priority classes proportionally to their weights, strict FIFO
+within a class, starvation aging bounds every request's wait, and
+evacuation re-entry (``requeue_front``) preserves both class order and
+age.  **Data path**: chunked prefill interleaved with decode must be a
+pure *scheduling* change — for every request the f32 token stream is
+bitwise-identical to the monolithic engine, across dense and paged KV
+layouts, prompt lengths off/on chunk boundaries, mid-prefill evacuation
+replay, snapshot restart, and (under the 8-device CI gate) a 2x4 mesh.
+
+Parity runs in f32 (``cfg.scaled(dtype=jnp.float32)``): chunked and
+monolithic prefill execute different XLA programs over identical values,
+so bf16 would expose argmax decisions to reassociation noise unrelated to
+the scheduler.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.ft.inject import FaultInjector
+from repro.runtime import Runtime
+from repro.serve.engine import Request
+from repro.serve.scheduler import Scheduler
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(scripts/ci.sh runs this gate)")
+
+ARCH = "llama3.2-3b"
+
+
+def _cfg():
+    return get_smoke_config(ARCH).scaled(dtype=jnp.float32)
+
+
+def _req(rid, n, priority=0, max_new=4, seed=None):
+    rng = np.random.default_rng(rid if seed is None else seed)
+    return Request(rid=rid,
+                   prompt=rng.integers(1, 200, size=n, dtype=np.int32),
+                   max_new_tokens=max_new, priority=priority)
+
+
+# ---------------------------------------------------------------------------
+# policy: WRR / FIFO / aging / requeue_front (pure host, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_fifo_within_class():
+    s = Scheduler()
+    for i in range(5):
+        s.enqueue(_req(i, 4))
+    assert [s.select().rid for _ in range(5)] == [0, 1, 2, 3, 4]
+    assert s.select() is None and s.pending == 0
+
+
+def test_scheduler_wrr_serves_weights_proportionally():
+    s = Scheduler(class_weights={0: 3, 1: 1})
+    for i in range(40):
+        s.enqueue(_req(i, 4, priority=i % 2))
+    order = [s.select().priority for _ in range(8)]
+    # smooth WRR at 3:1 serves class 0 three times per cycle of four
+    assert order.count(0) == 6 and order.count(1) == 2
+    # ...and never two class-1 picks back to back at this ratio
+    assert all(not (a == 1 and b == 1) for a, b in zip(order, order[1:]))
+
+
+def test_scheduler_unknown_class_gets_weight_one():
+    s = Scheduler(class_weights={0: 2})
+    s.enqueue(_req(0, 4, priority=7))    # class 7 never configured
+    assert s.weights[7] == 1
+    assert s.select().rid == 0
+
+
+def test_scheduler_aging_overrides_wrr():
+    s = Scheduler(class_weights={0: 100, 1: 1}, aging_ticks=3)
+    s.enqueue(_req(1, 4, priority=1))
+    for t in range(3):
+        s.on_tick()
+    for i in range(10):
+        s.enqueue(_req(10 + i, 4, priority=0))
+    # class 1's head has waited >= aging_ticks: it beats the 100x weight
+    assert s.select().rid == 1
+    assert s.stats.aged == 1
+    # drained starvation: back to WRR, heavy class wins
+    assert s.select().priority == 0
+
+
+def test_scheduler_requeue_front_preserves_order_and_age():
+    s = Scheduler(aging_ticks=4)
+    for i in range(4):
+        s.enqueue(_req(i, 4))
+    a, b = s.select(), s.select()       # rid 0, 1 in flight
+    for _ in range(4):
+        s.on_tick()
+    s.requeue_front([a, b])             # evacuation re-entry
+    assert [r.rid for r in s.waiting()] == [0, 1, 2, 3]
+    # age survived the round trip: rid 0 is immediately starved
+    assert s._waited(s.waiting()[0]) >= s.aging_ticks
+    assert s.select().rid == 0 and s.stats.aged >= 1
+
+
+def test_scheduler_chunk_budget_shaping():
+    s = Scheduler(token_budget=16, chunk_size=8)
+    assert s.chunk_tokens(0, 100) == 8      # idle: full chunk
+    assert s.chunk_tokens(0, 5) == 5        # tail chunk
+    assert s.chunk_tokens(12, 100) == 4     # shrunk to the budget
+    assert s.chunk_tokens(16, 100) == 0     # saturated: decode-only tick
+    assert s.chunk_tokens(99, 100) == 0     # over budget never negative
+    # progress guarantee: nothing decoding -> chunk proceeds regardless
+    assert s.chunk_tokens(0, 100) == 8
+    assert s.stats.deferred_chunks == 2 and s.stats.shrunk_chunks == 1
+
+
+@pytest.mark.parametrize("kw", [dict(token_budget=0), dict(chunk_size=0),
+                                dict(aging_ticks=0),
+                                dict(class_weights={0: 0})])
+def test_scheduler_rejects_bad_knobs(kw):
+    with pytest.raises(ValueError):
+        Scheduler(**kw)
+
+
+# ---------------------------------------------------------------------------
+# engine wiring: knob validation + describe
+# ---------------------------------------------------------------------------
+
+
+def test_engine_sched_knobs_require_scheduler():
+    rt = Runtime.create(_cfg(), shape_kind="decode", capacity=32)
+    with pytest.raises(ValueError, match="scheduler"):
+        rt.engine(num_slots=2, token_budget=64)
+
+
+def test_engine_chunk_size_capped_by_capacity():
+    rt = Runtime.create(_cfg(), shape_kind="decode", capacity=32,
+                        scheduler=True, sched_kw=dict(chunk_size=64))
+    with pytest.raises(ValueError, match="chunk_size"):
+        rt.engine(num_slots=2)
+
+
+def test_scheduler_requires_chunked_prefill_capability():
+    # mixtral's sliding window makes chunked KV writes ring-buffer-order
+    # dependent: the capability is off and the runtime fails fast
+    with pytest.raises(ValueError, match="chunked prefill"):
+        Runtime.create("mixtral-8x7b", smoke=True, shape_kind="decode",
+                       capacity=32, scheduler=True)
+
+
+def test_runtime_describe_scheduler_block():
+    rt = Runtime.create(_cfg(), shape_kind="decode", capacity=32,
+                        scheduler=True, sched_kw=dict(token_budget=64))
+    desc = rt.describe()
+    assert "scheduler[token_budget=64]" in desc
+    assert "chunked_prefill_ok=True" in desc
+    off = Runtime.create(_cfg(), shape_kind="decode", capacity=32)
+    assert "scheduler=off" in off.describe()
+
+
+# ---------------------------------------------------------------------------
+# data path: chunked == monolithic token streams (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+
+def _serve(cfg, reqs, *, scheduler=False, kv_layout="dense", mesh=None,
+           injector=None, sched_kw=None, **ekw):
+    rt = Runtime.create(cfg, mesh, shape_kind="decode", capacity=64,
+                        kv_layout=kv_layout, scheduler=scheduler,
+                        sched_kw=sched_kw)
+    if kv_layout == "paged":
+        ekw.setdefault("block_size", 8)
+    eng = rt.engine(num_slots=2, injector=injector,
+                    retry_backoff_s=0.001, **ekw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    assert len(eng.finished) == len(reqs), "stream dropped"
+    return eng
+
+
+def _tokens(eng):
+    return {r.rid: list(r.generated) for r in eng.finished}
+
+
+# prompt lengths straddle the chunk_size=8 boundary: below (5), exactly
+# one chunk (8), off-boundary multi-chunk (21), exact multiple (24)
+_LENS = (5, 8, 21, 24, 13)
+
+
+def _mixed_reqs():
+    return [_req(i, n, priority=i % 2, max_new=5)
+            for i, n in enumerate(_LENS)]
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_chunked_prefill_token_parity(kv_layout):
+    cfg = _cfg()
+    base = _tokens(_serve(cfg, _mixed_reqs(), kv_layout=kv_layout))
+    eng = _serve(cfg, _mixed_reqs(), kv_layout=kv_layout, scheduler=True,
+                 sched_kw=dict(token_budget=8, chunk_size=8))
+    assert _tokens(eng) == base
+    assert eng.stats.chunk_ticks > 0
+    assert eng.stats.prefill_calls == 0     # no monolithic prefill ran
+
+
+def test_chunked_budget_one_still_completes():
+    # budget=1 with any decode active leaves zero chunk room: chunks defer
+    # until the decode drains (progress guarantee kicks in at active=0);
+    # the streams must still be identical, just later
+    cfg = _cfg()
+    base = _tokens(_serve(cfg, _mixed_reqs()))
+    eng = _serve(cfg, _mixed_reqs(), scheduler=True,
+                 sched_kw=dict(token_budget=1, chunk_size=4))
+    assert _tokens(eng) == base
+    assert eng.sched.stats.deferred_chunks > 0
+
+
+def test_chunked_paged_prefix_reuse():
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, 200, size=16, dtype=np.int32)   # 2 full blocks
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [shared, rng.integers(1, 200, size=2 + i,
+                                              dtype=np.int32)]
+                    ).astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(3)]
+    base = _tokens(_serve(cfg, [Request(rid=r.rid, prompt=r.prompt,
+                                        max_new_tokens=r.max_new_tokens)
+                                for r in reqs], kv_layout="paged"))
+    eng = _serve(cfg, reqs, kv_layout="paged", scheduler=True,
+                 sched_kw=dict(chunk_size=8))
+    assert _tokens(eng) == base
+    # chunked admission went through pool.admit: the content-hash prefix
+    # cache still registers the 2-block shared prefix for later requests
+    assert eng.pool.prefix_hits >= 2
+    assert eng.pool.used_blocks == 0        # drained clean
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: monolithic _admit_batch keeps submission order on deferral
+# ---------------------------------------------------------------------------
+
+
+def test_admit_batch_deferral_preserves_submission_order():
+    # Paged engine with a pool sized so the long head request does not fit
+    # while a decode is holding blocks, but the later short one would.
+    # The deferral must act as a barrier: the short request may not jump
+    # the long one (strict submission order within a priority class).
+    cfg = _cfg()
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=64,
+                        kv_layout="paged")
+    eng = rt.engine(num_slots=2, block_size=8, num_blocks=8)
+    eng.submit(_req(0, 8, max_new=12))      # occupies blocks for a while
+    for _ in range(3):
+        eng.tick()
+    eng.submit(_req(1, 30, max_new=2))      # worst case 5 blocks: no fit
+    eng.submit(_req(2, 4, max_new=2))       # 1 block: would fit -- must wait
+    eng.run_to_completion()
+    assert len(eng.finished) == 3
+    admits = sorted(eng.finished, key=lambda r: r.admitted_at)
+    assert [r.rid for r in admits] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: evacuation mid-prefill -- replay exactly once, folded intact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_evacuation_mid_chunk_prefill_replays_once(kv_layout):
+    # Long prompt (40 tokens, chunk 8) so the raise at tick 3 (retries
+    # exhausted at 2) lands while the prompt is partially chunk-prefilled.
+    # The replay must produce bitwise-identical streams and run the
+    # prompt through prefill exactly once more (no double replay).
+    cfg = _cfg()
+    reqs = lambda: [_req(0, 40, max_new=4), _req(1, 6, max_new=6)]
+    base = _tokens(_serve(cfg, reqs(), kv_layout=kv_layout, scheduler=True,
+                          sched_kw=dict(chunk_size=8)))
+    eng = _serve(cfg, reqs(), kv_layout=kv_layout, scheduler=True,
+                 sched_kw=dict(chunk_size=8),
+                 injector=FaultInjector.parse("tick=3,kind=raise,times=3"),
+                 tick_retries=2)
+    assert eng.stats.evacuations == 1
+    assert _tokens(eng) == base
+    ev = next(e for e in eng.ft_events if e["event"] == "evacuate")
+    assert ev["mid_prefill"] == 0           # rid 0 was the one in flight
+    # mid-prefill request had no generated tokens: fold must be a no-op
+    r0 = next(r for r in eng.finished if r.rid == 0)
+    assert r0.folded == 0
+    assert len(r0.generated) == 4
+
+
+def test_evacuation_folded_accounting_with_prior_fold():
+    # A request restored from a snapshot (folded > 0) interrupted again by
+    # an evacuation: the already-folded prefix must not be re-emitted and
+    # the continued stream must match an uninterrupted run.
+    cfg = _cfg()
+    base = _tokens(_serve(cfg, [_req(0, 12, max_new=8),
+                                _req(1, 9, max_new=8)], scheduler=True,
+                          sched_kw=dict(chunk_size=4)))
+
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=64,
+                        scheduler=True, sched_kw=dict(chunk_size=4))
+    eng = rt.engine(num_slots=2, retry_backoff_s=0.001)
+    for r in (_req(0, 12, max_new=8), _req(1, 9, max_new=8)):
+        eng.submit(r)
+    for _ in range(8):                      # partway through decode
+        eng.tick()
+    snap = eng.snapshot()
+    assert snap.meta["scheduler"] is True
+
+    rt2 = Runtime.create(cfg, shape_kind="decode", capacity=64,
+                         scheduler=True, sched_kw=dict(chunk_size=4))
+    eng2 = rt2.engine(num_slots=2, retry_backoff_s=0.001, tick_retries=0,
+                      injector=FaultInjector.parse("tick=2,kind=raise"))
+    eng2.load_snapshot(snap)
+    eng2.run_to_completion()
+    assert eng2.stats.evacuations == 1
+    merged = _tokens(eng)
+    for r in eng2.finished:
+        # folded tokens live in the prompt; generated carries the full
+        # stream exactly once (fold happened at snapshot or evacuation)
+        assert r.folded <= len(r.generated)
+        merged[r.rid] = list(r.generated)
+    assert merged == base
+
+
+# ---------------------------------------------------------------------------
+# snapshot: scheduler queue + priorities survive a warm restart
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_preserves_priorities_and_sched_queue():
+    cfg = _cfg()
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=64,
+                        scheduler=True)
+    eng = rt.engine(num_slots=2)
+    for i in range(4):
+        eng.submit(_req(i, 6, priority=i % 2))
+    snap = eng.snapshot()                   # nothing ticked: all queued
+    assert len(snap.requests) == 4
+    assert {d["priority"] for d in snap.requests} == {0, 1}
+
+    eng2 = Runtime.create(cfg, shape_kind="decode", capacity=64,
+                          scheduler=True).engine(num_slots=2)
+    eng2.load_snapshot(snap)
+    assert eng2.sched.pending == 4
+    assert [r.priority for r in eng2.sched.waiting()] == [0, 0, 1, 1]
+    eng2.run_to_completion()
+    assert len(eng2.finished) == 4
+
+
+# ---------------------------------------------------------------------------
+# the 8-device gate: scheduler under the partitioned mesh
+# ---------------------------------------------------------------------------
+
+
+@needs8
+def test_chunked_prefill_parity_on_mesh():
+    from repro.launch.mesh import mesh_from_spec
+    cfg = _cfg()
+    base = _tokens(_serve(cfg, _mixed_reqs(), mesh=mesh_from_spec("2x4")))
+    eng = _serve(cfg, _mixed_reqs(), mesh=mesh_from_spec("2x4"),
+                 scheduler=True, sched_kw=dict(token_budget=8, chunk_size=8))
+    assert _tokens(eng) == base
+    assert eng.stats.chunk_ticks > 0
