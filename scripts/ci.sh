@@ -25,7 +25,11 @@
 # evacuation replay; re-run under the 8-device mesh) plus the bench
 # --scheduler SLO smoke, which asserts the scheduler's ITL p95 is >= 3x
 # better than monolithic admission under a mixed long-prompt/decode load
-# and merges the 'slo' section into BENCH_serve.json.
+# and merges the 'slo' section into BENCH_serve.json, and (h) the
+# 8-device data-integrity gate: tests/test_integrity.py drives scripted
+# bit flips (kind=corrupt) through the seal/scrub/quarantine/replay
+# path — 100% detection, zero corrupted tokens, only affected streams
+# replayed — plus burn-in, BER derating, and checkpoint CRC coverage.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -50,7 +54,8 @@ echo "== tier-1 pytest =="
 # standalone)
 python -m pytest -x -q --ignore=tests/test_registry.py \
     --ignore=tests/test_paged.py --ignore=tests/test_partition.py \
-    --ignore=tests/test_ft_serve.py --ignore=tests/test_scheduler.py
+    --ignore=tests/test_ft_serve.py --ignore=tests/test_scheduler.py \
+    --ignore=tests/test_integrity.py
 
 echo "== serve fast-path smoke benchmark (dense + paged engines) =="
 # --kv-layout paged adds the dense-vs-paged section and asserts the paged
@@ -98,5 +103,16 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # asserts ITL p95 >= 3x better with identical streams and merges the
 # 'slo' section into BENCH_serve.json
 python -m benchmarks.bench_serve --smoke --scheduler
+
+echo "== 8-device data-integrity gate =="
+# silent-data-corruption acceptance: scripted bit flips (kind=corrupt,
+# target=kv|params|collective) must be detected 100% of the time with
+# zero corrupted tokens emitted; corrupted blocks quarantine and only
+# the affected streams replay (token-identical, streams_dropped == 0).
+# Also covers fingerprint/flip property coverage, burn-in (memtest +
+# PRBS links with BER bounds), link-BER fabric derating + mesh demotion
+# (2x4 data-axis link loss), and checkpoint/snapshot CRC32.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_integrity.py
 
 echo "CI OK"

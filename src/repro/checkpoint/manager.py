@@ -14,6 +14,7 @@ import os
 import re
 import shutil
 import threading
+import zlib
 from dataclasses import asdict, dataclass, field
 from typing import Any, Optional
 
@@ -131,8 +132,13 @@ class EngineSnapshot:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
+        # canonical payload JSON + its CRC32, so a snapshot that rotted on
+        # disk (or was truncated by a torn copy) fails loud at load
+        payload = json.dumps(asdict(self), sort_keys=True,
+                             separators=(",", ":"))
+        doc = {"crc32": zlib.crc32(payload.encode()), "payload": payload}
         with open(os.path.join(tmp, _SNAP_FILE), "w") as f:
-            json.dump(asdict(self), f, indent=1)
+            json.dump(doc, f, indent=1)
         if os.path.exists(directory):
             shutil.rmtree(directory)
         os.rename(tmp, directory)
@@ -146,5 +152,13 @@ class EngineSnapshot:
                 f"no engine snapshot at {directory!r} (missing {_SNAP_FILE})")
         with open(path) as f:
             raw = json.load(f)
+        if "payload" in raw:       # integrity-wrapped (current) format
+            got = zlib.crc32(raw["payload"].encode())
+            if got != raw.get("crc32"):
+                raise serialize.ChecksumError(
+                    f"engine snapshot {path}: stored CRC32 "
+                    f"{raw.get('crc32'):#010x} != {got:#010x} — the "
+                    f"snapshot is corrupt")
+            raw = json.loads(raw["payload"])
         return cls(requests=raw.get("requests", []),
                    stats=raw.get("stats", {}), meta=raw.get("meta", {}))

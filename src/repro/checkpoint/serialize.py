@@ -13,6 +13,10 @@ Layout of a checkpoint directory:
   that degenerates to full arrays — the addressing logic is the same.
 * Writes go to ``<dir>.tmp`` then ``os.rename`` — a crash mid-write never
   corrupts the latest checkpoint (the restart just sees the previous one).
+* Every leaf's CRC32 is recorded in the manifest and re-verified on load:
+  a checkpoint that rotted on disk (or was half-copied between machines)
+  raises :class:`ChecksumError` naming the leaf instead of silently
+  restoring garbage weights.
 """
 from __future__ import annotations
 
@@ -20,11 +24,16 @@ import hashlib
 import json
 import os
 import shutil
+import zlib
 from typing import Any, Optional
 
 import numpy as np
 
 import jax
+
+
+class ChecksumError(ValueError):
+    """A stored array's bytes no longer match their recorded CRC32."""
 
 
 def _path_str(path) -> str:
@@ -68,7 +77,9 @@ def save_pytree(directory: str, tree: Any, *, step: int = 0,
         fn = _fname(ps)
         np.save(os.path.join(tmp, fn), arr, allow_pickle=False)
         leaves_meta[ps] = {"file": fn, "shape": list(arr.shape),
-                           "dtype": logical_dtype}
+                           "dtype": logical_dtype,
+                           "crc32": zlib.crc32(np.ascontiguousarray(arr)
+                                               .tobytes())}
 
     manifest = {"step": step, "leaves": leaves_meta,
                 "meta": extra_meta or {}}
@@ -108,6 +119,13 @@ def load_pytree(directory: str, like: Any, *,
         meta = leaves_meta[ps]
         arr = np.load(os.path.join(directory, meta["file"]),
                       allow_pickle=False)
+        if "crc32" in meta:        # absent in pre-integrity checkpoints
+            got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if got != meta["crc32"]:
+                raise ChecksumError(
+                    f"leaf {ps!r} in {directory}: stored CRC32 "
+                    f"{meta['crc32']:#010x} != {got:#010x} on disk — the "
+                    f"checkpoint is corrupt; restore an older step")
         if meta["dtype"] == "bfloat16":
             import ml_dtypes
             arr = arr.view(ml_dtypes.bfloat16)

@@ -47,13 +47,26 @@ class Tier:
         return self.latency + nbytes / self.bandwidth
 
 
+# bits per link-layer frame assumed by the BER -> goodput derating below
+# (jumbo-frame class; one flipped bit spoils the whole frame for resend)
+FRAME_BITS = 8 * 4096
+
+
 @dataclass(frozen=True)
 class Fabric:
-    """Ordered tiers (fastest first) + mesh-axis -> tier mapping."""
+    """Ordered tiers (fastest first) + mesh-axis -> tier mapping.
+
+    ``axis_ber`` carries measured bit-error ratios from the PRBS link
+    sweep (core/linktest.py): a degraded link does not change which tier
+    an axis sits on, it changes how much *goodput* that tier delivers, so
+    :meth:`bandwidth_for_axis` derates by the expected frame-retransmit
+    overhead and every consumer (planner, roofline pricer) sees the
+    degradation without code changes."""
 
     name: str
     tiers: tuple[Tier, ...]
     axis_tier: dict[str, str] = field(default_factory=dict)
+    axis_ber: dict[str, float] = field(default_factory=dict)
 
     def tier(self, name: str) -> Tier:
         for t in self.tiers:
@@ -64,8 +77,22 @@ class Fabric:
     def tier_for_axis(self, axis: str) -> Tier:
         return self.tier(self.axis_tier[axis])
 
+    def link_efficiency(self, axis: str) -> float:
+        """Goodput fraction after BER-induced retransmits: a frame of
+        F bits survives with probability ~(1 - ber)^F ~ 1 - ber*F, so
+        goodput ~ bandwidth * (1 - min(ber*F, 0.99)) — floored so a
+        pathological link prices as ~100x slower, not infinitely slow."""
+        ber = self.axis_ber.get(axis, 0.0)
+        return 1.0 - min(ber * FRAME_BITS, 0.99)
+
     def bandwidth_for_axis(self, axis: str) -> float:
-        return self.tier_for_axis(axis).bandwidth
+        return self.tier_for_axis(axis).bandwidth * self.link_efficiency(axis)
+
+    def with_link_ber(self, axis_ber: dict) -> "Fabric":
+        """A copy carrying measured per-axis BER (from
+        ``core.linktest.run_link_test`` reports), derating bandwidths."""
+        return Fabric(self.name, self.tiers, dict(self.axis_tier),
+                      {a: float(b) for a, b in axis_ber.items() if b > 0})
 
     def slowest_axis(self, axes: Sequence[str]) -> str:
         """The bottleneck axis among ``axes`` (lowest-bandwidth tier)."""

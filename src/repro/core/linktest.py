@@ -83,6 +83,26 @@ class LinkReport:
     def ok(self) -> bool:
         return self.bit_errors == 0 and all(self.checks.values())
 
+    @property
+    def bits_moved(self) -> int:
+        """Bits the axis transported during the sweep (the BER denominator)."""
+        return self.payload_bytes * 3 * self.size * 8
+
+    @property
+    def ber(self) -> float:
+        """Measured bit-error ratio (0.0 for a clean sweep).  The serve
+        engine's link gate (``ServeEngine.apply_link_reports``) thresholds
+        this, so a clean link passes any threshold regardless of sweep
+        length."""
+        return self.bit_errors / max(self.bits_moved, 1)
+
+    @property
+    def ber_bound(self) -> float:
+        """Upper bound the sweep can actually claim — IBERT convention: a
+        zero-error run of N bits only proves BER < 1/N.  Reported in the
+        burn-in table; tighten it with a longer payload."""
+        return max(self.bit_errors, 1) / max(self.bits_moved, 1)
+
 
 def _axis_exercises(payload: jax.Array, axis: str):
     """Runs inside shard_map (manual over ``axis``).  Each device holds the
@@ -162,11 +182,14 @@ def run_link_test(mesh, payload_bytes: int = 1 << 16,
 
 
 def format_reports(reports: list[LinkReport]) -> str:
+    """IBERT-style results table: one row per axis, with the BER bound the
+    sweep length supports (a clean N-bit run proves BER < 1/N, no better)."""
     lines = [f"{'axis':8s} {'size':>4s} {'payload':>9s} {'bit-errors':>10s} "
-             f"{'status':>7s}  checks"]
+             f"{'BER<':>9s} {'status':>7s}  checks"]
     for r in reports:
         status = "OK" if r.ok else "FAIL"
         checks = " ".join(f"{k}:{'ok' if v else 'ERR'}" for k, v in r.checks.items())
         lines.append(f"{r.axis:8s} {r.size:4d} {r.payload_bytes:9d} "
-                     f"{r.bit_errors:10d} {status:>7s}  {checks}")
+                     f"{r.bit_errors:10d} {r.ber_bound:9.1e} {status:>7s}  "
+                     f"{checks}")
     return "\n".join(lines)

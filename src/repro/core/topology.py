@@ -292,6 +292,11 @@ def describe(plan: Plan) -> str:
         f"  moe       : {plan.moe_regime}",
         f"  grad sync : {plan.grad_sync}",
     ]
+    for ax, ber in sorted(plan.fabric.axis_ber.items()):
+        lines.append(
+            f"  degraded  : {ax} BER={ber:.1e} -> "
+            f"{plan.fabric.link_efficiency(ax) * 100:.0f}% goodput "
+            f"({plan.fabric.axis_tier.get(ax, '-')})")
     for n in plan.notes:
         lines.append(f"  note      : {n}")
     return "\n".join(lines)

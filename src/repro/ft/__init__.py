@@ -3,4 +3,7 @@ from repro.ft.elastic import (best_mesh_shape, evacuation_mesh,
 from repro.ft.health import (DeviceHealth, HealthReason, all_healthy,
                              check_devices)
 from repro.ft.inject import Fault, FaultInjector, InjectedFault
+from repro.ft.integrity import (flip_bit, host_leaf_fingerprint,
+                                host_tree_fingerprint, leaf_fingerprint,
+                                region_fingerprints, tree_fingerprint)
 from repro.ft.straggler import StragglerMonitor

@@ -32,6 +32,10 @@ class HealthReason(enum.Enum):
     TIMEOUT = "timeout"
     EXECUTION_ERROR = "execution_error"
     INJECTED = "injected_fault"
+    # silent data corruption: a registered fingerprint (params checksum,
+    # sealed KV block) no longer matches — ft/integrity.py detection,
+    # escalated by the engine's scrub / health gate
+    DATA_CORRUPTION = "data_corruption"
 
 
 @dataclass

@@ -16,20 +16,27 @@ Plan grammar (``REPRO_FAULT_PLAN`` env var, or :meth:`FaultInjector.parse`)::
 
     keys:
       tick    (int, required)  first engine tick the fault is armed at
-      kind    (required)       fail | stall | raise
+      kind    (required)       fail | stall | raise | corrupt
       device  (int)            JAX device id the fault is pinned to
                                (required for 'fail'; optional straggler
                                attribution for 'stall')
       times   (int)            how many times the fault fires; defaults:
                                fail -> persistent (a dead device stays
-                               dead), stall/raise -> 1
+                               dead), stall/raise/corrupt -> 1
       ms      (float)          stall duration per fired tick (default 100)
+      target  (kv|params|collective)  what a 'corrupt' fault flips a bit
+                               in (required for 'corrupt'): a sealed KV
+                               block/slot entry, a params leaf, or the
+                               device->host token payload
+      seed    (int)            deterministic offset/bit choice for
+                               'corrupt' (default 0)
 
 Examples::
 
     REPRO_FAULT_PLAN="tick=6,kind=fail,device=7"          # device 7 dies
     REPRO_FAULT_PLAN="tick=4,kind=raise,times=3"          # 3 mid-tick errors
     REPRO_FAULT_PLAN="tick=5,kind=stall,ms=250,times=2,device=3"
+    REPRO_FAULT_PLAN="tick=6,kind=corrupt,target=kv,seed=7"   # flip a KV bit
 
 Fault kinds and where they bite:
 
@@ -47,6 +54,13 @@ Fault kinds and where they bite:
   that retry absorbs; ``times >= tick_retries + 1`` exhausts the retries
   of one tick and escalates to evacuation — and is then spent, so the
   evacuated engine decodes cleanly.
+* ``corrupt`` — silent data corruption: the engine pulls due faults via
+  :meth:`FaultInjector.due_corruptions` and flips one deterministic bit
+  (seeded by ``seed``) in the named ``target`` — a *sealed* KV block/slot
+  entry, a params leaf, or the host copy of the device->host token
+  payload.  Nothing raises; the fault is only observable through the
+  integrity layer (ft/integrity.py fingerprints + the engine's scrub
+  cadence), which is the point: a detection miss would serve garbage.
 """
 from __future__ import annotations
 
@@ -56,7 +70,8 @@ from dataclasses import dataclass, field
 
 from repro.ft.health import HealthReason
 
-KINDS = ("fail", "stall", "raise")
+KINDS = ("fail", "stall", "raise", "corrupt")
+TARGETS = ("kv", "params", "collective")
 _PERSISTENT = 1 << 30
 
 
@@ -67,10 +82,12 @@ class InjectedFault(RuntimeError):
 @dataclass
 class Fault:
     tick: int                 # first engine tick the fault is armed at
-    kind: str                 # fail | stall | raise
+    kind: str                 # fail | stall | raise | corrupt
     device: int = -1          # JAX device id (-1 = unattributed)
     times: int = 0            # 0 -> kind default (fail persistent, else 1)
     ms: float = 100.0         # stall duration per fired tick
+    target: str = ""          # corrupt: kv | params | collective
+    seed: int = 0             # corrupt: deterministic offset/bit choice
     fired: int = field(default=0, compare=False)
 
     def __post_init__(self):
@@ -80,6 +97,14 @@ class Fault:
         if self.kind == "fail" and self.device < 0:
             raise ValueError("kind=fail needs device=<jax device id> "
                              "(which device fails its health checks)")
+        if self.kind == "corrupt" and self.target not in TARGETS:
+            raise ValueError(
+                f"kind=corrupt needs target=<{('|'.join(TARGETS))}> "
+                f"(got target={self.target!r})")
+        if self.target and self.kind != "corrupt":
+            raise ValueError(
+                f"target= only applies to kind=corrupt faults "
+                f"(got kind={self.kind!r}, target={self.target!r})")
         if self.times <= 0:
             self.times = _PERSISTENT if self.kind == "fail" else 1
 
@@ -95,10 +120,24 @@ class FaultInjector:
 
     # -- construction -------------------------------------------------------
 
+    # key -> converter; the single source of truth the error messages quote
+    _KEYS = {"tick": int, "device": int, "times": int, "seed": int,
+             "ms": float, "kind": str.lower, "target": str.lower}
+    _GRAMMAR = (f"grammar: tick=<int>,kind=<{'|'.join(KINDS)}>"
+                f"[,device=<id>][,times=<n>][,ms=<float>]"
+                f"[,target=<{'|'.join(TARGETS)}>][,seed=<int>]")
+
     @classmethod
     def parse(cls, plan: str) -> "FaultInjector":
-        """Parse the ``REPRO_FAULT_PLAN`` grammar (see module docstring)."""
+        """Parse the ``REPRO_FAULT_PLAN`` grammar (see module docstring).
+
+        Malformed plans fail *fast and loud* — unknown keys name the valid
+        set, bad/non-positive ``times=``/``ms=`` values quote the clause,
+        and two clauses arming the same (tick, kind, device) triple are
+        rejected as a duplicate (almost always a copy-paste slip that
+        would silently double-fire)."""
         faults = []
+        seen: dict = {}
         for clause in plan.split(";"):
             clause = clause.strip()
             if not clause:
@@ -108,33 +147,46 @@ class FaultInjector:
                 if "=" not in fieldspec:
                     raise ValueError(
                         f"fault plan clause {clause!r}: field "
-                        f"{fieldspec!r} is not key=value "
-                        f"(grammar: tick=<int>,kind=<fail|stall|raise>"
-                        f"[,device=<id>][,times=<n>][,ms=<float>])")
+                        f"{fieldspec!r} is not key=value ({cls._GRAMMAR})")
                 k, v = (s.strip() for s in fieldspec.split("=", 1))
+                conv = cls._KEYS.get(k)
+                if conv is None:
+                    raise ValueError(
+                        f"fault plan clause {clause!r}: unknown fault-plan "
+                        f"key {k!r}; valid keys: {', '.join(cls._KEYS)}")
+                if k in kw:
+                    raise ValueError(
+                        f"fault plan clause {clause!r}: key {k!r} given "
+                        f"twice")
                 try:
-                    if k in ("tick", "device", "times"):
-                        kw[k] = int(v)
-                    elif k == "ms":
-                        kw[k] = float(v)
-                    elif k == "kind":
-                        kw[k] = v.lower()
-                    else:
-                        raise ValueError(
-                            f"unknown fault-plan key {k!r}; valid keys: "
-                            f"tick, kind, device, times, ms")
-                except ValueError as e:
-                    if "fault-plan" in str(e):
-                        raise
+                    kw[k] = conv(v)
+                except ValueError:
                     raise ValueError(
                         f"fault plan clause {clause!r}: bad value for "
-                        f"{k}={v!r}") from None
+                        f"{k}={v!r} (expected "
+                        f"{'float' if conv is float else 'int' if conv is int else 'str'})"
+                    ) from None
+                if k in ("times", "ms") and kw[k] <= 0:
+                    raise ValueError(
+                        f"fault plan clause {clause!r}: {k}={v!r} must be "
+                        f"positive ({k} counts {'fires' if k == 'times' else 'milliseconds'})")
             if "tick" not in kw or "kind" not in kw:
                 raise ValueError(
                     f"fault plan clause {clause!r}: tick= and kind= are "
-                    f"required (grammar: tick=<int>,kind=<fail|stall|raise>"
-                    f"[,device=<id>][,times=<n>][,ms=<float>])")
-            faults.append(Fault(**kw))
+                    f"required ({cls._GRAMMAR})")
+            ident = (kw["tick"], kw["kind"], kw.get("device", -1))
+            if ident in seen:
+                raise ValueError(
+                    f"fault plan clause {clause!r}: duplicate of "
+                    f"{seen[ident]!r} — same tick={ident[0]}, "
+                    f"kind={ident[1]}, device={ident[2]}; merge them or "
+                    f"use times=")
+            seen[ident] = clause
+            try:
+                faults.append(Fault(**kw))
+            except ValueError as e:
+                raise ValueError(
+                    f"fault plan clause {clause!r}: {e}") from None
         if not faults:
             raise ValueError(f"fault plan {plan!r} contains no clauses")
         return cls(faults)
@@ -180,6 +232,14 @@ class FaultInjector:
                                   f"now tick={tick})")
         return reports
 
+    def due_corruptions(self, tick: int, target: str) -> list:
+        """Due, unfired ``corrupt`` faults for ``target`` this tick.  The
+        caller (serve engine / collect path) marks ``fired`` only once the
+        bit flip was actually applied — a kv fault armed before anything
+        is sealed stays due until there is state to corrupt, mirroring a
+        real upset that by definition hits *resident* data."""
+        return [f for f in self._due(tick, "corrupt") if f.target == target]
+
     def suspect_devices(self) -> set:
         """Device ids implicated by fired device-attributed faults — the
         engine excludes these when a straggler escalation (which carries no
@@ -190,4 +250,5 @@ class FaultInjector:
     def __repr__(self) -> str:
         return ("FaultInjector(" + "; ".join(
             f"tick={f.tick},kind={f.kind},device={f.device},"
-            f"times={f.times},fired={f.fired}" for f in self.faults) + ")")
+            + (f"target={f.target},seed={f.seed}," if f.target else "")
+            + f"times={f.times},fired={f.fired}" for f in self.faults) + ")")

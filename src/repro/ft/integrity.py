@@ -1,0 +1,199 @@
+"""Silent-data-corruption detection primitives: fingerprints + bit surgery.
+
+The paper qualifies its MCM hardware with exhaustive DDR memory tests and
+31-bit PRBS IBERT link sweeps because a marginal DRAM row or SerDes lane
+does not announce itself — it silently flips bits.  Our reproduction's
+analog is silent corruption of KV-cache blocks, parameters, and collective
+payloads, and this module is the detection layer: cheap jitted checksums
+the serve engine seals device state with and re-verifies on a scrub
+cadence (serve/engine.py), plus the deterministic bit-flip used by
+``ft/inject.py``'s ``kind=corrupt`` faults to prove the whole
+detect -> quarantine -> replay path end to end.
+
+Fingerprint design
+------------------
+
+Every leaf is reinterpreted as unsigned words (f32 bit-patterns as u32,
+bf16/f16 as u16, integers value-wrapped mod 2^32) and reduced with a
+position-weighted sum
+
+    fp(x) = sum_i (2*i + 1) * K * x_i      (mod 2^32, K odd)
+
+Each weight ``(2i+1)*K`` is odd, hence invertible mod 2^32 — flipping bit
+``b < 32`` of element ``i`` changes the sum by ``±w_i * 2^b != 0``, so a
+*single* bit flip anywhere in the fingerprinted span is detected with no
+false negatives (the property tests/test_properties.py pins across random
+offsets and dtypes).  Multi-leaf fingerprints combine per-leaf sums with
+odd salts (same invertibility argument per leaf).  This is deliberately a
+weighted checksum, not a cryptographic hash: one fused multiply-add
+reduction per leaf keeps the scrub a rounding error next to a decode
+tick, and the adversary is a cosmic ray, not an attacker.
+
+Exact host mirrors (numpy, same mod-2^32 arithmetic) back the collective
+payload check: the engine checksums tokens on device at dispatch and
+re-checksums the host copy after the device->host transfer — a mismatch
+means the payload, not the compute, is corrupt, and the fetch is retried
+from the still-resident device array.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# odd multiplier (golden-ratio constant): makes every position weight odd
+_K = 0x9E3779B1
+_MOD = 1 << 32
+
+
+def _salt(j: int) -> int:
+    """Odd per-leaf salt: odd * odd stays odd (invertible mod 2^32)."""
+    return ((2 * j + 1) * _K) & (_MOD - 1)
+
+
+# -- bit reinterpretation (device) ------------------------------------------
+
+
+def _bits_u32(x: jax.Array) -> jax.Array:
+    """Reinterpret a leaf as uint32 words, injectively per element:
+    float bit-patterns via bitcast, integers/bools value-wrapped mod 2^32
+    (bijective for widths <= 32)."""
+    if x.dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    if x.dtype in (jnp.bfloat16, jnp.float16):
+        return jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+    if x.dtype == jnp.bool_ or jnp.issubdtype(x.dtype, jnp.integer):
+        return x.astype(jnp.uint32)
+    raise TypeError(f"no uint32 reinterpretation for dtype {x.dtype}")
+
+
+def _host_bits_u32(a: np.ndarray) -> np.ndarray:
+    """Host mirror of :func:`_bits_u32` (same words, numpy)."""
+    a = np.asarray(a)
+    if a.dtype == np.float32:
+        return a.view(np.uint32)
+    if a.dtype == np.float16:
+        return a.view(np.uint16).astype(np.uint32)
+    if a.dtype.itemsize == 2:          # ml_dtypes bfloat16 lands here
+        return a.view(np.uint16).astype(np.uint32)
+    if a.dtype == np.bool_ or a.dtype.kind in "iu":
+        return a.astype(np.int64).astype(np.uint32)
+    raise TypeError(f"no uint32 reinterpretation for dtype {a.dtype}")
+
+
+# -- fingerprints (device) ---------------------------------------------------
+
+
+def leaf_fingerprint(x: jax.Array) -> jax.Array:
+    """Position-weighted mod-2^32 checksum of one leaf -> scalar uint32."""
+    u = _bits_u32(x).reshape(-1)
+    idx = jnp.arange(u.size, dtype=jnp.uint32)
+    w = (idx * jnp.uint32(2) + jnp.uint32(1)) * jnp.uint32(_K)
+    return jnp.sum(u * w, dtype=jnp.uint32)
+
+
+def tree_fingerprint(tree) -> jax.Array:
+    """Salted combination of every leaf's fingerprint -> scalar uint32.
+    Registered for the params at engine build and re-verified by the
+    health gate / scrub (``HealthReason.DATA_CORRUPTION`` on mismatch)."""
+    total = jnp.uint32(0)
+    for j, leaf in enumerate(jax.tree.leaves(tree)):
+        total = total + jnp.uint32(_salt(j)) * leaf_fingerprint(leaf)
+    return total
+
+
+def region_fingerprints(caches, counts: jax.Array) -> jax.Array:
+    """Per-region fingerprints of a pooled/slotted KV cache pytree.
+
+    Every leaf must be shaped ``[R, N, E, ...]`` with axis 1 the region
+    (pool block or dense slot, ``N`` of them) and axis 2 the entry within
+    the region (block offset or cache position).  ``counts`` [N] int32
+    masks each region to its first ``counts[n]`` entries — junk past a
+    sequence's write cursor is excluded, so lazily grown / not-yet-written
+    tails never alarm.  Returns [N] uint32; a region with count 0
+    fingerprints to 0.
+
+    One call covers *all* regions (a handful of fused reductions), which
+    is what makes a per-tick scrub cadence affordable.
+    """
+    leaves = jax.tree.leaves(caches)
+    N = leaves[0].shape[1]
+    total = jnp.zeros((N,), jnp.uint32)
+    for j, leaf in enumerate(leaves):
+        E = leaf.shape[2]
+        mask = (jnp.arange(E, dtype=jnp.int32)[None, :]
+                < counts[:, None]).astype(jnp.uint32)          # [N, E]
+        u = _bits_u32(leaf)                                    # [R, N, E, ...]
+        u = jnp.moveaxis(jnp.moveaxis(u, 1, 0), 2, 1)          # [N, E, R, ...]
+        u = u.reshape(N, E, -1) * mask[:, :, None]
+        M = u.shape[2]
+        idx = jnp.arange(E * M, dtype=jnp.uint32).reshape(E, M)
+        w = (idx * jnp.uint32(2) + jnp.uint32(1)) * jnp.uint32(_K)
+        total = total + jnp.uint32(_salt(j)) * jnp.sum(
+            u * w[None], axis=(1, 2), dtype=jnp.uint32)
+    return total
+
+
+# -- fingerprints (host mirrors) --------------------------------------------
+
+
+def host_leaf_fingerprint(a) -> int:
+    """Exact numpy mirror of :func:`leaf_fingerprint` (mod-2^64 partials
+    reduce to the same mod-2^32 value since 2^32 | 2^64)."""
+    u = _host_bits_u32(a).astype(np.uint64).reshape(-1)
+    idx = np.arange(u.size, dtype=np.uint64)
+    w = (idx * np.uint64(2) + np.uint64(1)) * np.uint64(_K)
+    return int((u * w).sum(dtype=np.uint64) % _MOD)
+
+
+def host_tree_fingerprint(tree) -> int:
+    total = 0
+    for j, leaf in enumerate(jax.tree.leaves(tree)):
+        total = (total + _salt(j) * host_leaf_fingerprint(leaf)) % _MOD
+    return total
+
+
+# -- deterministic bit surgery ----------------------------------------------
+
+
+def flip_bit(x: jax.Array, flat_index, bit) -> jax.Array:
+    """Return a copy of ``x`` with bit ``bit`` of flat element
+    ``flat_index`` flipped (XOR on the underlying bit pattern).  The
+    injection primitive behind ``kind=corrupt`` faults — and, on itself,
+    the proof obligation for the fingerprints above."""
+    if x.dtype in (jnp.bfloat16, jnp.float16):
+        word = jnp.uint16
+    elif x.dtype.itemsize == 4:
+        word = jnp.uint32
+    elif x.dtype.itemsize == 1:
+        word = jnp.uint8
+    else:
+        raise TypeError(f"flip_bit: unsupported dtype {x.dtype}")
+    u = jax.lax.bitcast_convert_type(x, word)
+    flat = u.reshape(-1)
+    mask = (jnp.ones((), word) << jnp.asarray(bit, word))
+    flat = flat.at[flat_index].set(flat[flat_index] ^ mask)
+    return jax.lax.bitcast_convert_type(flat.reshape(u.shape), x.dtype)
+
+
+def bit_width(dtype) -> int:
+    """Bits per element a :func:`flip_bit` target exposes."""
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def clear_regions(caches, ids: jax.Array):
+    """Wipe region columns ``ids`` across every leaf: K/V to zero,
+    integer position leaves to -1 (the empty sentinel) — how a quarantined
+    pool block is scrubbed clean before re-entering the free list."""
+    def one(pool):
+        fill = -1 if jnp.issubdtype(pool.dtype, jnp.integer) else 0
+        return pool.at[:, ids].set(jnp.asarray(fill, pool.dtype))
+    return jax.tree.map(one, caches)
+
+
+# module-level jit handles: the scrub runs on the serving hot path, so the
+# engine shares one trace per (structure, shape) instead of re-tracing
+region_fingerprints_jit = jax.jit(region_fingerprints)
+tree_fingerprint_jit = jax.jit(tree_fingerprint)
+leaf_fingerprint_jit = jax.jit(leaf_fingerprint)
+flip_bit_jit = jax.jit(flip_bit)

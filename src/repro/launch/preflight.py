@@ -12,6 +12,13 @@ The launcher mirrors that order before entering the training loop:
 
 ``run_preflight`` returns a report; the launcher refuses to start on any
 failure, exactly like a board that fails IBERT never ships.
+
+``run_burn_in`` is the heavyweight variant (``--burn-in`` on the serve
+launcher): a full DDR-style memory test on *every* device plus a PRBS
+link sweep with the per-axis BER bound, rendered as the IBERT-style
+pass/fail tables the paper's qualification flow produced.  The measured
+BERs feed ``core.fabric.Fabric.with_link_ber`` and the serve engine's
+link gate (``ServeEngine.apply_link_reports``).
 """
 from __future__ import annotations
 
@@ -78,5 +85,67 @@ def run_preflight(mesh, *, mem_bytes: int = 1 << 22,
         except Exception as e:  # noqa: BLE001
             rep.stages["smoke-step"] = (False, repr(e))
 
+    rep.elapsed_s = time.time() - t0
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# burn-in: full memory + link qualification (paper: DDR tests + IBERT sweep)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BurnInReport:
+    """Per-device memory reports + per-axis link reports, IBERT-table
+    style.  ``Runtime.burn_in()`` stores one of these and surfaces the
+    verdict in ``Runtime.describe()``."""
+    mem: list = field(default_factory=list)      # memtest.MemReport
+    links: list = field(default_factory=list)    # linktest.LinkReport
+    elapsed_s: float = 0.0
+    ber_threshold: float = 0.0                   # 0 -> bit-exact required
+
+    @property
+    def ok(self) -> bool:
+        mem_ok = all(m.ok for m in self.mem)
+        if self.ber_threshold > 0:
+            link_ok = all(all(l.checks.values())
+                          and l.ber <= self.ber_threshold
+                          for l in self.links)
+        else:
+            link_ok = all(l.ok for l in self.links)
+        return mem_ok and link_ok
+
+    @property
+    def axis_ber(self) -> dict:
+        """Measured per-axis BER for ``Fabric.with_link_ber`` /
+        ``ServeEngine.apply_link_reports``."""
+        return {l.axis: l.ber for l in self.links}
+
+    def summary(self) -> str:
+        lines = [f"burn-in: {'PASS' if self.ok else 'FAIL'} "
+                 f"({self.elapsed_s:.1f}s, {len(self.mem)} devices, "
+                 f"{len(self.links)} axes)"]
+        if self.mem:
+            lines += ["memory (DDR-soak analog):",
+                      memtest.format_reports(self.mem)]
+        if self.links:
+            lines += ["links (IBERT PRBS-31 analog):",
+                      linktest.format_reports(self.links)]
+        return "\n".join(lines)
+
+
+def run_burn_in(mesh=None, *, mem_bytes: int = 1 << 22,
+                link_payload: int = 1 << 16,
+                ber_threshold: float = 0.0) -> BurnInReport:
+    """Full qualification sweep: memory-test every device, PRBS-sweep
+    every mesh axis.  With ``mesh=None`` only the memory half runs (a
+    single device has no links to qualify)."""
+    t0 = time.time()
+    rep = BurnInReport(ber_threshold=ber_threshold)
+    devices = (list(mesh.devices.flat) if mesh is not None
+               else jax.devices()[:1])
+    rep.mem = [memtest.run_mem_test(d, mem_bytes) for d in devices]
+    if mesh is not None:
+        rep.links = linktest.run_link_test(mesh, payload_bytes=link_payload)
     rep.elapsed_s = time.time() - t0
     return rep

@@ -13,6 +13,12 @@ device health checks, ``--tick-retries`` bounds the transient-failure
 retry loop, and ``--fault-plan`` (or the ``REPRO_FAULT_PLAN`` env var)
 arms a scripted fault plan — e.g. ``tick=6,kind=raise,times=3`` forces a
 live evacuation mid-run; the engine's ft event log is printed at exit.
+
+Data-integrity knobs: ``--burn-in`` runs the full qualification gate
+(DDR-style memory test per device + PRBS link sweep with BER bounds)
+before serving, and ``--scrub-every N`` arms the engine's corruption
+scrub — with ``--fault-plan 'tick=6,kind=corrupt,target=kv,seed=7'`` the
+whole detect -> quarantine -> replay path runs live.
 """
 from __future__ import annotations
 
@@ -39,8 +45,17 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--mesh", default="")
     ap.add_argument("--no-preflight", action="store_true")
+    ap.add_argument("--burn-in", action="store_true",
+                    help="full qualification gate before serving: DDR-style "
+                         "memory test on every device + PRBS link sweep "
+                         "with BER bounds (launch/preflight.run_burn_in); "
+                         "refuses to serve on any failure")
     ap.add_argument("--health-every", type=int, default=0,
                     help="run device health checks every N ticks (0 = off)")
+    ap.add_argument("--scrub-every", type=int, default=0,
+                    help="integrity scrub cadence in ticks (0 = off): seal "
+                         "KV fingerprints, re-verify them + the params "
+                         "checksum, quarantine + replay on corruption")
     ap.add_argument("--tick-retries", type=int, default=2,
                     help="transient tick failures retried before evacuating")
     ap.add_argument("--fault-plan", default="",
@@ -67,6 +82,14 @@ def main(argv=None):
                         capacity=args.capacity,
                         scheduler=args.scheduler,
                         sched_kw=sched_kw or None)
+
+    if args.burn_in:
+        rep = rt.burn_in()
+        print(rep.summary(), flush=True)
+        if not rep.ok:
+            raise SystemExit("burn-in failed: this machine does not "
+                             "qualify (see tables above)")
+
     print(rt.describe(), flush=True)
 
     if mesh and not args.no_preflight:
@@ -77,7 +100,8 @@ def main(argv=None):
                 raise SystemExit("preflight failed")
 
     ft_kw = dict(health_every=args.health_every,
-                 tick_retries=args.tick_retries)
+                 tick_retries=args.tick_retries,
+                 scrub_every=args.scrub_every)
     if args.fault_plan:
         ft_kw["injector"] = FaultInjector.parse(args.fault_plan)
     eng = rt.engine(num_slots=args.slots, **ft_kw)

@@ -78,6 +78,7 @@ class Runtime:
         self.plan_kw = dict(plan_kw or {})
         self._params = params
         self._exec: dict[str, Callable] = {}
+        self._burn_in = None       # BurnInReport once burn_in() has run
 
     # -- construction -------------------------------------------------------
 
@@ -222,6 +223,17 @@ class Runtime:
     @params.setter
     def params(self, value):
         self._params = value
+
+    @property
+    def params_fingerprint(self) -> int:
+        """mod-2^32 checksum of the materialized params (ft/integrity.py)
+        — the reference the serve engine registers at build and the
+        health gate re-verifies (``HealthReason.DATA_CORRUPTION``).
+        Recomputed on access: a changed value between two reads of an
+        unmodified Runtime *is* the corruption signal."""
+        from repro.ft import integrity as ft_integrity
+        return int(jax.device_get(
+            ft_integrity.tree_fingerprint_jit(self.params)))
 
     def init_train_state(self, key=None):
         key = jax.random.PRNGKey(self.seed) if key is None else key
@@ -433,6 +445,22 @@ class Runtime:
                            donate=donate, params=params,
                            kv_layout=kv_layout, **engine_kw)
 
+    # -- qualification ------------------------------------------------------
+
+    def burn_in(self, *, mem_bytes: int = 1 << 22,
+                link_payload: int = 1 << 16,
+                ber_threshold: float = 0.0):
+        """Full hardware qualification (paper: DDR soak + IBERT PRBS
+        sweep): memory-test every mesh device and PRBS-sweep every axis.
+        The report is stored and surfaced by :meth:`describe`; its
+        ``axis_ber`` feeds ``Fabric.with_link_ber`` and the serve
+        engine's ``apply_link_reports`` gate."""
+        from repro.launch.preflight import run_burn_in
+        self._burn_in = run_burn_in(
+            self.mesh, mem_bytes=mem_bytes, link_payload=link_payload,
+            ber_threshold=ber_threshold)
+        return self._burn_in
+
     # -- report -------------------------------------------------------------
 
     @property
@@ -479,8 +507,19 @@ class Runtime:
         else:
             lose1 = "impossible (survivors < TP group)"
         plan_env = os.environ.get("REPRO_FAULT_PLAN", "").strip() or "none"
+        if self._burn_in is not None:
+            b = self._burn_in
+            burn = (f"{'PASS' if b.ok else 'FAIL'} "
+                    f"(mem {sum(m.ok for m in b.mem)}/{len(b.mem)}, "
+                    + (f"links {sum(l.ok for l in b.links)}/{len(b.links)}, "
+                       f"worst BER<"
+                       f"{max(l.ber_bound for l in b.links):.0e}"
+                       if b.links else "no mesh axes") + ")")
+        else:
+            burn = "not run (Runtime.burn_in() / serve --burn-in)"
         return (f"  ft        : devices={n_dev} tp={tp} "
-                f"evac(lose-1)->{lose1} fault_plan={plan_env}")
+                f"evac(lose-1)->{lose1} fault_plan={plan_env}\n"
+                f"  burn-in   : {burn}")
 
     def describe(self) -> str:
         """Plan + tier placement + kernel selection in one report."""

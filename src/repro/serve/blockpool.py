@@ -114,10 +114,19 @@ class BlockPool:
         # deregistration when a cached-free block is recycled)
         self._cached: dict = {}
         self._key_of: dict[int, object] = {}
+        # data integrity: quarantined (poisoned) blocks are parked off the
+        # free list until scrubbed clean (ft/integrity.py + engine scrub);
+        # alloc_gen bumps whenever a block is handed out fresh, so a
+        # sealed fingerprint can tell "this block was recycled" apart from
+        # "this block was corrupted"
+        self.poisoned: set[int] = set()
+        self.alloc_gen = np.zeros(num_blocks, np.int64)
         # stats
         self.prefix_hits = 0
         self.cow_copies = 0
         self.high_water = 0
+        self.poisoned_total = 0
+        self.scrubbed_total = 0
 
     # -- introspection ------------------------------------------------------
 
@@ -163,10 +172,13 @@ class BlockPool:
                 f"KV block pool exhausted ({self.num_blocks} blocks of "
                 f"{self.block_size}); grow num_blocks or wait for evictions")
         bid = self._free.popleft()
+        assert bid not in self.poisoned, \
+            f"poisoned block {bid} leaked onto the free list"
         key = self._key_of.pop(bid, None)
         if key is not None:               # recycled: drop stale registration
             del self._cached[key]
         self.refcount[bid] = 1
+        self.alloc_gen[bid] += 1          # fresh owner: stale seals invalid
         self.high_water = max(self.high_water, self.used_blocks)
         return bid
 
@@ -260,12 +272,53 @@ class BlockPool:
         for col in range(int(self.seq_blocks[slot])):
             bid = int(self.table[slot, col])
             self.refcount[bid] -= 1
-            if self.refcount[bid] == 0:
-                self._free.append(bid)
+            if self.refcount[bid] == 0 and bid not in self.poisoned:
+                self._free.append(bid)    # poisoned blocks stay parked
         self.table[slot, :] = NULL_BLOCK
         self.seq_blocks[slot] = 0
         self.next_pos[slot] = 0
         self.reserved[slot] = 0
+
+    # -- quarantine (data integrity) ----------------------------------------
+
+    def poison(self, bid: int):
+        """Quarantine a corrupted block: deregister it from the prefix
+        cache immediately (a later identical prompt must not share
+        corrupted KV) and park it off the free list — a poisoned block is
+        *never* re-allocated until :meth:`scrub_poisoned` clears it.
+        Blocks still referenced by live slots stay in their tables until
+        those slots release (the engine quarantines and replays the
+        affected streams in the same breath)."""
+        if bid < NUM_RESERVED or bid in self.poisoned:
+            return
+        self.poisoned.add(bid)
+        self.poisoned_total += 1
+        key = self._key_of.pop(bid, None)
+        if key is not None:
+            del self._cached[key]
+        if self.refcount[bid] == 0:       # cached/plain free: pull it out
+            self._free.remove(bid)
+
+    def drop_prefix_cache(self):
+        """Deregister every cached prefix block.  Used when block contents
+        are wholesale untrustworthy (e.g. KV appended during a params
+        corruption window): the blocks stay free/allocated as they are —
+        a recycled block is fully rewritten by splice before it is
+        observable — but no future admission may *share* one."""
+        self._cached.clear()
+        self._key_of.clear()
+
+    def scrub_poisoned(self) -> list[int]:
+        """Return quarantined blocks with no remaining references to the
+        free list and report them.  The *caller* owns wiping the device
+        contents first (``ft.integrity.clear_regions``) — the pool only
+        hands a block back once told its bits are clean."""
+        ready = sorted(b for b in self.poisoned if self.refcount[b] == 0)
+        for bid in ready:
+            self.poisoned.discard(bid)
+            self.scrubbed_total += 1
+            self._free.append(bid)
+        return ready
 
     def fork(self, src: int, dst: int):
         """Point ``dst`` at ``src``'s chain (shared, refcounted).  The next
@@ -322,7 +375,9 @@ class BlockPool:
     def __repr__(self) -> str:
         return (f"BlockPool(blocks={self.num_blocks}x{self.block_size}, "
                 f"free={self.free_blocks}, hits={self.prefix_hits}, "
-                f"cow={self.cow_copies}, hwm={self.high_water})")
+                f"cow={self.cow_copies}, hwm={self.high_water}"
+                + (f", poisoned={len(self.poisoned)}" if self.poisoned
+                   else "") + ")")
 
 
 # ---------------------------------------------------------------------------

@@ -120,6 +120,40 @@ scripts device failures, stalls and mid-tick raises at chosen tick
 numbers, which is how all of the above is exercised on the CPU mesh.
 ``snapshot()`` / ``load_snapshot()`` extend the same replay contract to a
 ``checkpoint``-backed warm restart across engine (or process) lifetimes.
+
+Data integrity
+--------------
+
+``scrub_every > 0`` arms the silent-data-corruption layer
+(ft/integrity.py) — the serving analog of the paper's DDR memory tests
+and PRBS link qualification, because a flipped KV bit serves garbage
+without raising anything:
+
+* **Sealing.**  Every scrub tick the engine fingerprints the *written*
+  span of each tracked region — pool blocks (paged) or slot rows (dense,
+  non-SWA) — with one jitted masked reduction over the whole cache, and
+  records a params checksum at build.  Decode/prefill only ever append
+  past a seal (allocation generations catch recycling), so a seal
+  mismatch at the next scrub is corruption, not progress.
+* **Detection.**  The scrub re-verifies every seal at its *recorded*
+  extent; the health gate re-verifies the params checksum
+  (``HealthReason.DATA_CORRUPTION``); the device->host token payload
+  carries a device-computed checksum the collector re-derives on the host
+  copy — a mismatch is a corrupt transfer, retried from the still-
+  resident device array, so a corrupted payload is never applied.
+* **Recovery.**  Corrupted blocks are quarantined (``BlockPool.poison``:
+  off the prefix cache and the free list until wiped clean on a later
+  scrub); only the *affected* streams roll back to their last verified
+  token, fold, and replay through standard prefill admission — per-stream
+  quarantine-and-replay, no mesh rebuild.  Corrupted params restore from
+  the build-time backup (the checkpoint stand-in) and every live stream
+  replays, since KV appended under corrupted params is garbage with a
+  valid seal.
+
+With ``scrub_every=1`` the detection point sits between a corrupted
+dispatch and its (double-buffered) collection, so zero corrupted tokens
+are ever emitted; coarser cadences trade detection latency for scrub
+cost, bounded by the per-request ``verified`` watermark rollback.
 """
 from __future__ import annotations
 
@@ -135,6 +169,7 @@ import numpy as np
 from repro.checkpoint.manager import EngineSnapshot
 from repro.ft import elastic as ft_elastic
 from repro.ft import health as ft_health
+from repro.ft import integrity as ft_integrity
 from repro.ft.inject import FaultInjector
 from repro.ft.straggler import StragglerMonitor
 from repro.models.attention import PAD_POS
@@ -164,6 +199,10 @@ class Request:
     # into ``prompt`` (evacuation / snapshot re-prefill the folded prefix;
     # the counter makes folding idempotent across repeated evacuations)
     folded: int = 0
+    # integrity watermark: tokens verified against clean state at the last
+    # scrub — a corruption rollback truncates ``generated`` here (never
+    # below ``folded``: those tokens already live inside the prompt)
+    verified: int = 0
 
 
 @dataclass
@@ -178,6 +217,14 @@ class EngineStats:
     evacuations: int = 0
     tick_retries: int = 0
     health_checks: int = 0
+    # data integrity (scrub_every > 0)
+    scrubs: int = 0
+    corruption_detected: int = 0   # detection events (kv regions + params
+    #                                restores + collective mismatches)
+    kv_quarantined: int = 0        # pool blocks poisoned / dense rows hit
+    streams_replayed: int = 0      # streams rolled back + requeued
+    params_restores: int = 0
+    transfer_retries: int = 0      # device->host payload re-fetches
 
     @property
     def summary(self) -> str:
@@ -190,6 +237,11 @@ class EngineStats:
             s += (f" evacuations={self.evacuations} "
                   f"retries={self.tick_retries} "
                   f"health_checks={self.health_checks}")
+        if self.scrubs or self.corruption_detected:
+            s += (f" scrubs={self.scrubs} "
+                  f"corruption_detected={self.corruption_detected} "
+                  f"quarantined={self.kv_quarantined} "
+                  f"replayed={self.streams_replayed}")
         return s
 
 
@@ -266,7 +318,13 @@ class ServeEngine:
     (defaults to parsing ``REPRO_FAULT_PLAN``; pass ``None`` to disable),
     ``straggler_kw`` overrides the StragglerMonitor thresholds, and
     ``max_evacuations`` is the give-up bound on repeated evacuation (a
-    persistently failing data path must eventually surface, not loop)."""
+    persistently failing data path must eventually surface, not loop).
+
+    ``scrub_every`` arms the data-integrity layer (0 = off): KV seals are
+    re-verified every that many ticks, the params checksum is registered
+    at build (re-verified by scrub and health gate), and the device->host
+    token payload is checksummed per tick — see the module docstring's
+    "Data integrity" section for the detect/quarantine/replay contract."""
 
     def __init__(self, runtime, *, num_slots: int = 4,
                  capacity: Optional[int] = None,
@@ -285,7 +343,8 @@ class ServeEngine:
                  health_every: int = 0, injector=_FROM_ENV,
                  tick_retries: int = 2, retry_backoff_s: float = 0.02,
                  straggler_kw: Optional[dict] = None,
-                 max_evacuations: int = 8):
+                 max_evacuations: int = 8,
+                 scrub_every: int = 0):
         rt = runtime
         self.rt = rt
         self.caps = rt.caps
@@ -353,6 +412,15 @@ class ServeEngine:
         self._block_size = block_size if block_size is not None else 16
         self._num_blocks = num_blocks
         self._max_blocks_per_seq = max_blocks_per_seq
+        # data integrity: scrub cadence (0 = off); SWA's ring buffer
+        # legitimately rewrites sealed entries, so dense SWA archs cannot
+        # carry KV seals (paged already excludes SWA)
+        if scrub_every and self.caps.swa:
+            raise ValueError(
+                f"arch {rt.cfg.name!r} uses a sliding-window (ring-buffer) "
+                f"KV cache whose in-place rewrites are indistinguishable "
+                f"from corruption; scrub_every needs a non-SWA arch")
+        self.scrub_every = scrub_every
         # fault tolerance: watchdogs + scripted-fault harness
         self.health_every = health_every
         self.injector = (FaultInjector.from_env() if injector is _FROM_ENV
@@ -374,7 +442,14 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self.stats = EngineStats()
+        # integrity state that survives a rebuild: params checksum +
+        # restore source, and injection timestamps (detection latency)
+        self._params_fp: Optional[int] = None
+        self._params_backup = None
+        self._last_inject: dict = {}
         self._build_data_path()
+        if self.scrub_every:
+            self._register_params_integrity()
 
     def _build_data_path(self):
         """(Re)build everything derived from the Runtime: jitted
@@ -441,7 +516,18 @@ class ServeEngine:
         self._tok = jnp.zeros((self.num_slots, 1), jnp.int32)  # last emitted
         self._pos = jnp.zeros((self.num_slots,), jnp.int32)
         self._inflight = None   # (tokens of step t-1, slot->req snap,
-        #                          chunk-final (c_next, req, slot) | None)
+        #                          chunk-final (c_next, req, slot) | None,
+        #                          device token checksum | None)
+        # integrity: region seals {block|slot: (count, fp, alloc gen)},
+        # COW copies since the last scrub (corruption propagates through a
+        # block copy, so a bad source condemns its descendants), and the
+        # dense slots' admission generation (the paged pool tracks its own)
+        self._sealed: dict = {}
+        self._cow_since_scrub: list = []
+        self._slot_gen = np.zeros(self.num_slots, np.int64)
+        if self.paged:
+            clear_kw = dict(donate_argnums=(0,)) if self._donate else {}
+            self._clear = jax.jit(ft_integrity.clear_regions, **clear_kw)
         # scheduler state: the one prompt mid-chunked-prefill (req, slot,
         # consumed token count, paged per-column dst) and this tick's
         # planned chunk
@@ -624,6 +710,7 @@ class ServeEngine:
         for i, (s, r) in enumerate(zip(slots, group)):
             self.slot_req[s] = r
             self.slot_pos[s] = lens[i]
+            self._slot_gen[s] += 1    # fresh occupant: stale seals invalid
             tok = int(first[i])
             r.generated.append(tok)
             r.first_token_at = now
@@ -655,9 +742,18 @@ class ServeEngine:
         finished (freed last tick, step was speculative) are discarded.
         A scheduler tick that completed a prompt's final chunk also
         carries that request's first token (``chunk_final``), collected
-        with the same one-tick lag as decode tokens."""
-        tok_dev, reqs, chunk_final = inflight
+        with the same one-tick lag as decode tokens.
+
+        With the integrity layer armed the payload carries a
+        device-computed checksum; the host copy is re-checksummed after
+        the transfer (this is also where scripted ``target=collective``
+        corruption flips a bit — in the *host copy*, modeling a corrupt
+        device->host hop) and a mismatch re-fetches from the still-
+        resident device array, so a corrupted payload is never applied."""
+        tok_dev, reqs, chunk_final, tok_sum = inflight
         vals = np.asarray(jax.device_get(tok_dev)).reshape(-1)
+        if tok_sum is not None:
+            vals = self._verify_payload(tok_dev, vals, tok_sum)
         now = time.perf_counter()
         for slot, req in enumerate(reqs):
             if req is None or req.done:
@@ -708,6 +804,10 @@ class ServeEngine:
             for s in range(self.num_slots):
                 bids[s], cp = self.pool.write_plan(s, self._decoding(s))
                 copies.extend(cp)
+            if self.scrub_every:
+                # corruption propagates through a block copy: the scrub
+                # condemns a bad source's descendants along this log
+                self._cow_since_scrub.extend(copies)
             if copies:
                 # pad to a fixed width (<= 1 COW per slot per tick)
                 # with trash self-copies so the jitted copy compiles
@@ -763,7 +863,9 @@ class ServeEngine:
         # NB: return self._tok, not tok — the final-chunk seeding above
         # donated tok's buffer; the seeded array is lane-identical for
         # every decoding slot (the chunk slot is masked out of reqs)
-        return (self._tok, reqs, chunk_final)
+        tok_sum = (ft_integrity.leaf_fingerprint_jit(self._tok)
+                   if self.scrub_every else None)
+        return (self._tok, reqs, chunk_final, tok_sum)
 
     def _plan_chunk(self) -> Optional[dict]:
         """Scheduler-mode host planning for this tick's prefill chunk.
@@ -791,6 +893,7 @@ class ServeEngine:
                     req.admitted_at = time.perf_counter()
                     self.slot_req[free] = req
                     self.slot_pos[free] = 0
+                    self._slot_gen[free] += 1
                     dst = None
                     if self.paged:
                         nb = self.pool.blocks_needed(len(req.prompt))
@@ -876,6 +979,11 @@ class ServeEngine:
         t = self._tick_no
         if self.health_every and t % self.health_every == 0:
             self._health_gate(t)
+        if self.scrub_every and self.injector is not None:
+            # scripted silent corruption lands *before* dispatch: this
+            # tick's step reads the flipped bits, and the scrub below must
+            # catch them before its output is ever collected
+            self._apply_corruptions(t)
 
         self._chunk = None
         if self.scheduler:
@@ -903,6 +1011,11 @@ class ServeEngine:
                 if rep.action != "ok":
                     self._on_straggler(t, rep)
 
+        if self.scrub_every and t % self.scrub_every == 0:
+            # after the inflight swap: a detection can still drop the
+            # just-dispatched (corrupt) lane before it is ever collected
+            self._scrub(t)
+
         admitted = 0
         if not self.scheduler:
             admitted = self._admit_batch()
@@ -925,7 +1038,20 @@ class ServeEngine:
     def _health_gate(self, t: int):
         """Proof-of-work health check over the engine's devices, scripted
         faults overlaid; any unhealthy device escalates straight to
-        evacuation (a failed checksum is not a transient)."""
+        evacuation (a failed checksum is not a transient).  With the
+        integrity layer armed the gate also re-verifies the params
+        checksum registered at build — a mismatch is silent data
+        corruption (``HealthReason.DATA_CORRUPTION``), recovered by a
+        params restore + full stream rollback, not an evacuation (the
+        devices are fine; the bits are not)."""
+        if self._params_fp is not None and not self._verify_params():
+            self._log_event(
+                "health", tick=t,
+                failed=[{"device": "params",
+                         "reason": ft_health.HealthReason
+                         .DATA_CORRUPTION.value,
+                         "detail": "params fingerprint mismatch"}])
+            self._recover_params(t, origin="health_gate")
         reports = ft_health.check_devices(self._devices)
         if self.injector is not None:
             reports = self.injector.apply_health(reports, self._devices, t)
@@ -954,6 +1080,347 @@ class ServeEngine:
                 reason=f"straggler {rep.action} "
                        f"(tick {rep.ratio:.1f}x rolling median)",
                 bad=self._suspects())
+
+    # -- data integrity -------------------------------------------------------
+
+    def _register_params_integrity(self):
+        """Register the params checksum + host restore source.  The backup
+        stands in for the last checkpoint (``EngineSnapshot`` deliberately
+        excludes weights); a deployment would reload from
+        ``checkpoint.load_pytree`` instead, through the same path."""
+        self._params_fp = int(jax.device_get(
+            ft_integrity.tree_fingerprint_jit(self.params)))
+        self._params_backup = jax.device_get(self.params)
+
+    def _verify_params(self) -> bool:
+        return self._params_fp == int(jax.device_get(
+            ft_integrity.tree_fingerprint_jit(self.params)))
+
+    def _verify_payload(self, tok_dev, vals: np.ndarray,
+                        tok_sum) -> np.ndarray:
+        """Checksum-verify the device->host token transfer.  Scripted
+        ``target=collective`` faults flip a bit in the *host copy* here
+        (the transfer is the corruption point); a mismatch re-fetches from
+        the still-resident device array, so a corrupted payload is never
+        applied to any stream."""
+        t = self._tick_no
+        if self.injector is not None:
+            for f in self.injector.due_corruptions(t, "collective"):
+                f.fired += 1
+                rng = np.random.default_rng((0x7A6, f.seed, f.fired))
+                i = int(rng.integers(vals.size))
+                b = int(rng.integers(32))
+                vals = vals.copy()
+                vals[i] = np.int32(np.uint32(vals[i]) ^ np.uint32(1 << b))
+                self._last_inject["collective"] = t
+                self._log_event("corrupt_inject", tick=t,
+                                target="collective", index=i, bit=b)
+        expect = int(jax.device_get(tok_sum))
+        if ft_integrity.host_leaf_fingerprint(vals) == expect:
+            return vals
+        self.stats.corruption_detected += 1
+        self.stats.transfer_retries += 1
+        self._log_event(
+            "corruption", tick=t, target="collective",
+            detect_latency_ticks=t - self._last_inject.get("collective", t))
+        fresh = np.asarray(jax.device_get(tok_dev)).reshape(-1)
+        if ft_integrity.host_leaf_fingerprint(fresh) != expect:
+            raise RuntimeError(
+                "token payload checksum mismatch persists after re-fetch: "
+                "the device-resident payload itself is corrupt")
+        return fresh
+
+    def _apply_corruptions(self, t: int):
+        """Fire due scripted ``kind=corrupt`` faults (kv and params
+        targets) before dispatch; ``target=collective`` fires at
+        collection (:meth:`_verify_payload`).  A kv fault with nothing
+        sealed yet stays armed — a real upset by definition hits resident
+        data."""
+        for f in self.injector.due_corruptions(t, "kv"):
+            if self._corrupt_kv(t, f):
+                f.fired += 1
+        for f in self.injector.due_corruptions(t, "params"):
+            f.fired += 1
+            self._corrupt_params(t, f)
+
+    def _corrupt_kv(self, t: int, f) -> bool:
+        """Flip one seeded bit inside a currently *sealed* span (the
+        detection-guaranteed region: decode only ever appends past a
+        seal, so the flip can never be legitimately overwritten before
+        the next scrub)."""
+        cand = []
+        for r, (cnt, fp, gen) in sorted(self._sealed.items()):
+            cur = (self.pool.alloc_gen[r] if self.paged
+                   else self._slot_gen[r])
+            if cnt > 0 and gen == int(cur):
+                cand.append((r, cnt))
+        if not cand:
+            return False
+        rng = np.random.default_rng((0xC0, f.seed, f.fired))
+        r, cnt = cand[int(rng.integers(len(cand)))]
+        leaves, treedef = jax.tree_util.tree_flatten(self.caches)
+        j = int(rng.integers(len(leaves)))
+        leaf = leaves[j]
+        shape = leaf.shape                     # [R, region, entry, ...]
+        mi = (int(rng.integers(shape[0])), r, int(rng.integers(cnt)),
+              *(int(rng.integers(d)) for d in shape[3:]))
+        flat = int(np.ravel_multi_index(mi, shape))
+        bit = int(rng.integers(ft_integrity.bit_width(leaf.dtype)))
+        leaves[j] = ft_integrity.flip_bit_jit(leaf, flat, bit)
+        self.caches = jax.tree_util.tree_unflatten(treedef, leaves)
+        self._last_inject["kv"] = t
+        self._log_event("corrupt_inject", tick=t, target="kv",
+                        region=int(r), leaf=j, bit=bit)
+        return True
+
+    def _corrupt_params(self, t: int, f):
+        leaves, treedef = jax.tree_util.tree_flatten(self.params)
+        rng = np.random.default_rng((0xBAD, f.seed, f.fired))
+        j = int(rng.integers(len(leaves)))
+        leaf = leaves[j]
+        flat = int(rng.integers(leaf.size))
+        bit = int(rng.integers(ft_integrity.bit_width(leaf.dtype)))
+        leaves[j] = ft_integrity.flip_bit_jit(leaf, flat, bit)
+        self.params = jax.tree_util.tree_unflatten(treedef, leaves)
+        self._last_inject["params"] = t
+        self._log_event("corrupt_inject", tick=t, target="params",
+                        leaf=j, bit=bit)
+
+    def _scrub(self, t: int):
+        """Integrity scrub: wipe + release blocks quarantined last round,
+        re-verify every seal at its recorded extent, recover from
+        anything that fails, then reseal the current state and advance
+        the per-request ``verified`` watermarks."""
+        self.stats.scrubs += 1
+        if self.paged:
+            ready = self.pool.scrub_poisoned()
+            if ready:
+                self.caches = self._clear(
+                    self.caches, jnp.asarray(ready, jnp.int32))
+                self._log_event("scrub_clean", tick=t,
+                                blocks=[int(b) for b in ready])
+        bad = self._verify_seals()
+        if bad:
+            self._recover_kv(t, bad)
+        if self._params_fp is not None and not self._verify_params():
+            self._recover_params(t, origin="scrub")
+        self._reseal()
+        self._cow_since_scrub = []
+
+    def _verify_seals(self) -> list:
+        """Regions whose recorded fingerprint no longer matches.  Seals
+        whose region was legitimately recycled since (allocation
+        generation moved) are skipped — recycling rewrites bits by
+        design."""
+        if not self._sealed:
+            return []
+        N = self.pool.num_blocks if self.paged else self.num_slots
+        counts = np.zeros(N, np.int32)
+        valid = {}
+        for r, (cnt, fp, gen) in self._sealed.items():
+            cur = (self.pool.alloc_gen[r] if self.paged
+                   else self._slot_gen[r])
+            if cnt > 0 and gen == int(cur):
+                counts[r] = cnt
+                valid[r] = fp
+        if not valid:
+            return []
+        fps = np.asarray(jax.device_get(
+            ft_integrity.region_fingerprints_jit(
+                self.caches, jnp.asarray(counts))))
+        return sorted(r for r, fp in valid.items() if int(fps[r]) != fp)
+
+    def _reseal(self):
+        """Fingerprint the written span of every tracked region — pool
+        blocks along live chains (shared blocks at their fullest view)
+        plus registered cached-free blocks (a future prompt may share
+        them), or dense occupied slot rows up to the collected watermark
+        — in one jitted masked reduction."""
+        counts: dict = {}
+        pf = self._prefilling
+        if self.paged:
+            pool, bs = self.pool, self.pool.block_size
+            for s in range(self.num_slots):
+                nb = int(pool.seq_blocks[s])
+                if nb == 0:
+                    continue
+                entries = (pf["consumed"]
+                           if pf is not None and pf["slot"] == s
+                           else int(pool.next_pos[s]))
+                for col in range(nb):
+                    bid = int(pool.table[s, col])
+                    cnt = min(max(entries - col * bs, 0), bs)
+                    counts[bid] = max(counts.get(bid, 0), cnt)
+            for bid in pool._key_of:
+                if int(pool.refcount[bid]) == 0:
+                    counts[bid] = bs
+            N = pool.num_blocks
+            gen = pool.alloc_gen
+        else:
+            for s in range(self.num_slots):
+                if self.slot_req[s] is None:
+                    continue
+                entries = (pf["consumed"]
+                           if pf is not None and pf["slot"] == s
+                           else int(self.slot_pos[s]))
+                counts[s] = min(entries, self.capacity)
+            N = self.num_slots
+            gen = self._slot_gen
+        counts = {r: c for r, c in counts.items() if c > 0}
+        if counts:
+            vec = np.zeros(N, np.int32)
+            for r, c in counts.items():
+                vec[r] = c
+            fps = np.asarray(jax.device_get(
+                ft_integrity.region_fingerprints_jit(
+                    self.caches, jnp.asarray(vec))))
+            self._sealed = {r: (c, int(fps[r]), int(gen[r]))
+                            for r, c in counts.items()}
+        else:
+            self._sealed = {}
+        # clean scrub: every collected token of a live stream came from
+        # state now proven intact — advance the rollback watermarks
+        for s in range(self.num_slots):
+            r = self.slot_req[s]
+            if r is not None:
+                r.verified = len(r.generated)
+
+    def _recover_kv(self, t: int, bad: list):
+        """Quarantine-and-replay for corrupted KV: poison the blocks (and
+        their copy-on-write descendants), roll every affected stream back
+        to its verified watermark and requeue it through standard prefill
+        admission.  Per-stream recovery — no mesh rebuild, unaffected
+        streams never notice."""
+        self.stats.corruption_detected += len(bad)
+        lat = t - self._last_inject.get("kv", t)
+        bad = set(bad)
+        if self.paged:
+            for src, dst in self._cow_since_scrub:
+                if src in bad:
+                    bad.add(dst)
+            affected = [s for s in range(self.num_slots)
+                        if int(self.pool.seq_blocks[s])
+                        and any(b in bad for b in self.pool.chain(s))]
+            for bid in sorted(bad):
+                self.pool.poison(bid)
+        else:
+            affected = sorted(bad)
+        self.stats.kv_quarantined += len(bad)
+        replayed = self._replay_streams(affected)
+        self._log_event(
+            "corruption", tick=t, target="kv",
+            regions=[int(b) for b in sorted(bad)],
+            streams=[r.rid for r in replayed],
+            detect_latency_ticks=lat)
+
+    def _recover_params(self, t: int, origin: str):
+        """Silent params corruption: restore from the registered backup
+        and roll back *every* live stream — KV appended under corrupted
+        params is garbage wearing a valid seal, so affected chains are
+        quarantined wholesale and the prefix cache is dropped (a replayed
+        prompt must not share a garbage block)."""
+        self.stats.corruption_detected += 1
+        self.stats.params_restores += 1
+        # host numpy restore: jit re-places per the executable's shardings
+        # on the next dispatch (same path evacuation's host round-trip uses)
+        self.params = jax.tree.map(np.asarray, self._params_backup)
+        affected = [s for s in range(self.num_slots)
+                    if self.slot_req[s] is not None]
+        if self.paged:
+            bad = set()
+            for s in affected:
+                bad.update(self.pool.chain(s))
+            for bid in sorted(bad):
+                self.pool.poison(bid)
+            self.pool.drop_prefix_cache()
+            self.stats.kv_quarantined += len(bad)
+        replayed = self._replay_streams(affected)
+        self._sealed = {}       # every seal is suspect under bad params
+        self._log_event(
+            "corruption", tick=t, target="params", origin=origin,
+            streams=[r.rid for r in replayed],
+            detect_latency_ticks=t - self._last_inject.get("params", t))
+
+    def _replay_streams(self, slots: list) -> list:
+        """Roll the given slots' streams back to their verified
+        watermarks and requeue them at the queue head: truncate suspect
+        tokens, drop the not-yet-collected inflight lane, fold, release
+        the slot.  Standard admission then replays prompt+generated
+        through prefill — same per-stream contract as evacuation, without
+        touching the mesh."""
+        replayed = []
+        for s in sorted(slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            inf = self._inflight
+            if inf is not None:
+                tok_dev, reqs, chunk_final, tok_sum = inf
+                if reqs[s] is req:
+                    reqs[s] = None      # suspect lane: never collect it
+                if chunk_final is not None and chunk_final[1] is req:
+                    self._inflight = (tok_dev, reqs, None, tok_sum)
+            keep = max(req.verified, req.folded)
+            del req.generated[keep:]
+            del req.token_times[max(0, keep - 1):]
+            _fold_replay_prefix(req)
+            self.slot_req[s] = None
+            self.slot_pos[s] = 0
+            if self.paged:
+                self.pool.release(s)
+            if self.scheduler:
+                self._pos = self._park(self._pos, s)
+            if self._prefilling is not None \
+                    and self._prefilling["slot"] == s:
+                self._prefilling = None
+            replayed.append(req)
+        if replayed:
+            self.stats.streams_replayed += len(replayed)
+            if self.scheduler:
+                self.sched.requeue_front(replayed)
+            else:
+                for r in reversed(replayed):
+                    self.queue.appendleft(r)
+        return replayed
+
+    def apply_link_reports(self, reports, *, ber_threshold: float = 1e-9):
+        """Demote the mesh for links failing the BER threshold — the
+        serving end of the PRBS link sweep (core/linktest.py).  A failing
+        *data*-parallel axis drops its trailing device slice through the
+        standard evacuation path (streams replay, TP preserved); a
+        failing model axis cannot shrink below one TP group, so it is
+        logged as degraded (fabric derating via
+        ``core.fabric.Fabric.with_link_ber`` is the planner's recourse).
+        Returns the evicted device ids."""
+        if self.mesh is None:
+            return []
+        failing = [r for r in reports
+                   if (not r.ok) or r.ber > ber_threshold]
+        if not failing:
+            return []
+        names = list(self.mesh.axis_names)
+        shape = dict(zip(names, self.mesh.devices.shape))
+        victims: set = set()
+        for rep in failing:
+            ax = getattr(rep, "axis", None)
+            if ax not in shape:
+                continue
+            if ax == "model" or shape[ax] <= 1:
+                self._log_event("degraded_link", tick=self._tick_no,
+                                axis=ax, ber=rep.ber,
+                                threshold=ber_threshold)
+                continue
+            sl = [slice(None)] * self.mesh.devices.ndim
+            sl[names.index(ax)] = slice(shape[ax] - 1, shape[ax])
+            victims.update(
+                d.id for d in self.mesh.devices[tuple(sl)].flatten())
+        if victims:
+            self._evacuate(
+                tick=self._tick_no,
+                reason="link BER over threshold on "
+                       + ",".join(sorted(r.axis for r in failing)),
+                bad=victims)
+        return sorted(victims)
 
     def _evacuate(self, *, tick: int, reason: str, bad: set):
         """Live evacuation: move every in-flight stream onto a surviving

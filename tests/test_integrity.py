@@ -1,0 +1,491 @@
+"""End-to-end data-integrity suite: corruption injection -> detection ->
+quarantine -> replay.
+
+The contract under test (the serving analog of the paper's DDR + IBERT
+qualification): any scripted single-bit corruption (ft/inject.py
+``kind=corrupt``) of a sealed KV region, a params leaf, or the
+device->host token payload is detected by the integrity layer
+(ft/integrity.py fingerprints on the engine's scrub cadence) with a 100%
+detection rate, zero corrupted tokens are ever emitted, only the
+*affected* streams replay (f32 token-identical to an uninjected run,
+``streams dropped == 0``), and quarantined pool blocks are never
+re-allocated while poisoned.
+
+Parity runs in f32 for the same reason as tests/test_ft_serve.py: the
+recovery path re-executes identical values through different XLA
+programs, and bf16 would expose argmax to sub-ulp reassociation noise.
+
+The mesh-wide tests (link-BER demotion, corruption on a 2x4 mesh) need
+the forced 8-device CPU topology; scripts/ci.sh runs this file as its own
+gate with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import serialize
+from repro.checkpoint.manager import EngineSnapshot
+from repro.checkpoint.serialize import ChecksumError
+from repro.configs import get_smoke_config
+from repro.core.fabric import tpu_v5e_fabric
+from repro.core.linktest import LinkReport
+from repro.ft import integrity
+from repro.ft.inject import Fault, FaultInjector
+from repro.launch.preflight import run_burn_in
+from repro.runtime import Runtime
+from repro.serve.blockpool import NUM_RESERVED, BlockPool
+from repro.serve.engine import Request
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(scripts/ci.sh runs this gate)")
+
+ARCH = "llama3.2-3b"
+
+
+def _cfg():
+    return get_smoke_config(ARCH).scaled(dtype=jnp.float32)
+
+
+def _stream(cfg, n=4, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(3, 14)),
+                                        dtype=np.int32),
+                    max_new_tokens=int(rng.integers(6, 10)))
+            for i in range(n)]
+
+
+def _run(cfg, *, mesh=None, kv_layout="dense", plan=None, scrub=0, **kw):
+    rt = Runtime.create(cfg, mesh, shape_kind="decode", capacity=32,
+                        kv_layout=kv_layout)
+    kw.setdefault("retry_backoff_s", 0.001)
+    eng = rt.engine(num_slots=2, scrub_every=scrub,
+                    injector=FaultInjector.parse(plan) if plan else None,
+                    **kw)
+    for r in _stream(cfg):
+        eng.submit(r)
+    eng.run_to_completion()
+    assert len(eng.finished) == 4, "stream dropped"
+    return eng
+
+
+def _tokens(eng):
+    return {r.rid: list(r.generated) for r in eng.finished}
+
+
+# ---------------------------------------------------------------------------
+# fingerprint primitives
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_leaf_fingerprint_host_device_agree(dtype):
+    x = jnp.asarray(np.random.default_rng(0).normal(size=37) * 9, dtype)
+    dev = int(jax.device_get(integrity.leaf_fingerprint(x)))
+    host = integrity.host_leaf_fingerprint(np.asarray(jax.device_get(x)))
+    assert dev == host
+
+
+def test_single_bit_flip_always_changes_leaf_fingerprint():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=19), jnp.float32)
+    base = int(jax.device_get(integrity.leaf_fingerprint(x)))
+    for idx in (0, 7, 18):
+        for bit in (0, 13, 31):
+            y = integrity.flip_bit(x, idx, bit)
+            assert int(jax.device_get(integrity.leaf_fingerprint(y))) != base
+
+
+def test_region_fingerprints_respect_counts():
+    """A flip past a region's count must not alarm; within it, only that
+    region's fingerprint moves."""
+    caches = {"k": jnp.asarray(
+        np.random.default_rng(2).normal(size=(2, 3, 8, 4)), jnp.float32)}
+    counts = jnp.asarray([8, 5, 0], jnp.int32)
+    base = np.asarray(jax.device_get(
+        integrity.region_fingerprints(caches, counts)))
+    assert base[2] == 0                       # count-0 region is silent
+    shape = caches["k"].shape
+    # entry 6 of region 1 is past count=5: excluded from the seal
+    flat = int(np.ravel_multi_index((0, 1, 6, 2), shape))
+    past = {"k": integrity.flip_bit(caches["k"], flat, 11)}
+    assert np.array_equal(np.asarray(jax.device_get(
+        integrity.region_fingerprints(past, counts))), base)
+    # entry 3 of region 1 is sealed: only region 1 moves
+    flat = int(np.ravel_multi_index((0, 1, 3, 2), shape))
+    hit = {"k": integrity.flip_bit(caches["k"], flat, 11)}
+    got = np.asarray(jax.device_get(
+        integrity.region_fingerprints(hit, counts)))
+    assert got[1] != base[1] and got[0] == base[0] and got[2] == base[2]
+
+
+def test_tree_fingerprint_distinguishes_leaves():
+    """The salts make 'same flip, different leaf' distinct totals."""
+    t = {"a": jnp.zeros(4, jnp.float32), "b": jnp.zeros(4, jnp.float32)}
+    fa = int(jax.device_get(integrity.tree_fingerprint(
+        {**t, "a": integrity.flip_bit(t["a"], 1, 5)})))
+    fb = int(jax.device_get(integrity.tree_fingerprint(
+        {**t, "b": integrity.flip_bit(t["b"], 1, 5)})))
+    assert fa != fb
+
+
+# ---------------------------------------------------------------------------
+# fault-plan grammar hardening
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_grammar_parses():
+    inj = FaultInjector.parse("tick=6,kind=corrupt,target=kv,seed=7")
+    f = inj.faults[0]
+    assert f.target == "kv" and f.seed == 7 and f.times == 1
+    assert inj.due_corruptions(6, "kv") == [f]
+    assert inj.due_corruptions(6, "params") == []
+    f.fired += 1                     # the engine marks it applied
+    assert inj.due_corruptions(7, "kv") == []
+
+
+@pytest.mark.parametrize("plan,msg", [
+    ("tick=3,kind=corrupt", "needs target="),
+    ("tick=3,kind=corrupt,target=disk", "needs target="),
+    ("tick=3,kind=raise,target=kv", "only applies to kind=corrupt"),
+    ("tick=3,kind=raise,volts=9", "valid keys: tick, device, times"),
+    ("tick=3,kind=raise,times=0", "must be positive"),
+    ("tick=3,kind=stall,ms=-5", "must be positive"),
+    ("tick=3,kind=stall,ms=fast", "bad value for ms='fast'"),
+    ("tick=3,kind=raise,tick=4", "key 'tick' given twice"),
+    ("tick=3,kind=raise; tick=3,kind=raise", "duplicate of"),
+])
+def test_fault_plan_hardening(plan, msg):
+    with pytest.raises(ValueError, match=msg):
+        FaultInjector.parse(plan)
+
+
+def test_duplicate_detection_quotes_both_clauses():
+    with pytest.raises(ValueError) as e:
+        FaultInjector.parse("tick=5,kind=stall,device=3;"
+                            "tick=5,kind=stall,device=3,ms=9")
+    assert "tick=5,kind=stall,device=3" in str(e.value)
+    # distinct devices are NOT duplicates
+    FaultInjector.parse("tick=5,kind=stall,device=3;tick=5,kind=stall,device=4")
+
+
+# ---------------------------------------------------------------------------
+# block pool quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_pool_poisoned_block_never_reallocated():
+    pool = BlockPool(num_blocks=8 + NUM_RESERVED, block_size=4,
+                     num_slots=2, max_blocks_per_seq=4)
+    pool.admit(0, np.arange(8, dtype=np.int32), 2)   # 2 blocks
+    victim = pool.chain(0)[0]
+    pool.poison(victim)
+    assert victim in pool.poisoned
+    pool.release(0)                                   # refcount -> 0: parked
+    assert victim not in pool._free
+    # exhaust the pool: the poisoned block must never come back
+    got = set()
+    for s, L in ((0, 12), (1, 12)):
+        pool.admit(s, np.arange(L, dtype=np.int32) + s, 3)
+        got.update(pool.chain(s))
+    assert victim not in got
+    # still quarantined until scrubbed; scrub returns exactly it
+    assert pool.scrub_poisoned() == [victim]
+    assert victim in pool._free and pool.poisoned == set()
+    assert pool.poisoned_total == 1 and pool.scrubbed_total == 1
+
+
+def test_pool_poison_drops_prefix_registration():
+    pool = BlockPool(num_blocks=8 + NUM_RESERVED, block_size=4,
+                     num_slots=2, max_blocks_per_seq=4)
+    prompt = np.arange(8, dtype=np.int32)
+    pool.admit(0, prompt, 2)
+    pool.release(0)                      # cached-free, registered
+    assert pool._key_of
+    victim = next(iter(pool._key_of))
+    pool.poison(victim)
+    assert victim not in pool._key_of
+    # an identical prompt must NOT share the poisoned block
+    pool.admit(1, prompt, 2)
+    assert victim not in pool.chain(1)
+
+
+def test_pool_drop_prefix_cache():
+    pool = BlockPool(num_blocks=8 + NUM_RESERVED, block_size=4,
+                     num_slots=2, max_blocks_per_seq=4)
+    pool.admit(0, np.arange(8, dtype=np.int32), 2)
+    pool.release(0)
+    assert pool._cached and pool._key_of
+    pool.drop_prefix_cache()
+    assert not pool._cached and not pool._key_of
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: corruption -> detection -> quarantine -> replay (token parity)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+@pytest.mark.parametrize("target,scrub", [
+    ("kv", 1), ("params", 2), ("collective", 1)])
+def test_corruption_detected_and_replayed_token_parity(kv_layout, target,
+                                                       scrub):
+    cfg = _cfg()
+    base = _tokens(_run(cfg, kv_layout=kv_layout))
+    eng = _run(cfg, kv_layout=kv_layout, scrub=scrub,
+               plan=f"tick=3,kind=corrupt,target={target},seed=5")
+    s = eng.stats
+    # 100% detection: exactly the injected fault, nothing silent
+    injected = [f for f in eng.injector.faults if f.kind == "corrupt"]
+    assert all(f.fired for f in injected), "fault never applied"
+    assert s.corruption_detected >= len(injected) >= 1
+    assert [e for e in eng.ft_events if e["event"] == "corrupt_inject"]
+    detections = [e for e in eng.ft_events if e["event"] == "corruption"]
+    assert detections and all(
+        e["detect_latency_ticks"] <= max(scrub, 1) for e in detections)
+    # zero corrupted tokens: byte-identical streams, nothing dropped
+    assert _tokens(eng) == base
+    if target == "kv":
+        assert s.kv_quarantined >= 1 and s.streams_replayed >= 1
+    if target == "params":
+        assert s.params_restores == 1 and s.streams_replayed >= 1
+    if target == "collective":
+        assert s.transfer_retries == 1 and s.streams_replayed == 0
+    if kv_layout == "paged":
+        # quarantined blocks were scrubbed back, none leaked while poisoned
+        assert eng.pool.poisoned == set()
+        assert eng.pool.scrubbed_total == eng.pool.poisoned_total
+
+
+def test_multiple_corruptions_all_detected():
+    cfg = _cfg()
+    base = _tokens(_run(cfg, kv_layout="paged"))
+    eng = _run(cfg, kv_layout="paged", scrub=1,
+               plan="tick=3,kind=corrupt,target=kv,seed=5;"
+                    "tick=6,kind=corrupt,target=kv,seed=11;"
+                    "tick=8,kind=corrupt,target=collective,seed=2")
+    assert _tokens(eng) == base
+    assert eng.stats.corruption_detected >= 3
+    assert all(f.fired for f in eng.injector.faults)
+
+
+def test_scheduler_mode_corruption_parity():
+    cfg = _cfg()
+    kw = dict(kv_layout="paged", scheduler=True, token_budget=16,
+              chunk_size=8)
+    base = _tokens(_run(cfg, **kw))
+    eng = _run(cfg, scrub=1, plan="tick=3,kind=corrupt,target=kv,seed=5",
+               **kw)
+    assert _tokens(eng) == base
+    assert eng.stats.corruption_detected >= 1
+    assert eng.stats.streams_replayed >= 1
+
+
+def test_params_corruption_caught_by_health_gate():
+    """With a coarse scrub the health gate's params re-verification is the
+    detector (HealthReason.DATA_CORRUPTION), not an evacuation."""
+    cfg = _cfg()
+    base = _tokens(_run(cfg))
+    eng = _run(cfg, scrub=50, health_every=2,
+               plan="tick=3,kind=corrupt,target=params,seed=9")
+    assert _tokens(eng) == base
+    assert eng.stats.params_restores == 1
+    assert eng.stats.evacuations == 0        # bits were bad, devices fine
+    health = [e for e in eng.ft_events if e["event"] == "health"
+              and any(f.get("reason") == "data_corruption"
+                      for f in e.get("failed", []))]
+    assert health, "health gate never flagged data_corruption"
+
+
+def test_scrub_rejects_swa_arch():
+    cfg = get_smoke_config("mixtral-8x7b").scaled(dtype=jnp.float32)
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32)
+    with pytest.raises(ValueError, match="sliding-window"):
+        rt.engine(num_slots=2, scrub_every=1)
+
+
+def test_runtime_params_fingerprint_moves_on_flip():
+    cfg = _cfg()
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32)
+    before = rt.params_fingerprint
+    assert before == rt.params_fingerprint     # deterministic
+    leaves, treedef = jax.tree_util.tree_flatten(rt.params)
+    leaves[0] = integrity.flip_bit(leaves[0], 3, 17)
+    rt.params = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rt.params_fingerprint != before
+
+
+# ---------------------------------------------------------------------------
+# checkpoint CRC32
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_crc_roundtrip_and_detects_rot(tmp_path):
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.ones(4, np.float32)}
+    d = str(tmp_path / "step_000000001")
+    serialize.save_pytree(d, tree, step=1)
+    man = serialize.load_manifest(d)
+    assert all("crc32" in m for m in man["leaves"].values())
+    back = serialize.load_pytree(d, tree)
+    assert np.array_equal(np.asarray(back["w"]), tree["w"])
+    # rot one byte of one stored array: load must fail LOUD, naming the leaf
+    fn = man["leaves"]["w"]["file"]
+    path = os.path.join(d, fn)
+    blob = bytearray(open(path, "rb").read())
+    blob[-1] ^= 0x40                       # a payload byte, not the header
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(ChecksumError, match="'w'"):
+        serialize.load_pytree(d, tree)
+
+
+def test_checkpoint_without_crc_still_loads(tmp_path):
+    """Pre-integrity checkpoints (no crc32 in the manifest) stay loadable."""
+    tree = {"w": np.arange(6, dtype=np.float32)}
+    d = str(tmp_path / "step_000000002")
+    serialize.save_pytree(d, tree, step=2)
+    mpath = os.path.join(d, "MANIFEST.json")
+    man = json.load(open(mpath))
+    for meta in man["leaves"].values():
+        meta.pop("crc32")
+    json.dump(man, open(mpath, "w"))
+    back = serialize.load_pytree(d, tree)
+    assert np.array_equal(np.asarray(back["w"]), tree["w"])
+
+
+def test_engine_snapshot_crc_detects_rot(tmp_path):
+    snap = EngineSnapshot(requests=[{"rid": 1, "prompt": [1, 2, 3],
+                                     "generated": [7],
+                                     "max_new_tokens": 4, "eos_id": -1}],
+                          meta={"arch": ARCH})
+    d = snap.save(str(tmp_path / "snap"))
+    assert EngineSnapshot.load(d).requests[0]["rid"] == 1
+    path = os.path.join(d, "ENGINE_SNAPSHOT.json")
+    doc = json.load(open(path))
+    doc["payload"] = doc["payload"].replace('"rid":1', '"rid":2')
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ChecksumError, match="snapshot is corrupt"):
+        EngineSnapshot.load(d)
+
+
+def test_engine_snapshot_legacy_format_loads(tmp_path):
+    d = str(tmp_path / "snap")
+    os.makedirs(d)
+    with open(os.path.join(d, "ENGINE_SNAPSHOT.json"), "w") as f:
+        json.dump({"requests": [{"rid": 9}], "stats": {}, "meta": {}}, f)
+    assert EngineSnapshot.load(d).requests[0]["rid"] == 9
+
+
+# ---------------------------------------------------------------------------
+# burn-in + link BER
+# ---------------------------------------------------------------------------
+
+
+def test_burn_in_single_device_mem_only():
+    rep = run_burn_in(None, mem_bytes=1 << 16)
+    assert rep.ok and rep.mem and not rep.links
+    assert "burn-in: PASS" in rep.summary()
+    assert "DDR-soak" in rep.summary()
+
+
+def test_runtime_burn_in_surfaces_in_describe():
+    cfg = _cfg()
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32)
+    assert "burn-in   : not run" in rt.describe()
+    rep = rt.burn_in(mem_bytes=1 << 16)
+    assert rep.ok
+    assert "burn-in   : PASS" in rt.describe()
+
+
+def _link_report(axis, size, bit_errors, payload=1 << 16):
+    checks = {"all_gather": bit_errors == 0, "ppermute": True,
+              "psum": True, "all_to_all": True}
+    return LinkReport(axis=axis, size=size, payload_bytes=payload,
+                      bit_errors=bit_errors, checks=checks,
+                      elapsed_s=0.01, eff_bandwidth=1e9)
+
+
+def test_link_report_ber_bound_semantics():
+    clean = _link_report("data", 2, 0)
+    assert clean.ber == 0.0
+    assert clean.ber_bound == 1 / clean.bits_moved
+    dirty = _link_report("data", 2, 33)
+    assert dirty.ber == 33 / dirty.bits_moved
+    assert not dirty.ok
+
+
+def test_fabric_ber_derates_bandwidth():
+    fab = tpu_v5e_fabric()
+    clean_bw = fab.bandwidth_for_axis("data")
+    degraded = fab.with_link_ber({"data": 1e-6, "model": 0.0})
+    assert degraded.axis_ber == {"data": 1e-6}     # zero-BER axes dropped
+    assert degraded.bandwidth_for_axis("data") < clean_bw
+    assert degraded.bandwidth_for_axis("model") == \
+        fab.bandwidth_for_axis("model")
+    # pathological link floors at ~1% goodput, never zero/negative
+    floor = fab.with_link_ber({"data": 1.0})
+    assert 0 < floor.bandwidth_for_axis("data") <= 0.01 * clean_bw + 1e-6
+
+
+def test_topology_describe_notes_degraded_axis():
+    from repro.core.topology import describe
+    cfg = _cfg()
+    rt = Runtime.create(cfg, shape_kind="decode", capacity=32)
+    plan = rt.plan
+    object.__setattr__(plan, "fabric",
+                       plan.fabric.with_link_ber({"data": 1e-6}))
+    assert "degraded" in describe(plan)
+
+
+@needs8
+def test_apply_link_reports_demotes_mesh_token_parity():
+    from repro.launch.mesh import mesh_from_spec
+    cfg = _cfg()
+    base = _tokens(_run(cfg, mesh=mesh_from_spec("2x4")))
+    rt = Runtime.create(cfg, mesh_from_spec("2x4"), shape_kind="decode",
+                        capacity=32)
+    eng = rt.engine(num_slots=2, retry_backoff_s=0.001)
+    for r in _stream(cfg):
+        eng.submit(r)
+    for _ in range(3):
+        eng.tick()
+    evicted = eng.apply_link_reports(
+        [_link_report("data", 2, 40), _link_report("model", 4, 0)],
+        ber_threshold=1e-9)
+    assert len(evicted) == 4                    # one data slice = 4 devices
+    assert eng.stats.evacuations == 1
+    eng.run_to_completion()
+    assert len(eng.finished) == 4
+    assert _tokens(eng) == base
+    assert dict(zip(eng.mesh.axis_names, eng.mesh.devices.shape)) == \
+        {"data": 1, "model": 4}
+
+
+@needs8
+def test_apply_link_reports_model_axis_logs_degraded():
+    from repro.launch.mesh import mesh_from_spec
+    cfg = _cfg()
+    rt = Runtime.create(cfg, mesh_from_spec("2x4"), shape_kind="decode",
+                        capacity=32)
+    eng = rt.engine(num_slots=2)
+    evicted = eng.apply_link_reports([_link_report("model", 4, 40)])
+    assert evicted == [] and eng.stats.evacuations == 0
+    assert [e for e in eng.ft_events if e["event"] == "degraded_link"]
+
+
+@needs8
+def test_mesh_corruption_detected_token_parity():
+    from repro.launch.mesh import mesh_from_spec
+    cfg = _cfg()
+    base = _tokens(_run(cfg, mesh=mesh_from_spec("2x4")))
+    eng = _run(cfg, mesh=mesh_from_spec("2x4"), scrub=1,
+               plan="tick=3,kind=corrupt,target=kv,seed=5")
+    assert _tokens(eng) == base
+    assert eng.stats.corruption_detected >= 1
+    assert eng.stats.evacuations == 0
