@@ -29,7 +29,12 @@
 # 8-device data-integrity gate: tests/test_integrity.py drives scripted
 # bit flips (kind=corrupt) through the seal/scrub/quarantine/replay
 # path — 100% detection, zero corrupted tokens, only affected streams
-# replayed — plus burn-in, BER derating, and checkpoint CRC coverage.
+# replayed — plus burn-in, BER derating, and checkpoint CRC coverage,
+# and (i) the observability gate: tests/test_obs.py (metrics registry /
+# tracer / exporter contracts, span-vs-tick nesting, exactly-once
+# counters across retry + evacuation; re-run under the 8-device mesh)
+# plus a trace-artifact check: the Chrome trace_event file the serve
+# smoke emits (BENCH_serve_trace.json) must parse with valid ph/ts/dur.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -55,7 +60,7 @@ echo "== tier-1 pytest =="
 python -m pytest -x -q --ignore=tests/test_registry.py \
     --ignore=tests/test_paged.py --ignore=tests/test_partition.py \
     --ignore=tests/test_ft_serve.py --ignore=tests/test_scheduler.py \
-    --ignore=tests/test_integrity.py
+    --ignore=tests/test_integrity.py --ignore=tests/test_obs.py
 
 echo "== serve fast-path smoke benchmark (dense + paged engines) =="
 # --kv-layout paged adds the dense-vs-paged section and asserts the paged
@@ -114,5 +119,31 @@ echo "== 8-device data-integrity gate =="
 # (2x4 data-axis link loss), and checkpoint/snapshot CRC32.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -q tests/test_integrity.py
+
+echo "== observability gate =="
+# unified telemetry acceptance: one registry snapshot must surface
+# engine + scheduler + blockpool + ft + link instruments together,
+# counters must stay exactly-once across tick retry / evacuation /
+# replay (the monotonic Counter raises on any double-count), spans must
+# nest inside tick boundaries, and token streams must be bitwise
+# identical with tracing on vs off.  Single device first, then the
+# 8-device variants (telemetry carried across a real mesh-shrink
+# evacuation; burn-in feeding the link monitor).
+python -m pytest -q tests/test_obs.py
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_obs.py
+# trace-artifact check: the serve smoke above ran with tracing enabled
+# for its overhead section and exported BENCH_serve_trace.json; it must
+# be a valid Chrome trace_event file with tick spans
+python - <<'EOF'
+import json
+ct = json.load(open("BENCH_serve_trace.json"))
+evs = ct["traceEvents"]
+assert evs, "trace has no events"
+assert all(e["ph"] in ("X", "i") and "ts" in e for e in evs)
+ticks = [e for e in evs if e["name"] == "tick" and e["ph"] == "X"]
+assert ticks and all(e["dur"] > 0 for e in ticks)
+print(f"trace artifact OK: {len(evs)} events, {len(ticks)} tick spans")
+EOF
 
 echo "CI OK"

@@ -15,6 +15,7 @@ same order the paper used (JTAG bring-up -> IBERT -> application).
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass
 from typing import Optional
 
@@ -179,6 +180,75 @@ def run_link_test(mesh, payload_bytes: int = 1 << 16,
                     "psum": ps == 0, "all_to_all": a2a == 0},
             elapsed_s=dt, eff_bandwidth=moved / max(dt, 1e-9)))
     return reports
+
+
+class LinkMonitor:
+    """Continuous link monitoring: rolling per-axis BER/bandwidth windows.
+
+    The paper's IBERT runs are not one-shot — the testers stay armed and
+    the BER figure is a *running* ratio over everything transported.  This
+    is the software analog: every sweep's :class:`LinkReport` is fed in
+    (``record``), per-axis ``deque`` windows keep the last ``window``
+    sweeps, and the rolling BER (total errors over total bits in window)
+    plus mean effective bandwidth land in registry gauges.  ``derate``
+    closes the loop: it feeds the rolling BERs into
+    ``core.fabric.Fabric.with_link_ber`` so the planner's bandwidth model
+    tracks observed link health, not the datasheet number.
+    """
+
+    def __init__(self, *, window: int = 8, registry=None):
+        from repro.obs.metrics import NULL_REGISTRY
+        self.window = window
+        self._hist: dict[str, deque] = {}    # axis -> deque[LinkReport]
+        reg = NULL_REGISTRY if registry is None else registry
+        self._g_ber = reg.gauge(
+            "link_ber", "rolling bit-error ratio per mesh axis",
+            labels=("axis",))
+        self._g_bw = reg.gauge(
+            "link_bandwidth_bytes_per_s",
+            "rolling mean effective bandwidth per mesh axis",
+            labels=("axis",))
+        self._c_sweeps = reg.counter("link_sweeps_total",
+                                     "PRBS link sweeps recorded")
+        self._c_errors = reg.counter("link_bit_errors_total",
+                                     "bit errors observed across sweeps")
+
+    def record(self, reports) -> dict[str, float]:
+        """Fold a sweep's reports into the rolling windows; returns the
+        updated per-axis rolling BER (the ``current_ber()`` view)."""
+        for r in reports:
+            ax = getattr(r, "axis", None)
+            if ax is None:
+                continue
+            self._hist.setdefault(ax, deque(maxlen=self.window)).append(r)
+            self._c_sweeps.inc()
+            self._c_errors.inc(int(r.bit_errors))
+            win = self._hist[ax]
+            bits = sum(x.bits_moved for x in win)
+            self._g_ber.labels(axis=ax).set(
+                sum(x.bit_errors for x in win) / max(bits, 1))
+            self._g_bw.labels(axis=ax).set(
+                sum(x.eff_bandwidth for x in win) / len(win))
+        return self.current_ber()
+
+    def current_ber(self) -> dict[str, float]:
+        out = {}
+        for ax, win in sorted(self._hist.items()):
+            bits = sum(x.bits_moved for x in win)
+            out[ax] = sum(x.bit_errors for x in win) / max(bits, 1)
+        return out
+
+    def derate(self, fabric):
+        """A fabric whose per-axis bandwidth reflects the rolling BER
+        (retransmission overhead via ``Fabric.with_link_ber``)."""
+        return fabric.with_link_ber(self.current_ber())
+
+    def describe(self) -> str:
+        if not self._hist:
+            return "link monitor: no sweeps recorded"
+        parts = [f"{ax}: ber={ber:.2e} ({len(self._hist[ax])} sweeps)"
+                 for ax, ber in self.current_ber().items()]
+        return "link monitor: " + ", ".join(parts)
 
 
 def format_reports(reports: list[LinkReport]) -> str:

@@ -16,6 +16,14 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro.obs.metrics import NULL_REGISTRY
+
+# tick times live in the 0.1ms..5s range on CPU test rigs and real
+# accelerators alike; a finer ladder than the registry default makes the
+# warn/remesh thresholds readable straight off the bucket counts
+STEP_TIME_BUCKETS = (1e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+                     1e-1, 2.5e-1, 5e-1, 1.0, 2.5, 5.0)
+
 
 @dataclass
 class StragglerReport:
@@ -29,7 +37,8 @@ class StragglerReport:
 class StragglerMonitor:
     def __init__(self, *, window: int = 50, warn_ratio: float = 1.5,
                  remesh_ratio: float = 2.5, abort_ratio: float = 5.0,
-                 sustained: int = 3, min_window: int = 2):
+                 sustained: int = 3, min_window: int = 2,
+                 registry=None):
         self.times: deque = deque(maxlen=window)
         self.warn_ratio = warn_ratio
         self.remesh_ratio = remesh_ratio
@@ -41,6 +50,16 @@ class StragglerMonitor:
         self._over = 0
         self._t0: Optional[float] = None
         self.history: list[StragglerReport] = []
+        # every observation lands in the histogram — the rolling window is
+        # visible in snapshots *before* warn/remesh ever fires
+        reg = NULL_REGISTRY if registry is None else registry
+        self._h_step = reg.histogram("straggler_step_seconds",
+                                     "observed tick critical-path times",
+                                     buckets=STEP_TIME_BUCKETS)
+        self._g_median = reg.gauge("straggler_median_seconds",
+                                   "rolling-window median step time")
+        self._g_ratio = reg.gauge("straggler_ratio",
+                                  "last step time over rolling median")
 
     # -- timing hooks --------------------------------------------------------
 
@@ -73,6 +92,7 @@ class StragglerMonitor:
     # -- core ------------------------------------------------------------------
 
     def observe(self, step: int, step_time: float) -> StragglerReport:
+        self._h_step.observe(step_time)
         if len(self.times) < self.min_window:
             # warmup: the window is too short for a meaningful median
             # (median of < 2 samples is just the sample) — record and pass
@@ -83,6 +103,8 @@ class StragglerMonitor:
             return rep
         med = statistics.median(self.times)
         ratio = step_time / max(med, 1e-9)
+        self._g_median.set(med)
+        self._g_ratio.set(ratio)
         # only steady-state samples pollute the window (skip compile steps)
         if ratio < self.warn_ratio:
             self.times.append(step_time)

@@ -12,7 +12,13 @@ Fault-tolerance knobs: ``--health-every N`` gates every Nth tick on
 device health checks, ``--tick-retries`` bounds the transient-failure
 retry loop, and ``--fault-plan`` (or the ``REPRO_FAULT_PLAN`` env var)
 arms a scripted fault plan — e.g. ``tick=6,kind=raise,times=3`` forces a
-live evacuation mid-run; the engine's ft event log is printed at exit.
+live evacuation mid-run; the engine's ft event log is streamed as JSONL
+(one JSON object per line) to ``--events-out`` (default stdout).
+
+Observability: ``--metrics-out FILE`` dumps the telemetry registry at
+exit (``.json`` -> snapshot, else Prometheus text exposition),
+``--trace-out FILE`` enables the tracer and writes a Chrome
+``trace_event`` file viewable in chrome://tracing or Perfetto.
 
 Data-integrity knobs: ``--burn-in`` runs the full qualification gate
 (DDR-style memory test per device + PRBS link sweep with BER bounds)
@@ -30,6 +36,8 @@ from repro.configs import get_config, get_smoke_config
 from repro.ft.inject import FaultInjector
 from repro.launch import preflight as pf
 from repro.launch.mesh import mesh_from_spec
+from repro.obs.export import dump_metrics, write_events_jsonl
+from repro.obs.metrics import percentile
 from repro.runtime import Runtime
 from repro.serve.engine import Request
 
@@ -69,6 +77,16 @@ def main(argv=None):
                     help="scheduler per-tick token budget (0 = default)")
     ap.add_argument("--chunk-size", type=int, default=0,
                     help="scheduler prefill chunk length (0 = default)")
+    ap.add_argument("--events-out", default="-",
+                    help="JSONL sink for engine ft events (one JSON object "
+                         "per line; '-' = stdout)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the telemetry registry at exit: .json -> "
+                         "snapshot, anything else -> Prometheus text "
+                         "exposition ('-' = stdout)")
+    ap.add_argument("--trace-out", default="",
+                    help="enable the tracer and write a Chrome trace_event "
+                         "file at exit (chrome://tracing / Perfetto)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -82,6 +100,8 @@ def main(argv=None):
                         capacity=args.capacity,
                         scheduler=args.scheduler,
                         sched_kw=sched_kw or None)
+    if args.trace_out:
+        rt.telemetry().tracer.enable()
 
     if args.burn_in:
         rep = rt.burn_in()
@@ -114,20 +134,31 @@ def main(argv=None):
             max_new_tokens=args.max_new))
     stats = eng.run_to_completion()
     print("engine:", stats.summary)
-    for ev in eng.ft_events:
-        print("ft event:", ev)
+    if eng.ft_events:
+        n = write_events_jsonl(eng.ft_events, args.events_out)
+        if args.events_out not in ("", "-"):
+            print(f"ft events: {n} -> {args.events_out}")
 
-    # latency percentiles over finished requests
-    lat = sorted(r.finished_at - r.submitted_at for r in eng.finished)
-    ttft = sorted(r.first_token_at - r.submitted_at for r in eng.finished)
+    # latency percentiles over finished requests (shared obs helpers —
+    # same math as engine.latency_summary / bench_serve)
+    lat = [r.finished_at - r.submitted_at for r in eng.finished]
+    ttft = [r.first_token_at - r.submitted_at for r in eng.finished]
     if lat:
-        pick = lambda xs, q: xs[min(len(xs) - 1, int(q * len(xs)))]
-        print(f"latency  p50={pick(lat, .5):.3f}s p95={pick(lat, .95):.3f}s")
-        print(f"ttft     p50={pick(ttft, .5):.3f}s p95={pick(ttft, .95):.3f}s")
+        print(f"latency  p50={percentile(lat, 50):.3f}s "
+              f"p95={percentile(lat, 95):.3f}s")
+        print(f"ttft     p50={percentile(ttft, 50):.3f}s "
+              f"p95={percentile(ttft, 95):.3f}s")
         ls = eng.latency_summary()
         print(f"itl      p50={ls['itl_p50']:.4f}s p95={ls['itl_p95']:.4f}s "
               f"p99={ls['itl_p99']:.4f}s  "
               f"queue_wait p95={ls['queue_wait_p95']:.4f}s")
+    if args.metrics_out:
+        dump_metrics(rt.telemetry().registry, args.metrics_out)
+        if args.metrics_out != "-":
+            print(f"metrics -> {args.metrics_out}")
+    if args.trace_out:
+        rt.telemetry().tracer.export_chrome(args.trace_out)
+        print(f"trace -> {args.trace_out}")
     print("done")
 
 

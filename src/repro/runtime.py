@@ -79,6 +79,8 @@ class Runtime:
         self._params = params
         self._exec: dict[str, Callable] = {}
         self._burn_in = None       # BurnInReport once burn_in() has run
+        self._telemetry = None     # lazy obs.Telemetry (telemetry())
+        self._link_monitor = None  # lazy linktest.LinkMonitor
 
     # -- construction -------------------------------------------------------
 
@@ -193,7 +195,7 @@ class Runtime:
         else:
             params = (None if self._params is None
                       else jax.tree.map(jax.device_get, self._params))
-        return Runtime.create(
+        new = Runtime.create(
             self.cfg, mesh,
             shape_kind=shape_kind if shape_kind is not None
             else self.plan.shape_kind,
@@ -207,6 +209,33 @@ class Runtime:
             sched_kw={**self.sched_kw, **(sched_kw or {})},
             param_dtype=self.param_dtype, seed=self.seed,
             params=params, plan_kw={**self.plan_kw, **(plan_kw or {})})
+        # telemetry survives the reshape: evacuation builds a new Runtime,
+        # but counters must stay monotonic and the tick timeline continuous
+        new._telemetry = self._telemetry
+        new._link_monitor = self._link_monitor
+        return new
+
+    # -- observability -------------------------------------------------------
+
+    def telemetry(self):
+        """This Runtime's obs.Telemetry (lazy): the metrics registry +
+        tracer every subsystem built on this Runtime reports into.  One
+        object per Runtime lineage — :meth:`reshape` carries it over."""
+        if self._telemetry is None:
+            from repro.obs import Telemetry
+            self._telemetry = Telemetry()
+        return self._telemetry
+
+    def link_monitor(self):
+        """Continuous LinkMonitor (lazy) bound to the telemetry registry:
+        burn-in sweeps and the serve engine's ``apply_link_reports`` both
+        feed it; ``link_monitor().derate(plan.fabric)`` gives the
+        BER-derated fabric view."""
+        if self._link_monitor is None:
+            from repro.core.linktest import LinkMonitor
+            self._link_monitor = LinkMonitor(
+                registry=self.telemetry().registry)
+        return self._link_monitor
 
     # -- params / state -----------------------------------------------------
 
@@ -459,6 +488,9 @@ class Runtime:
         self._burn_in = run_burn_in(
             self.mesh, mem_bytes=mem_bytes, link_payload=link_payload,
             ber_threshold=ber_threshold)
+        if self._burn_in.links:
+            # the qualification sweep is the link monitor's first sample
+            self.link_monitor().record(self._burn_in.links)
         return self._burn_in
 
     # -- report -------------------------------------------------------------
@@ -555,6 +587,11 @@ class Runtime:
                if self.scheduler else "scheduler=off")
             + f" chunked_prefill_ok={self.caps.supports_chunked_prefill}",
             self._ft_status(),
+            "  obs       : " + (self._telemetry.describe()
+                                if self._telemetry is not None
+                                else "not wired (Runtime.telemetry())")
+            + (" | " + self._link_monitor.describe()
+               if self._link_monitor is not None else ""),
         ]
         from repro.kernels import partition as kernel_partition
         pspecs = kernel_partition.partition_report(self.cfg, plan, self.caps,

@@ -63,6 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import ModelConfig
+from repro.obs.metrics import NULL_REGISTRY
 
 NULL_BLOCK = 0     # permanently empty; unused table entries point here
 TRASH_BLOCK = 1    # junk-write sink; never referenced by any table
@@ -83,11 +84,14 @@ class BlockPool:
     num_slots:          decode slots (rows of the block-table matrix).
     max_blocks_per_seq: table width — the longest representable sequence is
                         ``max_blocks_per_seq * block_size`` entries.
+    registry:           optional obs MetricsRegistry; None keeps the pool
+                        dependency-free (no-op instruments).
     """
 
     def __init__(self, num_blocks: int, block_size: int, num_slots: int,
                  max_blocks_per_seq: int,
-                 max_entries: Optional[int] = None):
+                 max_entries: Optional[int] = None,
+                 registry=None):
         if num_blocks < NUM_RESERVED + 1:
             raise ValueError(f"num_blocks={num_blocks} leaves no usable "
                              f"blocks past the {NUM_RESERVED} reserved ones")
@@ -127,6 +131,35 @@ class BlockPool:
         self.high_water = 0
         self.poisoned_total = 0
         self.scrubbed_total = 0
+        # observability: counters advance at event sites (monotonic even
+        # where the raw attribute can roll back, e.g. admission rollback
+        # decrementing prefix_hits); gauges resync in _sync_occupancy
+        reg = NULL_REGISTRY if registry is None else registry
+        self._c_hits = reg.counter("blockpool_prefix_hits_total",
+                                   "prompt blocks shared from prefix cache")
+        self._c_misses = reg.counter("blockpool_prefix_misses_total",
+                                     "keyed prompt blocks freshly allocated")
+        self._c_cow = reg.counter("blockpool_cow_copies_total",
+                                  "copy-on-write block duplications")
+        self._c_poisoned = reg.counter("blockpool_quarantined_total",
+                                       "blocks quarantined as corrupt")
+        self._c_scrubbed = reg.counter("blockpool_scrubbed_total",
+                                       "quarantined blocks scrubbed clean")
+        self._g_used = reg.gauge("blockpool_used_blocks",
+                                 "pool blocks referenced by >= 1 slot")
+        self._g_free = reg.gauge("blockpool_free_blocks",
+                                 "pool blocks on the free list")
+        self._g_hwm = reg.gauge("blockpool_high_water_blocks",
+                                "max used_blocks ever observed")
+        self._g_poisoned = reg.gauge("blockpool_poisoned_blocks",
+                                     "blocks currently quarantined")
+        self._sync_occupancy()
+
+    def _sync_occupancy(self):
+        self._g_used.set(self.used_blocks)
+        self._g_free.set(self.free_blocks)
+        self._g_hwm.set(self.high_water)
+        self._g_poisoned.set(len(self.poisoned))
 
     # -- introspection ------------------------------------------------------
 
@@ -230,6 +263,7 @@ class BlockPool:
                     self._share(hit)
                     self.table[slot, col] = hit
                     self.prefix_hits += 1  # dst stays TRASH: no write
+                    self._c_hits.inc()
                     acquired.append((hit, None, True))
                 else:
                     bid = self._alloc()
@@ -237,6 +271,7 @@ class BlockPool:
                     self._cached[key] = bid
                     self._key_of[bid] = key
                     dst[col] = bid
+                    self._c_misses.inc()
                     acquired.append((bid, key, False))
             col = L // bs
             if col < nb:                  # partial tail: exclusive, unkeyed
@@ -263,6 +298,7 @@ class BlockPool:
         self.seq_blocks[slot] = nb
         self.next_pos[slot] = L
         self.reserved[slot] = reserve
+        self._sync_occupancy()
         return dst
 
     def release(self, slot: int):
@@ -278,6 +314,7 @@ class BlockPool:
         self.seq_blocks[slot] = 0
         self.next_pos[slot] = 0
         self.reserved[slot] = 0
+        self._sync_occupancy()
 
     # -- quarantine (data integrity) ----------------------------------------
 
@@ -293,11 +330,13 @@ class BlockPool:
             return
         self.poisoned.add(bid)
         self.poisoned_total += 1
+        self._c_poisoned.inc()
         key = self._key_of.pop(bid, None)
         if key is not None:
             del self._cached[key]
         if self.refcount[bid] == 0:       # cached/plain free: pull it out
             self._free.remove(bid)
+        self._sync_occupancy()
 
     def drop_prefix_cache(self):
         """Deregister every cached prefix block.  Used when block contents
@@ -317,7 +356,9 @@ class BlockPool:
         for bid in ready:
             self.poisoned.discard(bid)
             self.scrubbed_total += 1
+            self._c_scrubbed.inc()
             self._free.append(bid)
+        self._sync_occupancy()
         return ready
 
     def fork(self, src: int, dst: int):
@@ -361,6 +402,7 @@ class BlockPool:
             bid = self._alloc()
             self.table[slot, col] = bid
             self.seq_blocks[slot] = col + 1
+            self._sync_occupancy()
         else:
             bid = int(self.table[slot, col])
             if self.refcount[bid] > 1:             # shared tail: COW
@@ -369,7 +411,9 @@ class BlockPool:
                 self.refcount[bid] -= 1
                 self.table[slot, col] = priv
                 self.cow_copies += 1
+                self._c_cow.inc()
                 bid = priv
+                self._sync_occupancy()
         return bid, copies
 
     def __repr__(self) -> str:

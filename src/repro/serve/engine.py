@@ -167,12 +167,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import EngineSnapshot
+from repro.core.linktest import LinkMonitor
 from repro.ft import elastic as ft_elastic
 from repro.ft import health as ft_health
 from repro.ft import integrity as ft_integrity
 from repro.ft.inject import FaultInjector
 from repro.ft.straggler import StragglerMonitor
 from repro.models.attention import PAD_POS
+from repro.obs import Telemetry
+from repro.obs.metrics import latency_fields
 from repro.serve import blockpool, kvcache
 from repro.serve.scheduler import Scheduler
 
@@ -205,8 +208,25 @@ class Request:
     verified: int = 0
 
 
+_STAT_NAMES = ("ticks", "tokens_out", "admitted", "finished",
+               "prefill_calls", "chunk_ticks", "evacuations", "tick_retries",
+               "health_checks", "scrubs", "corruption_detected",
+               "kv_quarantined", "streams_replayed", "params_restores",
+               "transfer_retries")
+
+
 @dataclass
 class EngineStats:
+    """Engine counters.  The public shape is the plain dataclass every
+    caller reads (``eng.stats.finished``); :meth:`bind` additionally backs
+    each field with a monotonic registry Counter
+    (``serve_engine_<field>_total``), so one metrics snapshot carries them
+    and the instrument itself enforces that no retry/evacuation/replay
+    path ever double-counts backwards.  The registry survives an
+    evacuation's Runtime reshape, so counters accumulate across engine
+    lifetimes; each binding records its base offset so the dataclass view
+    stays per-engine."""
+
     ticks: int = 0
     tokens_out: int = 0
     admitted: int = 0
@@ -225,6 +245,24 @@ class EngineStats:
     streams_replayed: int = 0      # streams rolled back + requeued
     params_restores: int = 0
     transfer_retries: int = 0      # device->host payload re-fetches
+
+    def bind(self, registry):
+        counters, base = {}, {}
+        for k in _STAT_NAMES:
+            c = registry.counter(f"serve_engine_{k}_total",
+                                 f"cumulative engine {k}")
+            counters[k] = c
+            base[k] = c.value - getattr(self, k)
+        object.__setattr__(self, "_bound", (counters, base))
+
+    def __setattr__(self, name, value):
+        bound = getattr(self, "_bound", None)
+        if bound is not None and name in bound[0]:
+            # mirror first: Counter.set raises on a decrease, so a
+            # would-be regression never lands in the dataclass either
+            counters, base = bound
+            counters[name].set(base[name] + value)
+        object.__setattr__(self, name, value)
 
     @property
     def summary(self) -> str:
@@ -344,10 +382,22 @@ class ServeEngine:
                  tick_retries: int = 2, retry_backoff_s: float = 0.02,
                  straggler_kw: Optional[dict] = None,
                  max_evacuations: int = 8,
-                 scrub_every: int = 0):
+                 scrub_every: int = 0,
+                 trace: Optional[bool] = None):
         rt = runtime
         self.rt = rt
         self.caps = rt.caps
+        # observability: the Runtime's shared registry + tracer (survives
+        # the reshape an evacuation performs — the engine keeps its own
+        # reference so instruments also survive a data-path rebuild).
+        # ``trace=True/False`` flips span recording; None leaves the
+        # shared tracer as it is (disabled by default).
+        self.obs = (rt.telemetry() if hasattr(rt, "telemetry")
+                    else Telemetry())
+        self.tracer = self.obs.tracer
+        if trace is not None:
+            self.tracer.enabled = bool(trace)
+        self._init_instruments()
         self.params = params if params is not None else rt.params
         capacity = capacity if capacity is not None else rt.capacity
         self.num_slots, self.capacity = num_slots, capacity
@@ -398,7 +448,7 @@ class ServeEngine:
                          ("aging_ticks", aging_ticks)):
                 if v is not None:
                     skw[k] = v
-            self.sched = Scheduler(**skw)
+            self.sched = Scheduler(registry=self.obs.registry, **skw)
             if self.sched.chunk_size > capacity:
                 raise ValueError(
                     f"chunk_size={self.sched.chunk_size} exceeds the decode "
@@ -431,10 +481,15 @@ class ServeEngine:
         # Serving-tuned thresholds: decode ticks are short and noisy on a
         # shared host, so ratios sit far above the training defaults and
         # the first (compile-spiked) ticks land inside the warmup window.
-        self.straggler = StragglerMonitor(**(
+        self.straggler = StragglerMonitor(registry=self.obs.registry, **(
             straggler_kw if straggler_kw is not None
             else dict(window=32, warn_ratio=4.0, remesh_ratio=10.0,
                       abort_ratio=100.0, sustained=3)))
+        # continuous link monitor (IBERT analog): apply_link_reports feeds
+        # it, rolling per-axis BER/bandwidth gauges land in the registry
+        # and ``linkmon.derate(fabric)`` applies with_link_ber
+        self.linkmon = (rt.link_monitor() if hasattr(rt, "link_monitor")
+                        else LinkMonitor(registry=self.obs.registry))
         self.ft_events: list[dict] = []    # structured fault-handling log
         self._tick_no = 0                  # absolute tick count (fault plans
         #                                    address ticks by this number)
@@ -442,6 +497,7 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self.stats = EngineStats()
+        self.stats.bind(self.obs.registry)
         # integrity state that survives a rebuild: params checksum +
         # restore source, and injection timestamps (detection latency)
         self._params_fp: Optional[int] = None
@@ -450,6 +506,28 @@ class ServeEngine:
         self._build_data_path()
         if self.scrub_every:
             self._register_params_integrity()
+
+    def _init_instruments(self):
+        """Register the engine's gauges/histograms once.  Counters backing
+        ``EngineStats`` bind separately (``stats.bind``); these cover the
+        point-in-time and distribution signals one snapshot should carry
+        alongside them."""
+        reg = self.obs.registry
+        self._g_queue = reg.gauge(
+            "serve_queue_depth", "requests waiting for admission")
+        self._g_active = reg.gauge(
+            "serve_active_slots", "slots decoding this tick")
+        self._h_health = reg.histogram(
+            "ft_health_check_seconds", "device health-gate latency")
+        self._h_evac = reg.histogram(
+            "ft_evacuation_seconds", "live evacuation latency")
+        self._h_detect = reg.histogram(
+            "ft_corruption_detect_ticks",
+            "corruption detection latency in ticks since injection",
+            buckets=(0, 1, 2, 4, 8, 16, 32, 64))
+        self._c_events = reg.counter(
+            "serve_ft_events_total", "structured fault-handling events",
+            labels=("event",))
 
     def _build_data_path(self):
         """(Re)build everything derived from the Runtime: jitted
@@ -484,7 +562,8 @@ class ServeEngine:
             nblocks = (self._num_blocks if self._num_blocks is not None
                        else self.num_slots * M + blockpool.NUM_RESERVED)
             self.pool = blockpool.BlockPool(nblocks, bs, self.num_slots, M,
-                                            max_entries=self.capacity)
+                                            max_entries=self.capacity,
+                                            registry=self.obs.registry)
             self.caches = blockpool.init_paged_cache(self.cfg, nblocks, bs)
             decode = rt.make_paged_decode_step(attn_impl=self._attn_impl)
             self._decode = rt._bind_mesh(jax.jit(decode, **donate_kw))
@@ -715,6 +794,7 @@ class ServeEngine:
             r.generated.append(tok)
             r.first_token_at = now
             self.stats.admitted += 1
+            self.tracer.instant("req:admit", rid=r.rid, slot=s)
             if len(r.generated) >= r.max_new_tokens or tok == r.eos_id:
                 self._free(s)     # degenerate: done at prefill
 
@@ -726,6 +806,8 @@ class ServeEngine:
         self.slot_req[slot] = None
         self.slot_pos[slot] = 0
         self.stats.finished += 1
+        self.tracer.instant("req:finish", rid=req.rid, slot=slot,
+                            tokens=len(req.generated))
         if self.paged:
             self.pool.release(slot)
         if self.scheduler:
@@ -772,6 +854,7 @@ class ServeEngine:
                 req.generated.append(tok)
                 req.first_token_at = now
                 self.stats.admitted += 1
+                self.tracer.instant("req:admit", rid=req.rid, slot=slot)
                 if (len(req.generated) >= req.max_new_tokens
                         or tok == req.eos_id):
                     self._free(slot)      # degenerate: done at prefill
@@ -974,11 +1057,28 @@ class ServeEngine:
         tick first consults ``ft.health.check_devices`` (with scripted
         faults overlaid), the dispatch is retried with backoff on transient
         failures, and the tick wall time feeds the ``StragglerMonitor``;
-        every escalation converges on :meth:`_evacuate`."""
+        every escalation converges on :meth:`_evacuate`.
+
+        Observability wraps it once more: the whole tick is a ``tick``
+        span with ``plan`` / ``dispatch`` / ``collect`` / ``admit`` (and
+        ``health`` / ``scrub``) child spans — strictly nested, never
+        crossing a tick boundary — and the queue/active-slot gauges are
+        refreshed at tick exit.  With the tracer disabled (the default)
+        every span is the shared no-op context manager, which is the
+        near-zero-overhead contract bench_serve asserts."""
         self._tick_no += 1
         t = self._tick_no
+        with self.tracer.span("tick", tick=t):
+            busy = self._tick_body(t)
+        self._g_queue.set(self._backlog())
+        self._g_active.set(sum(self._decoding(s)
+                               for s in range(self.num_slots)))
+        return busy
+
+    def _tick_body(self, t: int) -> bool:
         if self.health_every and t % self.health_every == 0:
-            self._health_gate(t)
+            with self.tracer.span("health", tick=t):
+                self._health_gate(t)
         if self.scrub_every and self.injector is not None:
             # scripted silent corruption lands *before* dispatch: this
             # tick's step reads the flipped bits, and the scrub below must
@@ -987,18 +1087,21 @@ class ServeEngine:
 
         self._chunk = None
         if self.scheduler:
-            self.sched.on_tick()
-            self._chunk = self._plan_chunk()
+            with self.tracer.span("plan", tick=t):
+                self.sched.on_tick()
+                self._chunk = self._plan_chunk()
 
         t_start = time.perf_counter()
         dispatched = None
         if self._chunk is not None or \
                 any(self._decoding(s) for s in range(self.num_slots)):
-            dispatched = self._dispatch_with_retry(t)
+            with self.tracer.span("dispatch", tick=t):
+                dispatched = self._dispatch_with_retry(t)
 
         processed = self._inflight is not None
         if processed:
-            self._collect(self._inflight)
+            with self.tracer.span("collect", tick=t):
+                self._collect(self._inflight)
         self._inflight = dispatched
 
         if dispatched is not None:
@@ -1014,11 +1117,13 @@ class ServeEngine:
         if self.scrub_every and t % self.scrub_every == 0:
             # after the inflight swap: a detection can still drop the
             # just-dispatched (corrupt) lane before it is ever collected
-            self._scrub(t)
+            with self.tracer.span("scrub", tick=t):
+                self._scrub(t)
 
         admitted = 0
         if not self.scheduler:
-            admitted = self._admit_batch()
+            with self.tracer.span("admit", tick=t):
+                admitted = self._admit_batch()
             return dispatched is not None or processed or admitted > 0
         return (dispatched is not None or processed
                 or self._backlog() > 0)
@@ -1027,6 +1132,8 @@ class ServeEngine:
 
     def _log_event(self, kind: str, **fields):
         self.ft_events.append({"event": kind, **fields})
+        self._c_events.labels(event=kind).inc()
+        self.tracer.instant("ft:" + kind, **fields)
 
     def _suspects(self) -> set:
         """Device ids implicated by fired scripted faults — the only
@@ -1052,9 +1159,11 @@ class ServeEngine:
                          .DATA_CORRUPTION.value,
                          "detail": "params fingerprint mismatch"}])
             self._recover_params(t, origin="health_gate")
+        t0 = time.perf_counter()
         reports = ft_health.check_devices(self._devices)
         if self.injector is not None:
             reports = self.injector.apply_health(reports, self._devices, t)
+        self._h_health.observe(time.perf_counter() - t0)
         self.stats.health_checks += 1
         bad = [(r, d) for r, d in zip(reports, self._devices) if not r.ok]
         if not bad:
@@ -1120,9 +1229,10 @@ class ServeEngine:
             return vals
         self.stats.corruption_detected += 1
         self.stats.transfer_retries += 1
-        self._log_event(
-            "corruption", tick=t, target="collective",
-            detect_latency_ticks=t - self._last_inject.get("collective", t))
+        lat = t - self._last_inject.get("collective", t)
+        self._h_detect.observe(lat)
+        self._log_event("corruption", tick=t, target="collective",
+                        detect_latency_ticks=lat)
         fresh = np.asarray(jax.device_get(tok_dev)).reshape(-1)
         if ft_integrity.host_leaf_fingerprint(fresh) != expect:
             raise RuntimeError(
@@ -1293,6 +1403,7 @@ class ServeEngine:
         streams never notice."""
         self.stats.corruption_detected += len(bad)
         lat = t - self._last_inject.get("kv", t)
+        self._h_detect.observe(lat)
         bad = set(bad)
         if self.paged:
             for src, dst in self._cow_since_scrub:
@@ -1336,10 +1447,12 @@ class ServeEngine:
             self.stats.kv_quarantined += len(bad)
         replayed = self._replay_streams(affected)
         self._sealed = {}       # every seal is suspect under bad params
+        lat = t - self._last_inject.get("params", t)
+        self._h_detect.observe(lat)
         self._log_event(
             "corruption", tick=t, target="params", origin=origin,
             streams=[r.rid for r in replayed],
-            detect_latency_ticks=t - self._last_inject.get("params", t))
+            detect_latency_ticks=lat)
 
     def _replay_streams(self, slots: list) -> list:
         """Roll the given slots' streams back to their verified
@@ -1392,6 +1505,10 @@ class ServeEngine:
         logged as degraded (fabric derating via
         ``core.fabric.Fabric.with_link_ber`` is the planner's recourse).
         Returns the evicted device ids."""
+        if reports:
+            # rolling per-axis BER/bandwidth gauges, independent of any
+            # eviction decision — the continuous-monitoring half of IBERT
+            self.linkmon.record(reports)
         if self.mesh is None:
             return []
         failing = [r for r in reports
@@ -1491,6 +1608,8 @@ class ServeEngine:
         # them against the old rolling median
         self.straggler.reset()
         self.stats.evacuations += 1
+        dur = time.perf_counter() - t0
+        self._h_evac.observe(dur)
         self._log_event(
             "evacuate", tick=tick, reason=reason, requeued=len(live),
             replayed=[r.rid for r in live], mid_prefill=mid_prefill,
@@ -1498,7 +1617,7 @@ class ServeEngine:
             mesh=(dict(zip(self.mesh.axis_names,
                            self.mesh.devices.shape))
                   if self.mesh is not None else None),
-            latency_s=round(time.perf_counter() - t0, 4))
+            latency_s=round(dur, 4))
 
     # -- warm restart ---------------------------------------------------------
 
@@ -1583,15 +1702,10 @@ class ServeEngine:
                 waits.append(r.admitted_at - r.submitted_at)
             times = [r.first_token_at] + list(r.token_times)
             itls.extend(b - a for a, b in zip(times, times[1:]))
-
-        def pct(xs, q):
-            return float(np.percentile(xs, q)) if xs else 0.0
-
         out = {"requests": len(ttfts)}
         for name, xs in (("ttft", ttfts), ("itl", itls),
                          ("queue_wait", waits)):
-            for q in (50, 95, 99):
-                out[f"{name}_p{q}"] = pct(xs, q)
+            out.update(latency_fields(name, xs))
         return out
 
     def kv_cache_bytes(self) -> int:

@@ -51,6 +51,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro.obs.metrics import NULL_REGISTRY
+
 DEFAULT_TOKEN_BUDGET = 256
 DEFAULT_CHUNK_SIZE = 32
 DEFAULT_AGING_TICKS = 256
@@ -79,12 +81,15 @@ class Scheduler:
                     proportionally more prefill starts.
     aging_ticks:    a request waiting this many engine ticks overrides WRR
                     (oldest first) — the starvation bound.
+    registry:       optional obs MetricsRegistry; None keeps the
+                    scheduler dependency-free (no-op instruments).
     """
 
     def __init__(self, *, token_budget: int = DEFAULT_TOKEN_BUDGET,
                  chunk_size: int = DEFAULT_CHUNK_SIZE,
                  class_weights: Optional[dict] = None,
-                 aging_ticks: int = DEFAULT_AGING_TICKS):
+                 aging_ticks: int = DEFAULT_AGING_TICKS,
+                 registry=None):
         if token_budget < 1:
             raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         if chunk_size < 1:
@@ -104,6 +109,17 @@ class Scheduler:
         self._inflight_tick: dict[int, int] = {}  # selected, not yet done
         self._tick = 0
         self.stats = SchedulerStats()
+        reg = NULL_REGISTRY if registry is None else registry
+        self._c = {k: reg.counter(f"sched_{k}_total",
+                                  f"scheduler {k.replace('_', ' ')}")
+                   for k in ("selected", "aged", "chunks",
+                             "deferred_chunks", "shrunk_chunks")}
+        self._g_depth = reg.gauge("sched_queue_depth",
+                                  "waiting requests per priority class",
+                                  labels=("cls",))
+        self._g_util = reg.gauge("sched_budget_utilization",
+                                 "last tick's (decodes + chunk grant) "
+                                 "over token_budget")
 
     # -- queue surface ------------------------------------------------------
 
@@ -118,8 +134,11 @@ class Scheduler:
         return self._queues[cls]
 
     def enqueue(self, req):
-        self._queue_for(self._class_of(req)).append(req)
+        cls = self._class_of(req)
+        q = self._queue_for(cls)
+        q.append(req)
         self._enq_tick.setdefault(req.rid, self._tick)
+        self._g_depth.labels(cls=cls).set(len(q))
 
     def requeue_front(self, reqs):
         """Re-enter interrupted requests at the *front* of their classes,
@@ -129,9 +148,12 @@ class Scheduler:
         ``_inflight_tick``) — an evacuation must not reset a request's
         starvation age."""
         for req in reversed(list(reqs)):
-            self._queue_for(self._class_of(req)).appendleft(req)
+            cls = self._class_of(req)
+            q = self._queue_for(cls)
+            q.appendleft(req)
             self._enq_tick.setdefault(
                 req.rid, self._inflight_tick.pop(req.rid, self._tick))
+            self._g_depth.labels(cls=cls).set(len(q))
 
     def forget(self, rid: int):
         """Drop bookkeeping for a finished request (the engine calls this
@@ -171,6 +193,7 @@ class Scheduler:
             cls = max(starved,
                       key=lambda c: (self._waited(self._queues[c][0]), -c))
             self.stats.aged += 1
+            self._c["aged"].inc()
         else:
             total = sum(self.weights[c] for c in live)
             for c in live:
@@ -183,6 +206,8 @@ class Scheduler:
         self._inflight_tick[req.rid] = self._enq_tick.pop(req.rid,
                                                           self._tick)
         self.stats.selected += 1
+        self._c["selected"].inc()
+        self._g_depth.labels(cls=cls).set(len(self._queues[cls]))
         return req
 
     def chunk_tokens(self, active_decodes: int, remaining: int) -> int:
@@ -197,10 +222,15 @@ class Scheduler:
             grant = max(0, min(ask, self.token_budget - active_decodes))
         if grant == 0:
             self.stats.deferred_chunks += 1
+            self._c["deferred_chunks"].inc()
         else:
             self.stats.chunks += 1
+            self._c["chunks"].inc()
             if grant < ask:
                 self.stats.shrunk_chunks += 1
+                self._c["shrunk_chunks"].inc()
+        self._g_util.set((max(0, active_decodes) + grant)
+                         / self.token_budget)
         return grant
 
     # -- reporting ----------------------------------------------------------
