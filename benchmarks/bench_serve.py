@@ -20,6 +20,15 @@ the full capacity, while the paged engine's block pool is sized to the
 workload's actual peak usage — the K/V footprint ratio that comparison
 yields is the subsystem's reason to exist and is asserted <= 0.5.
 
+``--kv-dtype int8`` (with ``--kv-layout paged``) additionally runs the
+*quantized* pool — int8 blocks + per-(block, kv-head) f32 scales,
+dequantized inside the decode path — over the same flood and merges a
+``quantized`` section: its ``kv_footprint_ratio`` against the dense slab
+compounds the paged saving with the 4x payload shrink and is asserted
+<= 0.15, and the int8 greedy token streams are diffed token-for-token
+against the f32 paged run's (match rate recorded, asserted >= 95% —
+exact-parity gates on pinned streams live in tests/test_quant_kv.py).
+
 The paged flood ends with shared-prefix requests (one 16-token prefix =
 two full blocks) so the pool's content-hash prefix cache registers real
 ``prefix_hits``, and every run closes with a **fault section**: the same
@@ -186,6 +195,9 @@ def _run(make_engine, cfg, n_requests, shared_prefix=0) -> dict:
     if hasattr(eng, "latency_summary"):
         out["latency"] = eng.latency_summary()
         out["kv_bytes"] = eng.kv_cache_bytes()
+        out["kv_bytes_per_stream"] = eng.kv_cache_bytes() // eng.num_slots
+        out["streams_tokens"] = {r.rid: list(r.generated)
+                                 for r in eng.finished}
         if getattr(eng, "pool", None) is not None:
             out["prefix_hits"] = eng.pool.prefix_hits
             out["block_high_water"] = eng.pool.high_water
@@ -204,7 +216,8 @@ def _lat_fields(res: dict, prefix: str = "") -> dict:
             for k in _LAT_KEYS if k in lat}
 
 
-def main(smoke: bool = False, kv_layout: str = "dense"):
+def main(smoke: bool = False, kv_layout: str = "dense",
+         kv_dtype: str = "f32"):
     n_requests = 8 if smoke else 24
     num_slots, capacity = 4, 64
     rt = Runtime.create("llama3.2-3b", smoke=True, shape_kind="decode",
@@ -239,6 +252,7 @@ def main(smoke: bool = False, kv_layout: str = "dense"):
         "legacy_admissions_per_s": round(legacy["adm_s"], 3),
         "speedup_tokens": round(speed, 3),
         "speedup_admissions": round(adm, 3),
+        "kv_bytes_per_stream": fast["kv_bytes_per_stream"],
         **_lat_fields(fast),
     }
 
@@ -277,6 +291,7 @@ def main(smoke: bool = False, kv_layout: str = "dense"):
             "kv_bytes": paged["kv_bytes"],
             "dense_kv_bytes": dense["kv_bytes"],
             "kv_footprint_ratio": round(ratio, 4),
+            "kv_bytes_per_stream": paged["kv_bytes_per_stream"],
             "prefix_hits": paged["prefix_hits"],
             "block_high_water": paged["block_high_water"],
             **_lat_fields(paged),
@@ -287,6 +302,56 @@ def main(smoke: bool = False, kv_layout: str = "dense"):
         assert paged["prefix_hits"] >= 2, \
             f"shared-prefix mix produced no prefix hits " \
             f"({paged['prefix_hits']})"
+
+        if kv_dtype == "int8":
+            # Quantized pool over the same flood: the int8 payload + the
+            # per-(block, kv-head) f32 scales compound the paged saving —
+            # the footprint ratio against the dense slab is the headline
+            # number (<= 0.15), and the greedy token streams must match
+            # the f32 paged run's request-for-request.
+            rt_q = Runtime.create("llama3.2-3b", smoke=True,
+                                  shape_kind="decode", capacity=cap128,
+                                  kv_layout="paged", kv_dtype="int8")
+            quant = _run(lambda: rt_q.engine(num_slots=num_slots,
+                                             attn_impl="ref", block_size=bs,
+                                             num_blocks=nblocks),
+                         cfg, n_requests, shared_prefix=shared)
+            qratio = quant["kv_bytes"] / dense["kv_bytes"]
+            emit("serve_quantized_us_per_req",
+                 quant["wall"] * 1e6 / n_requests,
+                 f"tok_s={quant['tok_s']:.1f} kv_ratio={qratio:.3f}")
+            total = mism = 0
+            for rid, ref_toks in paged["streams_tokens"].items():
+                got = quant["streams_tokens"].get(rid, [])
+                total += len(ref_toks)
+                mism += sum(1 for a, b in zip(ref_toks, got) if a != b)
+                mism += abs(len(ref_toks) - len(got))
+            match_rate = 1.0 - mism / max(total, 1)
+            print(f"# quantized KV (int8): {quant['tok_s']:.1f} tok/s; "
+                  f"KV footprint {quant['kv_bytes']} / "
+                  f"{dense['kv_bytes']} B = {qratio:.1%} of dense "
+                  f"({ratio:.1%} paged f32); greedy token match "
+                  f"{match_rate:.1%} vs f32 paged ({mism}/{total} drifted)",
+                  flush=True)
+            record["quantized"] = {
+                "capacity": cap128, "block_size": bs,
+                "num_blocks": nblocks, "kv_dtype": "int8",
+                "tokens_per_s": round(quant["tok_s"], 2),
+                "kv_bytes": quant["kv_bytes"],
+                "dense_kv_bytes": dense["kv_bytes"],
+                "kv_footprint_ratio": round(qratio, 4),
+                "paged_f32_footprint_ratio": round(ratio, 4),
+                "kv_bytes_per_stream": quant["kv_bytes_per_stream"],
+                "prefix_hits": quant["prefix_hits"],
+                "token_match_vs_f32_paged": round(match_rate, 4),
+                **_lat_fields(quant),
+            }
+            assert qratio <= 0.15, \
+                f"quantized KV footprint {qratio:.2%} of dense exceeds " \
+                f"the 15% bound"
+            assert match_rate >= 0.95, \
+                f"int8 paged greedy streams drifted too far from f32 " \
+                f"paged ({match_rate:.1%} token match)"
 
     # Fault tolerance under fire: the same flood with a scripted mid-run
     # fault that exhausts the tick retries and forces a live evacuation.
@@ -477,6 +542,7 @@ def _run_mixed(make_engine, cfg, load_kw) -> dict:
     return {"wall": wall, "tok_s": eng.stats.tokens_out / wall,
             "latency": eng.latency_summary(),
             "chunk_ticks": eng.stats.chunk_ticks,
+            "kv_bytes_per_stream": eng.kv_cache_bytes() // eng.num_slots,
             "streams": {r.rid: list(r.generated) for r in eng.finished}}
 
 
@@ -520,11 +586,13 @@ def main_scheduler(smoke: bool = False):
         "smoke": smoke, "num_slots": num_slots, "capacity": capacity,
         "load": {k: v for k, v in load_kw.items()},
         "monolithic": {"tokens_per_s": round(mono["tok_s"], 2),
+                       "kv_bytes_per_stream": mono["kv_bytes_per_stream"],
                        **_lat_fields(mono)},
         "scheduler": {"token_budget": token_budget,
                       "chunk_size": chunk_size,
                       "chunk_ticks": sched["chunk_ticks"],
                       "tokens_per_s": round(sched["tok_s"], 2),
+                      "kv_bytes_per_stream": sched["kv_bytes_per_stream"],
                       **_lat_fields(sched)},
         "itl_p95_gain": round(gain, 2),
         "streams_identical": True,
@@ -574,6 +642,7 @@ def main_mesh(mesh_spec: str, smoke: bool = False):
         "tokens_per_s_sharded": round(shard["tok_s"], 2),
         "tokens_per_s_replicated": round(rep["tok_s"], 2),
         "speedup": round(ratio, 3),
+        "kv_bytes_per_stream": shard["kv_bytes_per_stream"],
         **_lat_fields(shard, "sharded_"),
     }})
 
@@ -584,6 +653,12 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--kv-layout", choices=("dense", "paged"),
                     default="dense")
+    ap.add_argument("--kv-dtype", choices=("f32", "int8"), default="f32",
+                    help="with --kv-layout paged: also run the int8 "
+                         "quantized pool and merge a 'quantized' section "
+                         "(footprint vs dense asserted <= 0.15, greedy "
+                         "parity vs the f32 paged run) into "
+                         "BENCH_serve.json")
     ap.add_argument("--mesh", default="",
                     help="mesh spec (e.g. 2x2): run sharded-vs-replicated "
                          "decode and merge a 'mesh' section into "
@@ -599,4 +674,4 @@ if __name__ == "__main__":
     elif ns.scheduler:
         main_scheduler(smoke=ns.smoke)
     else:
-        main(smoke=ns.smoke, kv_layout=ns.kv_layout)
+        main(smoke=ns.smoke, kv_layout=ns.kv_layout, kv_dtype=ns.kv_dtype)

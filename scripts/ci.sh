@@ -34,7 +34,11 @@
 # tracer / exporter contracts, span-vs-tick nesting, exactly-once
 # counters across retry + evacuation; re-run under the 8-device mesh)
 # plus a trace-artifact check: the Chrome trace_event file the serve
-# smoke emits (BENCH_serve_trace.json) must parse with valid ph/ts/dur.
+# smoke emits (BENCH_serve_trace.json) must parse with valid ph/ts/dur,
+# and (j) the quantized-KV gate: tests/test_quant_kv.py (block-quant
+# properties, q8 kernel vs oracle, f32-vs-int8 paged greedy parity with
+# bounded logit drift, int8-pool integrity recovery) plus the bench
+# --kv-dtype int8 quantized section (KV footprint <= 15% of dense).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -60,12 +64,22 @@ echo "== tier-1 pytest =="
 python -m pytest -x -q --ignore=tests/test_registry.py \
     --ignore=tests/test_paged.py --ignore=tests/test_partition.py \
     --ignore=tests/test_ft_serve.py --ignore=tests/test_scheduler.py \
-    --ignore=tests/test_integrity.py --ignore=tests/test_obs.py
+    --ignore=tests/test_integrity.py --ignore=tests/test_obs.py \
+    --ignore=tests/test_quant_kv.py
 
-echo "== serve fast-path smoke benchmark (dense + paged engines) =="
+echo "== quantized-KV gate =="
+# int8 paged-pool acceptance: block-quant math properties, q8 kernel ==
+# dequant oracle, per-arch f32-paged vs int8-paged greedy token parity
+# with bounded logit drift, integrity corrupt/quarantine/replay on the
+# int8 pool, and the dequant-counter / footprint-gauge obs wiring
+python -m pytest -q tests/test_quant_kv.py
+
+echo "== serve fast-path smoke benchmark (dense + paged + int8 engines) =="
 # --kv-layout paged adds the dense-vs-paged section and asserts the paged
-# KV footprint stays <= 50% of the dense slabs for the smoke workload
-python -m benchmarks.bench_serve --smoke --kv-layout paged
+# KV footprint stays <= 50% of the dense slabs for the smoke workload;
+# --kv-dtype int8 adds the quantized section (footprint <= 15% of dense,
+# >= 95% greedy-token match vs the f32 paged run)
+python -m benchmarks.bench_serve --smoke --kv-layout paged --kv-dtype int8
 
 echo "== train-step fast-path smoke benchmark =="
 python -m benchmarks.bench_step --smoke

@@ -127,6 +127,13 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, block_table, pos,
                                       block_table, pos, **kw)
 
 
+def paged_decode_attention_q8(q, k_pool, v_pool, k_scale, v_scale, pos_pool,
+                              block_table, pos, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _pa.paged_decode_attention_q8(q, k_pool, v_pool, k_scale, v_scale,
+                                         pos_pool, block_table, pos, **kw)
+
+
 def mlstm_scan(q, k, v, i_gate, f_log, *, chunk=256, **kw):
     kw.setdefault("interpret", _interpret())
     return _ml.mlstm_scan(q, k, v, i_gate, f_log, chunk=chunk, **kw)

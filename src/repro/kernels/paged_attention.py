@@ -21,6 +21,13 @@ into one [G, D] tile, as in the dense kernel.
 
 No sliding-window variant: SWA archs keep the dense ring buffer (the
 registry's ``supports_paged_decode`` excludes them).
+
+The quantized variant (:func:`paged_decode_attention_q8`) streams int8
+pools plus per-(block, kv-head) f32 scales ``[N, KV]`` and dequantizes
+each tile *in-loop* in VMEM — the scale rides the same block-table
+indirection as the K/V tiles, so full-precision KV never exists in HBM;
+it is reconstructed one [bs, D] tile at a time inside the online-softmax
+loop.
 """
 from __future__ import annotations
 
@@ -34,26 +41,16 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, scale: float):
-    """Grid (B, KV, M).  q_ref [G,D]; k_ref/v_ref [bs,D] (the pool block the
-    table's (b, j) entry selects); kvp_ref [bs]; tbl_ref/pos_ref are
-    scalar-prefetched; scratch m/l [G], acc [G,D]."""
-    b = pl.program_id(0)
-    j = pl.program_id(2)
-    nb = pl.num_programs(2)
-
+def _online_update(q, kb, vb, kv_pos, pos, o_ref, m_ref, l_ref, acc_ref,
+                   j, nb):
+    """One online-softmax step over a [bs, D] tile: init scratch at j == 0,
+    fold the tile into (m, l, acc), emit at j == nb - 1.  Shared by the f32
+    and int8 kernels — they differ only in how the tile is materialized."""
     @pl.when(j == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[...].astype(jnp.float32) * scale          # [G,D]
-    kb = k_ref[...].astype(jnp.float32)                 # [bs,D]
-    vb = v_ref[...].astype(jnp.float32)
-    kv_pos = kvp_ref[...]                               # [bs]
-    pos = pos_ref[b]
 
     s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())))  # [G,bs]
     valid = (kv_pos >= 0) & (kv_pos <= pos)
@@ -73,6 +70,41 @@ def _paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref,
         o_ref[...] = (acc_ref[...] /
                       jnp.maximum(l_ref[...], 1e-30)[:, None]
                       ).astype(o_ref.dtype)
+
+
+def _paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float):
+    """Grid (B, KV, M).  q_ref [G,D]; k_ref/v_ref [bs,D] (the pool block the
+    table's (b, j) entry selects); kvp_ref [bs]; tbl_ref/pos_ref are
+    scalar-prefetched; scratch m/l [G], acc [G,D]."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    q = q_ref[...].astype(jnp.float32) * scale          # [G,D]
+    kb = k_ref[...].astype(jnp.float32)                 # [bs,D]
+    vb = v_ref[...].astype(jnp.float32)
+    kv_pos = kvp_ref[...]                               # [bs]
+    _online_update(q, kb, vb, kv_pos, pos_ref[b],
+                   o_ref, m_ref, l_ref, acc_ref, j, nb)
+
+
+def _paged_q8_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                     kvp_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float):
+    """int8 variant: k_ref/v_ref are int8 [bs,D] tiles and ks_ref/vs_ref
+    the block's per-(block, kv-head) f32 scale (a [1] tile); dequant
+    happens here, in VMEM, inside the loop — HBM only ever holds the
+    quantized pool."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    q = q_ref[...].astype(jnp.float32) * scale                    # [G,D]
+    kb = k_ref[...].astype(jnp.float32) * ks_ref[0]               # [bs,D]
+    vb = v_ref[...].astype(jnp.float32) * vs_ref[0]
+    kv_pos = kvp_ref[...]                                         # [bs]
+    _online_update(q, kb, vb, kv_pos, pos_ref[b],
+                   o_ref, m_ref, l_ref, acc_ref, j, nb)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -118,4 +150,57 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
         interpret=interpret,
     )(block_table, pos, qg, k_pool, v_pool, pos_pool)
+    return out.reshape(B, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_q8(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, k_scale: jax.Array,
+                              v_scale: jax.Array, pos_pool: jax.Array,
+                              block_table: jax.Array, pos: jax.Array, *,
+                              interpret: bool = True) -> jax.Array:
+    """Quantized-pool decode: q [B,H,D]; k_pool/v_pool int8 [N,bs,KV,D];
+    k_scale/v_scale f32 [N,KV] (per-(block, kv-head) max-abs scales);
+    pos_pool [N,bs] int32 (-1 = empty); block_table [B,M] int32; pos [B]
+    int32 -> [B,H,D].  The scales ride the same block-table indirection
+    as the K/V tiles and dequant happens in-loop in VMEM."""
+    B, H, D = q.shape
+    bs, KV = k_pool.shape[1], k_pool.shape[2]
+    M = block_table.shape[1]
+    G = H // KV
+    scale = D ** -0.5
+
+    qg = q.reshape(B, KV, G, D)
+    kernel = functools.partial(_paged_q8_kernel, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # block_table, pos
+        grid=(B, KV, M),
+        in_specs=[
+            pl.BlockSpec((None, None, G, D),
+                         lambda b, h, j, tbl, pos: (b, h, 0, 0)),
+            pl.BlockSpec((None, bs, None, D),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((None, bs, None, D),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((None, 1),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], h)),
+            pl.BlockSpec((None, 1),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], h)),
+            pl.BlockSpec((None, bs),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, D),
+                               lambda b, h, j, tbl, pos: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_table, pos, qg, k_pool, v_pool, k_scale, v_scale, pos_pool)
     return out.reshape(B, H, D)

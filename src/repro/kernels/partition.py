@@ -404,6 +404,42 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                                       block_table, pos)
 
 
+def paged_decode_attention_q8(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, k_scale: jax.Array,
+                              v_scale: jax.Array, pos_pool: jax.Array,
+                              block_table: jax.Array,
+                              pos: jax.Array) -> jax.Array:
+    """Quantized paged decode with the same partitioning as
+    :func:`paged_decode_attention`: block-table rows [B] over the DP axes,
+    pooled KV heads over 'model' when they divide.  The f32 scale pools
+    [N,KV] shard their head axis alongside the int8 payload — each shard
+    dequantizes its own heads' tiles in-loop."""
+    rules = current_rules() or {}
+    mesh = _active_mesh(rules)
+    if mesh is not None:
+        part = _decode_partition(rules, mesh, q.shape[0], k_pool.shape[2])
+        if part is not None:
+            def body(q, k_pool, v_pool, k_scale, v_scale, pos_pool,
+                     block_table, pos):
+                out = _pa.paged_decode_attention_q8(
+                    q, k_pool, v_pool, k_scale, v_scale, pos_pool,
+                    block_table, pos, interpret=_interpret())
+                return _gather_heads(out, part)
+
+            b, m = part.batch_spec, part.model
+            return shard_map(
+                body, mesh=part.mesh,
+                in_specs=(P(b, m, None), P(None, None, m, None),
+                          P(None, None, m, None), P(None, m),
+                          P(None, m), P(None, None),
+                          P(b, None), P(b)),
+                out_specs=P(b, None, None), check_vma=False)(
+                q, k_pool, v_pool, k_scale, v_scale, pos_pool,
+                block_table, pos)
+    return ops.paged_decode_attention_q8(q, k_pool, v_pool, k_scale, v_scale,
+                                         pos_pool, block_table, pos)
+
+
 # ---------------------------------------------------------------------------
 # Report (Runtime.describe)
 # ---------------------------------------------------------------------------
@@ -437,7 +473,7 @@ def partition_report(cfg, plan, caps, knob: str = "auto") -> dict:
             why = "hierarchical_int8: kernels ride the per-pod vmap"
         return {k: f"replicated ({why})"
                 for k in ("flash_train", "fused_ffn", "flash_decode",
-                          "paged_decode")}
+                          "paged_decode", "paged_decode_q8")}
     heads_axis = plan.act_rules.get("heads_act")
     mlp_axis = plan.act_rules.get("mlp_act")
     tp_h = plan.mesh_axes.get(heads_axis, 1) if heads_axis else 1
@@ -459,4 +495,8 @@ def partition_report(cfg, plan, caps, knob: str = "auto") -> dict:
             row_desc,
             _axis_desc("kv_heads", cfg.num_kv_heads, heads_axis, tp_h)])
         if caps.supports_paged_decode else "n/a (capability)",
+        "paged_decode_q8": ", ".join([
+            row_desc,
+            _axis_desc("kv_heads", cfg.num_kv_heads, heads_axis, tp_h)])
+        if caps.supports_quantized_kv else "n/a (capability)",
     }

@@ -63,6 +63,29 @@ def ref_paged_decode_attention(q, k_pool, v_pool, pos_pool, block_table, pos):
     return ref_decode_attention(q, k, v, kv_pos, pos)
 
 
+def ref_paged_decode_attention_q8(q, k_pool, v_pool, k_scale, v_scale,
+                                  pos_pool, block_table, pos):
+    """Quantized-pool paged decode oracle: q [B,H,D]; k_pool/v_pool int8
+    [N,bs,H,D]; k_scale/v_scale f32 [N,H] (per-(block, head) scales);
+    pos_pool [N,bs] (-1 = empty); block_table [B,M]; pos [B] -> [B,H,D].
+
+    Gathers the int8 blocks *and* their scales, dequantizes (q * the
+    block's per-head scale, broadcast over the [bs, D] tile), and
+    delegates to the dense decode oracle — the reference for the
+    in-loop-dequant Pallas kernel."""
+    flat = block_table.reshape(-1)
+    B, M = block_table.shape
+    bs = k_pool.shape[1]
+    k = (k_pool[flat].astype(jnp.float32)
+         * k_scale[flat][:, None, :, None]).reshape(B, M * bs,
+                                                    *k_pool.shape[2:])
+    v = (v_pool[flat].astype(jnp.float32)
+         * v_scale[flat][:, None, :, None]).reshape(B, M * bs,
+                                                    *v_pool.shape[2:])
+    kv_pos = pos_pool[flat].reshape(B, M * bs)
+    return ref_decode_attention(q, k, v, kv_pos, pos)
+
+
 def ref_swiglu_ffn(x, w_gate, w_up, w_down):
     """x [N,D]; w_gate/w_up [D,F]; w_down [F,D] -> [N,D]."""
     g = x.astype(jnp.float32) @ w_gate.astype(jnp.float32)

@@ -52,6 +52,16 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--mesh", default="")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="serve KV layout: dense per-slot slabs or the "
+                         "pooled paged block caches (serve/blockpool.py; "
+                         "arch-gated by caps.supports_paged_decode)")
+    ap.add_argument("--kv-dtype", default="f32", choices=("f32", "int8"),
+                    help="paged pool storage: f32, or int8 blocks with "
+                         "per-(entry, kv-head) scales dequantized inside "
+                         "the decode kernel (requires --kv-layout paged; "
+                         "arch-gated by caps.supports_quantized_kv)")
     ap.add_argument("--no-preflight", action="store_true")
     ap.add_argument("--burn-in", action="store_true",
                     help="full qualification gate before serving: DDR-style "
@@ -98,6 +108,8 @@ def main(argv=None):
         sched_kw["chunk_size"] = args.chunk_size
     rt = Runtime.create(cfg, mesh, shape_kind="decode",
                         capacity=args.capacity,
+                        kv_layout=args.kv_layout,
+                        kv_dtype=args.kv_dtype,
                         scheduler=args.scheduler,
                         sched_kw=sched_kw or None)
     if args.trace_out:

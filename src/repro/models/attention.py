@@ -375,10 +375,49 @@ def attention_decode(x: jax.Array, params: dict, cfg: ModelConfig, *,
     return y, k_cache, v_cache, kv_positions
 
 
+def _quantized_block_write(pool, scale_pool, new, write_bids, off):
+    """Scatter ``new`` full-precision K/V entries into an int8 pool with
+    per-(block, kv-head) scales (kernels/quant.py max-abs convention).
+
+    ``new`` is S + (KV, Dh) with index arrays ``write_bids``/``off`` of
+    shape S ([B] for one-token decode, [B, C] for a prompt chunk).  An
+    offset-0 write lands in a *fresh* (recycled) block, so its stale scale
+    row is reset first — other writes redirect that reset at the TRASH
+    block (id 1), whose contents are unobservable.  A new entry whose
+    magnitude exceeds its block's scale *grows* the scale and requantizes
+    the block's existing int8 payload in place (ratio == 1 exactly for
+    untouched blocks, so their bits never move); entries within range
+    reuse the block scale untouched.  Full precision never lands in the
+    pool."""
+    new = new.astype(jnp.float32)
+    clear = jnp.where(off == 0, write_bids, jnp.ones_like(write_bids))
+    scale_pool = scale_pool.at[clear].set(0.0)
+    need = jnp.max(jnp.abs(new), axis=-1) / 127.0        # S + (KV,)
+    grown = scale_pool.at[write_bids].max(need)          # [N, KV]
+    ratio = scale_pool / jnp.where(grown > 0, grown, 1.0)
+    pool = jnp.round(pool.astype(jnp.float32)
+                     * ratio[:, None, :, None]).astype(jnp.int8)
+    dest = grown[write_bids]                             # S + (KV,)
+    q = jnp.clip(jnp.round(new / jnp.where(dest > 0, dest, 1.0)[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return pool.at[write_bids, off].set(q), grown
+
+
+def _dequantize_gather(pool, scale_pool, flat, dtype, shape):
+    """Materialize ``pool[flat]`` int8 blocks at full precision for the
+    reference gather path: per-(block, kv-head) scale broadcast over the
+    [bs, Dh] tile, cast back to the activation dtype so the attention math
+    keeps the same dtypes as the f32-pool path."""
+    deq = pool[flat].astype(jnp.float32) * scale_pool[flat][:, None, :, None]
+    return deq.astype(dtype).reshape(shape)
+
+
 def attention_decode_paged(x: jax.Array, params: dict, cfg: ModelConfig, *,
                            k_pool: jax.Array, v_pool: jax.Array,
                            pos_pool: jax.Array, block_table: jax.Array,
-                           write_bids: jax.Array, pos: jax.Array):
+                           write_bids: jax.Array, pos: jax.Array,
+                           k_scale_pool: Optional[jax.Array] = None,
+                           v_scale_pool: Optional[jax.Array] = None):
     """One-token decode against a *paged* KV pool.
 
     x [B,1,D]; pools [N,bs,KV,Dh] / pos_pool [N,bs] shared by every row;
@@ -396,12 +435,22 @@ def attention_decode_paged(x: jax.Array, params: dict, cfg: ModelConfig, *,
     dense layout, which is what makes dense and paged engines
     token-for-token comparable.
 
-    Returns (y [B,1,D], k_pool', v_pool', pos_pool').
+    Quantized pools: passing ``k_scale_pool``/``v_scale_pool`` f32 [N,KV]
+    marks the pools as int8 — the new token's K/V entry is quantized
+    against its block's per-(block, kv-head) scale (growing it and
+    requantizing the block when needed; :func:`_quantized_block_write`),
+    so full precision never lands in the pool, and the rule value
+    "paged_q8" selects the in-loop-dequant Pallas kernel (the reference
+    gather dequantizes instead).
+
+    Returns (y [B,1,D], k_pool', v_pool', pos_pool') — with the updated
+    scale pools appended when quantized.
     """
     H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     B = x.shape[0]
     bs = k_pool.shape[1]
     M = block_table.shape[1]
+    quantized = k_scale_pool is not None
 
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
     if cfg.qk_norm and "q_norm" in params:
@@ -421,27 +470,48 @@ def attention_decode_paged(x: jax.Array, params: dict, cfg: ModelConfig, *,
     # at block boundaries, and copy-on-write duplicates full blocks), and a
     # fresh block is recycled storage whose stale ``pos`` entries would
     # otherwise pass the positional mask as phantoms — clear the block's
-    # position row before writing into it.
+    # position row before writing into it.  (Quantized pools reset the
+    # block's stale *scale* the same way, inside _quantized_block_write.)
     prow = pos_pool[write_bids]                             # [B, bs]
     pos_pool = pos_pool.at[write_bids].set(
         jnp.where((off == 0)[:, None], -1, prow))
-    k_pool = k_pool.at[write_bids, off].set(k_new[:, 0])
-    v_pool = v_pool.at[write_bids, off].set(v_new[:, 0])
+    if quantized:
+        k_pool, k_scale_pool = _quantized_block_write(
+            k_pool, k_scale_pool, k_new[:, 0], write_bids, off)
+        v_pool, v_scale_pool = _quantized_block_write(
+            v_pool, v_scale_pool, v_new[:, 0], write_bids, off)
+    else:
+        k_pool = k_pool.at[write_bids, off].set(k_new[:, 0])
+        v_pool = v_pool.at[write_bids, off].set(v_new[:, 0])
     pos_pool = pos_pool.at[write_bids, off].set(pos)
 
     rules = current_rules() or {}
-    if (rules.get("decode_attn_impl") == "paged"
+    impl = rules.get("decode_attn_impl")
+    if (quantized and impl == "paged_q8" and paged_pallas_supported(cfg)):
+        from repro.kernels import partition as kernel_partition
+        out = kernel_partition.paged_decode_attention_q8(
+            q[:, 0], k_pool, v_pool, k_scale_pool, v_scale_pool, pos_pool,
+            block_table, pos)[:, None]
+    elif (not quantized and impl == "paged"
             and paged_pallas_supported(cfg)):
         from repro.kernels import partition as kernel_partition
         out = kernel_partition.paged_decode_attention(
             q[:, 0], k_pool, v_pool, pos_pool, block_table, pos)[:, None]
     else:
         flat = block_table.reshape(-1)
-        k = k_pool[flat].reshape(B, M * bs, KV, Dh)
-        v = v_pool[flat].reshape(B, M * bs, KV, Dh)
+        if quantized:
+            k = _dequantize_gather(k_pool, k_scale_pool, flat, x.dtype,
+                                   (B, M * bs, KV, Dh))
+            v = _dequantize_gather(v_pool, v_scale_pool, flat, x.dtype,
+                                   (B, M * bs, KV, Dh))
+        else:
+            k = k_pool[flat].reshape(B, M * bs, KV, Dh)
+            v = v_pool[flat].reshape(B, M * bs, KV, Dh)
         kvp = pos_pool[flat].reshape(B, M * bs)
         out = _jnp_decode_attend(q, k, v, kvp, pos, cfg)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    if quantized:
+        return y, k_pool, v_pool, pos_pool, k_scale_pool, v_scale_pool
     return y, k_pool, v_pool, pos_pool
 
 
@@ -517,7 +587,9 @@ def attention_chunk_append_paged(x: jax.Array, params: dict,
                                  pos_pool: jax.Array,
                                  block_table: jax.Array,
                                  write_bids: jax.Array,
-                                 positions: jax.Array):
+                                 positions: jax.Array,
+                                 k_scale_pool: Optional[jax.Array] = None,
+                                 v_scale_pool: Optional[jax.Array] = None):
     """Append a prompt chunk to a *paged* KV pool and attend.
 
     x [B,C,D]; pools [N,bs,KV,Dh] / pos_pool [N,bs]; block_table [B,M] the
@@ -528,12 +600,21 @@ def attention_chunk_append_paged(x: jax.Array, params: dict,
     at offset 0 of a fresh block first clears that block's position row
     (recycled storage — same contract as the one-token paged decode).
 
-    Returns (y [B,C,D], k_pool', v_pool', pos_pool').
+    Quantized pools (``k_scale_pool``/``v_scale_pool`` f32 [N,KV]): the
+    chunk's K/V are quantized against their destination blocks'
+    per-(block, kv-head) scales before the scatter (growing + in-place
+    requantization via :func:`_quantized_block_write`) and the
+    gather-attend dequantizes — same contract as
+    :func:`attention_decode_paged`.
+
+    Returns (y [B,C,D], k_pool', v_pool', pos_pool') — with the updated
+    scale pools appended when quantized.
     """
     B = x.shape[0]
     bs = k_pool.shape[1]
     M = block_table.shape[1]
     KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    quantized = k_scale_pool is not None
     q, k_new, v_new = _project_chunk_kv(x, params, cfg, positions)
 
     off = (positions % bs).astype(jnp.int32)                    # [B,C]
@@ -543,14 +624,28 @@ def attention_chunk_append_paged(x: jax.Array, params: dict,
     # there too (TRASH_BLOCK = 1, serve/blockpool.py)
     clear = jnp.where(off == 0, write_bids, jnp.ones_like(write_bids))
     pos_pool = pos_pool.at[clear].set(-1)
-    k_pool = k_pool.at[write_bids, off].set(k_new)
-    v_pool = v_pool.at[write_bids, off].set(v_new)
+    if quantized:
+        k_pool, k_scale_pool = _quantized_block_write(
+            k_pool, k_scale_pool, k_new, write_bids, off)
+        v_pool, v_scale_pool = _quantized_block_write(
+            v_pool, v_scale_pool, v_new, write_bids, off)
+    else:
+        k_pool = k_pool.at[write_bids, off].set(k_new)
+        v_pool = v_pool.at[write_bids, off].set(v_new)
     pos_pool = pos_pool.at[write_bids, off].set(positions)
 
     flat = block_table.reshape(-1)
-    k = k_pool[flat].reshape(B, M * bs, KV, Dh)
-    v = v_pool[flat].reshape(B, M * bs, KV, Dh)
+    if quantized:
+        k = _dequantize_gather(k_pool, k_scale_pool, flat, x.dtype,
+                               (B, M * bs, KV, Dh))
+        v = _dequantize_gather(v_pool, v_scale_pool, flat, x.dtype,
+                               (B, M * bs, KV, Dh))
+    else:
+        k = k_pool[flat].reshape(B, M * bs, KV, Dh)
+        v = v_pool[flat].reshape(B, M * bs, KV, Dh)
     kvp = pos_pool[flat].reshape(B, M * bs)
     out = _jnp_decode_attend(q, k, v, kvp, positions, cfg)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    if quantized:
+        return y, k_pool, v_pool, pos_pool, k_scale_pool, v_scale_pool
     return y, k_pool, v_pool, pos_pool

@@ -213,10 +213,19 @@ def block_decode(kind: str, x, p, cfg: ModelConfig, cache: dict, *,
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     if kind.startswith("attn"):
         if paged is not None:
-            a, kc, vc, kp = attention_decode_paged(
-                h, p["attn"], cfg, k_pool=cache["k"], v_pool=cache["v"],
-                pos_pool=cache["pos"], block_table=paged["block_table"],
-                write_bids=paged["write_bids"], pos=pos)
+            if "k_scale" in cache:      # int8 pool: scale leaves ride along
+                a, kc, vc, kp, ksc, vsc = attention_decode_paged(
+                    h, p["attn"], cfg, k_pool=cache["k"], v_pool=cache["v"],
+                    pos_pool=cache["pos"], block_table=paged["block_table"],
+                    write_bids=paged["write_bids"], pos=pos,
+                    k_scale_pool=cache["k_scale"],
+                    v_scale_pool=cache["v_scale"])
+                cache = dict(cache, k_scale=ksc, v_scale=vsc)
+            else:
+                a, kc, vc, kp = attention_decode_paged(
+                    h, p["attn"], cfg, k_pool=cache["k"], v_pool=cache["v"],
+                    pos_pool=cache["pos"], block_table=paged["block_table"],
+                    write_bids=paged["write_bids"], pos=pos)
         else:
             a, kc, vc, kp = attention_decode(
                 h, p["attn"], cfg, k_cache=cache["k"], v_cache=cache["v"],
@@ -308,10 +317,19 @@ def block_chunk(kind: str, x, p, cfg: ModelConfig, cache: dict, *,
             f"got block kind {kind!r}")
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     if paged is not None:
-        a, kc, vc, kp = attention_chunk_append_paged(
-            h, p["attn"], cfg, k_pool=cache["k"], v_pool=cache["v"],
-            pos_pool=cache["pos"], block_table=paged["block_table"],
-            write_bids=paged["write_bids"], positions=positions)
+        if "k_scale" in cache:          # int8 pool: scale leaves ride along
+            a, kc, vc, kp, ksc, vsc = attention_chunk_append_paged(
+                h, p["attn"], cfg, k_pool=cache["k"], v_pool=cache["v"],
+                pos_pool=cache["pos"], block_table=paged["block_table"],
+                write_bids=paged["write_bids"], positions=positions,
+                k_scale_pool=cache["k_scale"],
+                v_scale_pool=cache["v_scale"])
+            cache = dict(cache, k_scale=ksc, v_scale=vsc)
+        else:
+            a, kc, vc, kp = attention_chunk_append_paged(
+                h, p["attn"], cfg, k_pool=cache["k"], v_pool=cache["v"],
+                pos_pool=cache["pos"], block_table=paged["block_table"],
+                write_bids=paged["write_bids"], positions=positions)
     else:
         a, kc, vc, kp = attention_chunk_append(
             h, p["attn"], cfg, k_cache=cache["k"], v_cache=cache["v"],

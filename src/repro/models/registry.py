@@ -74,6 +74,7 @@ class Capabilities:
     supports_fused_ffn: bool     # Pallas fused SwiGLU (dense FFN) expressible
     supports_paged_decode: bool  # pooled block-table KV layout expressible
     supports_chunked_prefill: bool = False  # scheduler chunk-append step
+    supports_quantized_kv: bool = False     # int8 paged pool + in-loop dequant
     num_heads: int = 0           # q heads (post-GQA-repeat kernel head count)
     num_kv_heads: int = 0        # grouped KV heads (decode-cache head axis)
     ffn_columns: int = 0         # dense d_ff (fused-FFN column axis)
@@ -103,7 +104,8 @@ class Capabilities:
                           "subquadratic", "supports_flash_decode",
                           "supports_flash_train", "supports_fused_ffn",
                           "supports_paged_decode",
-                          "supports_chunked_prefill")
+                          "supports_chunked_prefill",
+                          "supports_quantized_kv")
               if getattr(self, n)]
         return ",".join(on) or "-"
 
@@ -172,6 +174,15 @@ class ModelFamily:
             # in-chunk scan — both stay on monolithic admission.
             supports_chunked_prefill=(
                 self.chunk_prefill is not None
+                and cfg.sliding_window is None
+                and all(k.startswith("attn") and k != "attn_cross"
+                        for g in cfg.groups for k in g.pattern)),
+            # int8 quantized pools share paged's structural law exactly: the
+            # scale leaves ride the same cache pytree and both the Pallas
+            # q8 kernel and the dequantizing ref gather cover every
+            # paged-capable arch (softcap included, via the ref path).
+            supports_quantized_kv=(
+                self.paged_decode_step is not None
                 and cfg.sliding_window is None
                 and all(k.startswith("attn") and k != "attn_cross"
                         for g in cfg.groups for k in g.pattern)),

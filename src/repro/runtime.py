@@ -54,6 +54,7 @@ class Runtime:
                  family: registry.ModelFamily, mesh, plan: Plan, specs,
                  seq_len: int, capacity: int, attn_impl: str,
                  ffn_impl: str = "auto", kv_layout: str = "dense",
+                 kv_dtype: str = "f32",
                  partition: str = "auto", scheduler: bool = False,
                  sched_kw=None,
                  param_dtype=jnp.float32, seed: int = 0, params=None,
@@ -70,6 +71,7 @@ class Runtime:
         self.attn_impl = attn_impl          # requested; resolution is lazy
         self.ffn_impl = ffn_impl            # requested; resolution is lazy
         self.kv_layout = kv_layout          # serve KV layout: dense | paged
+        self.kv_dtype = kv_dtype            # paged pool storage: f32 | int8
         self.partition = partition          # shard_map kernel dispatch knob
         self.scheduler = scheduler          # chunked-prefill serve scheduler
         self.sched_kw = dict(sched_kw or {})  # token_budget/chunk_size/...
@@ -90,6 +92,7 @@ class Runtime:
                seq_len: Optional[int] = None, capacity: Optional[int] = None,
                grad_sync: str = "hierarchical", attn_impl: str = "auto",
                ffn_impl: str = "auto", kv_layout: str = "dense",
+               kv_dtype: str = "f32",
                partition: str = "auto", scheduler: bool = False,
                sched_kw: Optional[dict] = None,
                param_dtype=jnp.float32, seed: int = 0, params=None,
@@ -106,6 +109,10 @@ class Runtime:
         each other, else 128).  ``kv_layout`` picks the serve-engine KV
         layout: "dense" per-slot slabs, or "paged" pooled block caches
         (arch-gated by ``caps.supports_paged_decode``; fails fast here).
+        ``kv_dtype`` picks the paged pool's storage: "f32" full precision,
+        or "int8" quantized blocks with per-(entry, kv-head) scales and
+        in-kernel dequant decode (requires ``kv_layout="paged"`` and
+        ``caps.supports_quantized_kv``; fails fast here).
         ``partition`` ("auto" | "off") controls the shard_map kernel
         dispatch (kernels.partition): "auto" runs each Pallas kernel on
         head-/column-/row-sharded operands when the mesh axes divide,
@@ -148,6 +155,18 @@ class Runtime:
             raise ValueError(
                 f"arch {cfg.name!r} does not support the paged KV layout "
                 f"(caps: {family.capabilities(cfg).summary})")
+        if kv_dtype not in ("f32", "int8"):
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}; "
+                             f"valid choices: f32, int8")
+        if kv_dtype == "int8":
+            if kv_layout != "paged":
+                raise ValueError(
+                    "kv_dtype='int8' requires kv_layout='paged' (the dense "
+                    "slab cache has no quantized layout)")
+            if not family.capabilities(cfg).supports_quantized_kv:
+                raise ValueError(
+                    f"arch {cfg.name!r} does not support the quantized KV "
+                    f"pool (caps: {family.capabilities(cfg).summary})")
         if scheduler and \
                 not family.capabilities(cfg).supports_chunked_prefill:
             raise ValueError(
@@ -161,6 +180,7 @@ class Runtime:
                    specs=family.specs(cfg), seq_len=seq_len,
                    capacity=capacity, attn_impl=attn_impl,
                    ffn_impl=ffn_impl, kv_layout=kv_layout,
+                   kv_dtype=kv_dtype,
                    partition=partition, scheduler=scheduler,
                    sched_kw=sched_kw,
                    param_dtype=param_dtype, seed=seed, params=params,
@@ -175,6 +195,7 @@ class Runtime:
                 attn_impl: Optional[str] = None,
                 ffn_impl: Optional[str] = None,
                 kv_layout: Optional[str] = None,
+                kv_dtype: Optional[str] = None,
                 partition: Optional[str] = None,
                 scheduler: Optional[bool] = None,
                 sched_kw: Optional[dict] = None,
@@ -204,6 +225,7 @@ class Runtime:
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
             ffn_impl=ffn_impl if ffn_impl is not None else self.ffn_impl,
             kv_layout=kv_layout if kv_layout is not None else self.kv_layout,
+            kv_dtype=kv_dtype if kv_dtype is not None else self.kv_dtype,
             partition=partition if partition is not None else self.partition,
             scheduler=scheduler if scheduler is not None else self.scheduler,
             sched_kw={**self.sched_kw, **(sched_kw or {})},
@@ -312,11 +334,13 @@ class Runtime:
             advance_pos=advance_pos, partition=self.partition)
 
     def make_paged_decode_step(self, *,
-                               attn_impl: Optional[str] = None) -> Callable:
+                               attn_impl: Optional[str] = None,
+                               kv_dtype: Optional[str] = None) -> Callable:
         return serve_steps.make_paged_decode_step(
             self.cfg, self.plan, self.mesh,
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
-            partition=self.partition)
+            partition=self.partition,
+            kv_dtype=kv_dtype if kv_dtype is not None else self.kv_dtype)
 
     def make_mixed_step(self, *, attn_impl: Optional[str] = None) -> Callable:
         """Scheduler mixed step (decode tick + one prefill chunk), dense
@@ -327,13 +351,15 @@ class Runtime:
             partition=self.partition)
 
     def make_paged_mixed_step(self, *,
-                              attn_impl: Optional[str] = None) -> Callable:
+                              attn_impl: Optional[str] = None,
+                              kv_dtype: Optional[str] = None) -> Callable:
         """Scheduler mixed step, paged KV layout — see
         serve/steps.make_paged_mixed_step."""
         return serve_steps.make_paged_mixed_step(
             self.cfg, self.plan, self.mesh,
             attn_impl=attn_impl if attn_impl is not None else self.attn_impl,
-            partition=self.partition)
+            partition=self.partition,
+            kv_dtype=kv_dtype if kv_dtype is not None else self.kv_dtype)
 
     # -- compiled executables ----------------------------------------------
 
@@ -457,10 +483,12 @@ class Runtime:
     def engine(self, *, num_slots: int = 4, capacity: Optional[int] = None,
                max_admit: Optional[int] = None,
                attn_impl: Optional[str] = None, donate: bool = True,
-               params=None, kv_layout: Optional[str] = None, **engine_kw):
+               params=None, kv_layout: Optional[str] = None,
+               kv_dtype: Optional[str] = None, **engine_kw):
         """A continuous-batching ServeEngine over this Runtime.
 
-        ``kv_layout`` defaults to the Runtime's own knob; ``engine_kw``
+        ``kv_layout`` and ``kv_dtype`` default to the Runtime's own knobs;
+        ``engine_kw``
         forwards the paged-pool sizing (``block_size``, ``num_blocks``,
         ``max_blocks_per_seq``, ``admit_window``), the scheduler knobs
         (``scheduler``, ``token_budget``, ``chunk_size``,
@@ -472,7 +500,32 @@ class Runtime:
         return ServeEngine(self, num_slots=num_slots, capacity=capacity,
                            max_admit=max_admit, attn_impl=attn_impl,
                            donate=donate, params=params,
-                           kv_layout=kv_layout, **engine_kw)
+                           kv_layout=kv_layout, kv_dtype=kv_dtype,
+                           **engine_kw)
+
+    def kv_bytes_per_stream(self, kv_dtype: Optional[str] = None, *,
+                            block_size: int = 16) -> int:
+        """Per-stream KV byte budget at ``capacity`` under this Runtime's
+        serve layout: attention layers × 2 (K+V) × capacity × KV × Dh ×
+        itemsize, plus the two f32 per-(block, kv-head) scale pools
+        (amortized over ``block_size`` — the engine's default) under
+        ``kv_dtype="int8"``.  Exact for the dense slab; for paged pools it
+        is the per-entry cost × capacity (block-granularity rounding and
+        prefix sharing move the realized number — the engine's
+        ``kv_cache_bytes()`` reports that)."""
+        kv_dtype = kv_dtype if kv_dtype is not None else self.kv_dtype
+        cfg = self.cfg
+        attn_layers = sum(
+            g.repeats * sum(1 for k in g.pattern
+                            if k.startswith("attn") and k != "attn_cross")
+            for g in cfg.groups)
+        itemsize = 1 if kv_dtype == "int8" else jnp.dtype(cfg.dtype).itemsize
+        per_entry = 2 * cfg.num_kv_heads * cfg.head_dim * itemsize
+        total = attn_layers * self.capacity * per_entry
+        if kv_dtype == "int8":           # f32 per-(block, kv-head) scales
+            blocks = -(-self.capacity // block_size)
+            total += attn_layers * blocks * 2 * cfg.num_kv_heads * 4
+        return total
 
     # -- qualification ------------------------------------------------------
 
@@ -500,7 +553,8 @@ class Runtime:
         """The decode-attention backend the serve path will actually use
         (env override + capability fallback + kv_layout applied now)."""
         return serve_steps.resolve_decode_attn_impl(
-            self.attn_impl, self.cfg, kv_layout=self.kv_layout)
+            self.attn_impl, self.cfg, kv_layout=self.kv_layout,
+            kv_dtype=self.kv_dtype)
 
     @property
     def train_attn_impl(self) -> str:
@@ -579,7 +633,8 @@ class Runtime:
             f"flash_decode_ok={self.caps.supports_flash_decode} "
             f"paged_decode_ok={self.caps.supports_paged_decode}",
             f"  serve     : capacity={self.capacity} "
-            f"kv_layout={self.kv_layout} "
+            f"kv_layout={self.kv_layout} kv_dtype={self.kv_dtype} "
+            f"kv_bytes/stream={self.kv_bytes_per_stream():,} "
             f"swa_bucketing={'exact' if self.caps.swa else 'pow2'} "
             + ("scheduler[" + ", ".join(
                    f"{k}={v}" for k, v in sorted(self.sched_kw.items()))

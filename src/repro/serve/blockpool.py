@@ -429,15 +429,32 @@ class BlockPool:
 # ---------------------------------------------------------------------------
 
 
+KV_DTYPES = ("f32", "int8")
+
+
 def init_paged_cache(cfg: ModelConfig, num_blocks: int,
-                     block_size: int) -> list:
+                     block_size: int, kv_dtype: str = "f32") -> list:
     """Pooled zero cache, one pytree per layer group (mirrors
     ``kvcache.init_cache``'s structure so the decode scans thread it the
     same way): every attention sub-layer holds
     ``k``/``v`` [repeats, num_blocks, block_size, KV, Dh] and
     ``pos`` [repeats, num_blocks, block_size] (-1 = empty).  Only
-    attention-family stacks are paged (``supports_paged_decode``)."""
+    attention-family stacks are paged (``supports_paged_decode``).
+
+    ``kv_dtype="int8"`` stores K/V quantized: the ``k``/``v`` pools become
+    int8 and each sub-layer gains ``k_scale``/``v_scale`` f32
+    [repeats, num_blocks, KV] — one max-abs scale per (pool block,
+    kv-head), written by the same splice/append scatters as the payload
+    (a growing block requantizes in place, models/attention.py).  The
+    scale leaves ride the cache pytree, so copy-on-write
+    (:func:`copy_blocks`), region clearing and the integrity
+    fingerprint/scrub machinery (ft/integrity.py) cover them with no
+    special cases."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}; valid choices: "
+                         f"{', '.join(KV_DTYPES)}")
     KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    pool_dtype = jnp.int8 if kv_dtype == "int8" else cfg.dtype
     caches = []
     for g in cfg.groups:
         per = {}
@@ -446,14 +463,62 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
                 raise ValueError(
                     f"paged KV cache only supports self-attention stacks; "
                     f"got block kind {kind!r}")
-            per[f"sub{j}"] = {
-                "k": jnp.zeros((num_blocks, block_size, KV, Dh), cfg.dtype),
-                "v": jnp.zeros((num_blocks, block_size, KV, Dh), cfg.dtype),
+            sub = {
+                "k": jnp.zeros((num_blocks, block_size, KV, Dh), pool_dtype),
+                "v": jnp.zeros((num_blocks, block_size, KV, Dh), pool_dtype),
                 "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
             }
+            if kv_dtype == "int8":
+                sub["k_scale"] = jnp.zeros((num_blocks, KV), jnp.float32)
+                sub["v_scale"] = jnp.zeros((num_blocks, KV), jnp.float32)
+            per[f"sub{j}"] = sub
         caches.append(jax.tree.map(
             lambda a: jnp.broadcast_to(a, (g.repeats,) + a.shape), per))
     return caches
+
+
+def cache_kv_dtype(caches: list) -> str:
+    """The ``kv_dtype`` a pooled cache pytree was built with."""
+    sub = next(iter(caches[0].values()))
+    return "int8" if "k_scale" in sub else "f32"
+
+
+def quantize_paged_part(part: list, block_size: int, nb: int) -> list:
+    """Quantize a capacity-padded f32 prefill-cache pytree into the int8 +
+    scales layout of a ``kv_dtype="int8"`` pool: per (bucket block column,
+    kv-head) max-abs over the whole [block_size, Dh] tile — the kernels/
+    quant.py block-quant math at pool-block granularity — so
+    :func:`paged_splice` can scatter it column-for-column.  Payload leaves
+    come back padded to ``nb * block_size`` entries; scale leaves are
+    [R, Bp, nb, KV].  Quantize-on-write: this runs inside the jitted
+    splice, and the f32 part is dead after it — full-precision KV never
+    lands in the pool."""
+    def quant(x):                                 # [R, Bp, T, KV, Dh]
+        x = x.astype(jnp.float32)[:, :, :nb * block_size]
+        short = nb * block_size - x.shape[2]
+        if short > 0:          # capacity not block-aligned: zero-pad tail
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, short)
+            x = jnp.pad(x, pad)
+        R, Bp = x.shape[:2]
+        KV, Dh = x.shape[3], x.shape[4]
+        x = x.reshape(R, Bp, nb, block_size, KV, Dh)
+        scale = jnp.max(jnp.abs(x), axis=(3, 5)) / 127.0   # [R, Bp, nb, KV]
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(x / safe[:, :, :, None, :, None]),
+                     -127, 127).astype(jnp.int8)
+        return q.reshape(R, Bp, nb * block_size, KV, Dh), scale
+
+    out = []
+    for grp in part:
+        per = {}
+        for name, sub in grp.items():
+            qk, ks = quant(sub["k"])
+            qv, vs = quant(sub["v"])
+            per[name] = {"k": qk, "v": qv, "k_scale": ks, "v_scale": vs,
+                         "pos": sub["pos"]}
+        out.append(per)
+    return out
 
 
 def paged_splice(caches: list, part: list, dst: jax.Array) -> list:
@@ -473,11 +538,20 @@ def paged_splice(caches: list, part: list, dst: jax.Array) -> list:
     ``caches`` — the paged analog of ``kvcache.splice_slots``'s donated
     ``dynamic_update_slice`` pattern.  Real destinations are unique (the
     allocator hands each block to one row), so duplicate indices only ever
-    collide on trash."""
+    collide on trash.
+
+    Quantized pools: when ``caches`` carries ``k_scale``/``v_scale`` leaves
+    and ``part`` is still the f32 prefill layout, the part is quantized
+    here (:func:`quantize_paged_part`) before the column-wise scatter —
+    the per-block scale rows land through the same ``dst`` plan as the
+    payload."""
     nb = dst.shape[1]
+    bs = next(iter(caches[0].values()))["k"].shape[2]
+    if cache_kv_dtype(caches) == "int8" and \
+            "k_scale" not in next(iter(part[0].values())):
+        part = quantize_paged_part(part, bs, nb)
 
     def one(pool, p):
-        bs = pool.shape[2]
         p = p.astype(pool.dtype)
         short = nb * bs - p.shape[2]
         if short > 0:          # capacity not block-aligned: pad the tail
@@ -490,7 +564,23 @@ def paged_splice(caches: list, part: list, dst: jax.Array) -> list:
             pool = pool.at[:, dst[:, j]].set(col)    # [R, Bp, bs, ...]
         return pool
 
-    return jax.tree.map(one, caches, part)
+    def one_scale(pool, p):    # pool [R, N, KV]; p [R, Bp, nb, KV]
+        for j in range(nb):
+            pool = pool.at[:, dst[:, j]].set(p[:, :, j])
+        return pool
+
+    out = []
+    for grp_c, grp_p in zip(caches, part):
+        per = {}
+        for name in grp_c:
+            sub_c, sub_p = grp_c[name], grp_p[name]
+            per[name] = {
+                leaf: (one_scale(sub_c[leaf], sub_p[leaf])
+                       if leaf.endswith("_scale")
+                       else one(sub_c[leaf], sub_p[leaf]))
+                for leaf in sub_c}
+        out.append(per)
+    return out
 
 
 def copy_blocks(caches: list, src: jax.Array, dst: jax.Array) -> list:

@@ -369,6 +369,7 @@ class ServeEngine:
                  max_admit: Optional[int] = None,
                  attn_impl: Optional[str] = None, donate: bool = True,
                  params=None, kv_layout: Optional[str] = None,
+                 kv_dtype: Optional[str] = None,
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  max_blocks_per_seq: Optional[int] = None,
@@ -423,6 +424,26 @@ class ServeEngine:
                 "silently ignore them)")
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
+        # quantized paged pool: int8 blocks + per-(entry, kv-head) scales,
+        # dequantized inside the decode kernel (full-precision KV never
+        # exists in HBM after admission)
+        kv_dtype = (kv_dtype if kv_dtype is not None
+                    else getattr(rt, "kv_dtype", "f32"))
+        if kv_dtype not in ("f32", "int8"):
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}; "
+                             f"valid choices: f32, int8")
+        if kv_dtype == "int8":
+            if not self.paged:
+                raise ValueError(
+                    "kv_dtype='int8' requires kv_layout='paged' (the dense "
+                    "slab cache has no quantized layout)")
+            if not self.caps.supports_quantized_kv:
+                raise ValueError(
+                    f"arch {rt.cfg.name!r} does not support the quantized "
+                    f"KV pool (caps: {self.caps.summary}); use "
+                    f"kv_dtype='f32'")
+        self.kv_dtype = kv_dtype
+        self.quantized = kv_dtype == "int8"
         # chunked-prefill scheduler (serve/scheduler.py): knobs default to
         # the Runtime's scheduler/sched_kw so Runtime.create(scheduler=True)
         # flows through engine() untouched
@@ -528,6 +549,18 @@ class ServeEngine:
         self._c_events = reg.counter(
             "serve_ft_events_total", "structured fault-handling events",
             labels=("event",))
+        # quantized-KV observability: pool footprint vs what the same
+        # entries would cost at full precision, and the cumulative count of
+        # pool blocks the decode kernels dequantized in-loop
+        self._g_kv_bytes = reg.gauge(
+            "blockpool_kv_pool_bytes",
+            "bytes of KV pool storage as allocated (incl. scale pools)")
+        self._g_kv_f32_bytes = reg.gauge(
+            "blockpool_kv_pool_f32_equiv_bytes",
+            "bytes the same KV pool entries would cost at full precision")
+        self._c_dequant = reg.counter(
+            "serve_kv_dequant_blocks_total",
+            "pool blocks dequantized in-loop by decode dispatches")
 
     def _build_data_path(self):
         """(Re)build everything derived from the Runtime: jitted
@@ -564,14 +597,17 @@ class ServeEngine:
             self.pool = blockpool.BlockPool(nblocks, bs, self.num_slots, M,
                                             max_entries=self.capacity,
                                             registry=self.obs.registry)
-            self.caches = blockpool.init_paged_cache(self.cfg, nblocks, bs)
-            decode = rt.make_paged_decode_step(attn_impl=self._attn_impl)
+            self.caches = blockpool.init_paged_cache(self.cfg, nblocks, bs,
+                                                     kv_dtype=self.kv_dtype)
+            decode = rt.make_paged_decode_step(attn_impl=self._attn_impl,
+                                               kv_dtype=self.kv_dtype)
             self._decode = rt._bind_mesh(jax.jit(decode, **donate_kw))
             self._splice = jax.jit(_install_admitted_paged, **splice_kw)
             self._copy = jax.jit(blockpool.copy_blocks, **splice_kw)
             if self.scheduler:
                 self._mixed = rt._bind_mesh(jax.jit(
-                    rt.make_paged_mixed_step(attn_impl=self._attn_impl),
+                    rt.make_paged_mixed_step(attn_impl=self._attn_impl,
+                                             kv_dtype=self.kv_dtype),
                     **donate_kw))
         else:
             self.pool = None
@@ -585,6 +621,10 @@ class ServeEngine:
                 self._mixed = rt._bind_mesh(jax.jit(
                     rt.make_mixed_step(attn_impl=self._attn_impl),
                     **donate_kw))
+        # footprint gauges: allocation-static per build (the pool is sized
+        # up front), so one sync here covers the engine's lifetime
+        self._g_kv_bytes.set(self.kv_cache_bytes())
+        self._g_kv_f32_bytes.set(self.kv_cache_f32_equiv_bytes())
         # slot state: host-side bookkeeping + device-resident hot-loop state
         self.slot_req: list[Optional[Request]] = [None] * self.num_slots
         # Diagnostic host mirror of per-request progress (next absolute pos,
@@ -884,9 +924,17 @@ class ServeEngine:
             # inactive slots (their junk writes stay unobservable)
             bids = np.empty(self.num_slots, np.int32)
             copies = []
+            dequant_blocks = 0
             for s in range(self.num_slots):
-                bids[s], cp = self.pool.write_plan(s, self._decoding(s))
+                active = self._decoding(s)
+                bids[s], cp = self.pool.write_plan(s, active)
                 copies.extend(cp)
+                if active:
+                    dequant_blocks += int(self.pool.seq_blocks[s])
+            if self.quantized and dequant_blocks:
+                # every active slot's chain is streamed through the
+                # in-loop dequant this tick
+                self._c_dequant.inc(dequant_blocks)
             if self.scrub_every:
                 # corruption propagates through a block copy: the scrub
                 # condemns a bad source's descendants along this log
@@ -1272,7 +1320,11 @@ class ServeEngine:
         j = int(rng.integers(len(leaves)))
         leaf = leaves[j]
         shape = leaf.shape                     # [R, region, entry, ...]
-        mi = (int(rng.integers(shape[0])), r, int(rng.integers(cnt)),
+        # entry axis is the block offset for payload/pos leaves but the
+        # kv-head for the int8 pool's [R, N, KV] scale leaves — bound the
+        # coordinate by both so the flip stays inside the sealed span
+        mi = (int(rng.integers(shape[0])), r,
+              int(rng.integers(min(cnt, shape[2]))),
               *(int(rng.integers(d)) for d in shape[3:]))
         flat = int(np.ravel_multi_index(mi, shape))
         bit = int(rng.integers(ft_integrity.bit_width(leaf.dtype)))
@@ -1360,6 +1412,14 @@ class ServeEngine:
                 for col in range(nb):
                     bid = int(pool.table[s, col])
                     cnt = min(max(entries - col * bs, 0), bs)
+                    # int8 pool: a partially-filled block is still
+                    # mutable below its write cursor — a later append can
+                    # grow the per-(block, kv-head) scale and requantize
+                    # the already-written entries in place.  Only a FULL
+                    # block's bits are immutable, so only full blocks
+                    # seal (the open tail is covered once it fills).
+                    if self.quantized and cnt < bs:
+                        continue
                     counts[bid] = max(counts.get(bid, 0), cnt)
             for bid in pool._key_of:
                 if int(pool.refcount[bid]) == 0:
@@ -1649,6 +1709,7 @@ class ServeEngine:
                              "prefill_calls", "evacuations", "tick_retries",
                              "health_checks")},
             meta={"arch": self.cfg.name, "kv_layout": self.kv_layout,
+                  "kv_dtype": self.kv_dtype,
                   "capacity": self.capacity, "num_slots": self.num_slots,
                   "scheduler": bool(self.scheduler),
                   "tick": self._tick_no})
@@ -1710,13 +1771,27 @@ class ServeEngine:
 
     def kv_cache_bytes(self) -> int:
         """Bytes of attention K/V storage (dense per-slot slabs or the
-        paged pool) — the footprint BENCH_serve.json tracks for the
-        dense-vs-paged comparison."""
+        paged pool, including any int8 scale pools) — the footprint
+        BENCH_serve.json tracks for the dense / paged / paged-int8
+        comparison."""
+        total = 0
+        for gc in self.caches:
+            for sub in gc.values():
+                for name in ("k", "v", "xk", "xv", "k_scale", "v_scale"):
+                    if name in sub:
+                        a = sub[name]
+                        total += a.size * a.dtype.itemsize
+        return total
+
+    def kv_cache_f32_equiv_bytes(self) -> int:
+        """Bytes the same K/V entries would occupy at full precision (no
+        scale pools) — the denominator behind the quantized-pool footprint
+        gauge pair.  Equals :meth:`kv_cache_bytes` for f32 engines."""
+        itemsize = jnp.dtype(self.cfg.dtype).itemsize
         total = 0
         for gc in self.caches:
             for sub in gc.values():
                 for name in ("k", "v", "xk", "xv"):
                     if name in sub:
-                        a = sub[name]
-                        total += a.size * a.dtype.itemsize
+                        total += sub[name].size * itemsize
         return total

@@ -52,24 +52,28 @@ def temperature_sample(logits: jax.Array, key: jax.Array,
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
-DECODE_ATTN_CHOICES = ("auto", "pallas", "ref", "paged")
+DECODE_ATTN_CHOICES = ("auto", "pallas", "ref", "paged", "paged_q8")
 
 
 def resolve_decode_attn_impl(impl: str, cfg: ModelConfig,
-                             kv_layout: str = "dense") -> str:
+                             kv_layout: str = "dense",
+                             kv_dtype: str = "f32") -> str:
     """Serve decode-attention backend policy.
 
     "auto" -> the layout's Pallas kernel on TPU-capable backends ("pallas"
-    for the dense cache, "paged" for the pooled block-table layout), "ref"
-    elsewhere.  Explicit choices are honored as-is (CPU Pallas runs in
-    interpret mode — the numerics-validation path); "pallas" under
-    ``kv_layout="paged"`` means the layout's native kernel, i.e. "paged".
-    ``REPRO_DECODE_ATTN`` overrides everything; unknown values fail fast
-    instead of silently selecting a fallback (the shared ``kernels.ops``
-    policy), and "paged" with a dense layout is a contradiction that also
-    fails fast.  Archs whose registry capabilities rule the kernel out
-    (``supports_flash_decode`` is False, e.g. logit softcap — neither
-    Pallas decode kernel has a softcap variant) resolve to "ref"; per-layer
+    for the dense cache, "paged" for the pooled block-table layout,
+    "paged_q8" for the int8 pooled layout), "ref" elsewhere.  Explicit
+    choices are honored as-is (CPU Pallas runs in interpret mode — the
+    numerics-validation path); "pallas" under ``kv_layout="paged"`` means
+    the layout's native kernel, i.e. "paged" (or "paged_q8" when
+    ``kv_dtype="int8"``).  ``REPRO_DECODE_ATTN`` overrides everything;
+    unknown values fail fast instead of silently selecting a fallback (the
+    shared ``kernels.ops`` policy), and layout/dtype contradictions —
+    "paged" with a dense layout, "paged_q8" without an int8 pool, "paged"
+    with one — also fail fast.  Archs whose registry capabilities rule the
+    kernel out (``supports_flash_decode`` is False, e.g. logit softcap —
+    no Pallas decode kernel has a softcap variant) resolve to "ref" (the
+    gather path carries softcap and, under int8, dequantizes); per-layer
     shape eligibility is still re-checked at trace time
     (models.attention.pallas_decode_supported /
     models.attention.paged_pallas_supported)."""
@@ -78,15 +82,21 @@ def resolve_decode_attn_impl(impl: str, cfg: ModelConfig,
                          "decode-attention")
     caps = capabilities(cfg)
     if kv_layout == "paged":
+        native = "paged_q8" if kv_dtype == "int8" else "paged"
         if impl == "pallas":
-            impl = "paged"
-        if impl == "paged" and not caps.supports_flash_decode:
+            impl = native
+        if impl in ("paged", "paged_q8") and impl != native:
+            raise ValueError(
+                f"decode-attention impl {impl!r} contradicts "
+                f"kv_dtype={kv_dtype!r} (the int8 pool's native kernel is "
+                f"'paged_q8', the f32 pool's is 'paged')")
+        if impl == native and not caps.supports_flash_decode:
             impl = "ref"         # ref gather carries softcap; kernel doesn't
     else:
-        if impl == "paged":
+        if impl in ("paged", "paged_q8"):
             raise ValueError(
-                "decode-attention impl 'paged' requires kv_layout='paged' "
-                "(dense-cache engines choose between 'pallas' and 'ref')")
+                f"decode-attention impl {impl!r} requires kv_layout='paged' "
+                f"(dense-cache engines choose between 'pallas' and 'ref')")
         if impl == "pallas" and not caps.supports_flash_decode:
             impl = "ref"
     return impl
@@ -166,7 +176,8 @@ def make_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
 
 def make_paged_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
                            attn_impl: str = "auto",
-                           partition: str = "auto") -> Callable:
+                           partition: str = "auto",
+                           kv_dtype: str = "f32") -> Callable:
     """(params, token [B,1], caches, pos [B], block_table [B,M],
     write_bids [B]) -> (next [B,1], caches, pos+1).
 
@@ -175,12 +186,14 @@ def make_paged_decode_step(cfg: ModelConfig, plan: Plan, mesh, *,
     ``block_table`` names each slot's pool blocks and ``write_bids`` is the
     engine's per-tick write plan (the pool block this token's K/V lands in;
     TRASH for inactive slots).  Always advances positions — the engine's
-    device-resident hot loop is the only consumer.
+    device-resident hot loop is the only consumer.  ``kv_dtype="int8"``
+    expects the quantized pool layout (caches carry scale leaves) and
+    resolves the impl to the in-loop-dequant kernel.
     """
     rules = dict(plan.act_rules)
     rules["mesh"] = mesh
-    rules["decode_attn_impl"] = resolve_decode_attn_impl(attn_impl, cfg,
-                                                         kv_layout="paged")
+    rules["decode_attn_impl"] = resolve_decode_attn_impl(
+        attn_impl, cfg, kv_layout="paged", kv_dtype=kv_dtype)
     rules["kernel_partition"] = partition
 
     def decode(params, token, caches, pos, block_table, write_bids):
@@ -241,7 +254,8 @@ def make_mixed_step(cfg: ModelConfig, plan: Plan, mesh, *,
 
 def make_paged_mixed_step(cfg: ModelConfig, plan: Plan, mesh, *,
                           attn_impl: str = "auto",
-                          partition: str = "auto") -> Callable:
+                          partition: str = "auto",
+                          kv_dtype: str = "f32") -> Callable:
     """Paged-layout mixed step (decode tick + one prefill chunk).
 
     (params, token [N,1], caches, pos [N], block_table [N,M],
@@ -260,8 +274,8 @@ def make_paged_mixed_step(cfg: ModelConfig, plan: Plan, mesh, *,
     """
     rules = dict(plan.act_rules)
     rules["mesh"] = mesh
-    rules["decode_attn_impl"] = resolve_decode_attn_impl(attn_impl, cfg,
-                                                         kv_layout="paged")
+    rules["decode_attn_impl"] = resolve_decode_attn_impl(
+        attn_impl, cfg, kv_layout="paged", kv_dtype=kv_dtype)
     rules["kernel_partition"] = partition
 
     def mixed(params, token, caches, pos, block_table, write_bids,

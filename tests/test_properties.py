@@ -184,3 +184,55 @@ def test_any_single_bit_flip_detected_in_checkpoint_payload(n_words, data):
     byte = data.draw(st.integers(0, len(blob) - 1))
     blob[byte] ^= 1 << data.draw(st.integers(0, 7))
     assert zlib.crc32(bytes(blob)) != crc
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(1, 33), st.data())
+def test_kv_block_quant_roundtrip_half_step(rows, d, data):
+    """∀x: the paged-pool block-quant math (kernels/quant.py pure-jnp
+    form) round-trips within half a quantization step per row, all-zero
+    rows map to scale 0 with a finite (zero) round-trip, and every
+    nonzero row saturates its max-abs element to ±127 exactly."""
+    from repro.kernels.quant import block_dequant, block_quant
+    x = data.draw(arrays(np.float32, (rows, d),
+                         elements=st.floats(-1e3, 1e3, width=32)))
+    if rows > 1 and data.draw(st.booleans()):
+        x[0] = 0.0                       # force an all-zero block
+    q, s = block_quant(jnp.asarray(x))
+    q, s = np.asarray(q, np.int32), np.asarray(s)
+    back = np.asarray(block_dequant(jnp.asarray(q, jnp.int8),
+                                    jnp.asarray(s)))
+    assert np.all(np.isfinite(back))
+    assert np.all(np.abs(back - x) <= s[:, None] / 2 + 1e-6 * (1 + s[:, None]))
+    zero = np.all(x == 0, axis=1)
+    assert np.all(s[zero] == 0) and np.all(q[zero] == 0)
+    assert np.all(np.abs(q) <= 127)
+    for r in np.flatnonzero(~zero):      # ±127 saturation at the max
+        assert np.max(np.abs(q[r])) == 127
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 3), st.integers(2, 6), st.integers(1, 20), st.data())
+def test_kv_quantize_paged_part_tails(nb, bs, T, data):
+    """∀ capacity/block geometries (T not a multiple of bs included): the
+    pool write-path quantizer pads short tails with zero codes, truncates
+    capacity overhang, and round-trips real entries within half a step of
+    the per-(block, kv-head) scale."""
+    from repro.serve.blockpool import quantize_paged_part
+    KV, Dh = 2, 3
+    x = data.draw(arrays(np.float32, (1, 2, T, KV, Dh),
+                         elements=st.floats(-100, 100, width=32)))
+    part = [{"sub0": {"k": jnp.asarray(x), "v": jnp.asarray(x),
+                      "pos": jnp.zeros((1, 2, T), jnp.int32)}}]
+    sub = quantize_paged_part(part, bs, nb)[0]["sub0"]
+    assert sub["k"].shape == (1, 2, nb * bs, KV, Dh)
+    assert sub["k_scale"].shape == (1, 2, nb, KV)
+    qk = np.asarray(sub["k"], np.float32).reshape(1, 2, nb, bs, KV, Dh)
+    ks = np.asarray(sub["k_scale"])
+    back = (qk * ks[..., None, :, None]).reshape(1, 2, nb * bs, KV, Dh)
+    n = min(T, nb * bs)
+    step = np.repeat(ks, bs, axis=2)[..., None]
+    assert np.all(np.abs(back[:, :, :n] - x[:, :, :n])
+                  <= step[:, :, :n] / 2 + 1e-5 * (1 + step[:, :, :n]))
+    if T < nb * bs:
+        assert np.all(np.asarray(sub["k"])[:, :, T:] == 0)
